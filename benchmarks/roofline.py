@@ -1,0 +1,43 @@
+"""§Roofline — render the per-(arch x shape x mesh) roofline table from the
+cached dry-run artifacts (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def rows() -> List[str]:
+    out = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            out.append(f"{name},0,skipped")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{name},0,FAILED")
+            continue
+        if r.get("kind") == "transfer":
+            cb = r["collective_bytes"]["collective-permute"]
+            out.append(f"{name},0,permute_bytes={cb}")
+            continue
+        rf = r["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: rf[k])
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        frac = rf[dom] / total if total else 0.0
+        useful = rf.get("useful_ratio")
+        out.append(
+            f"{name},{rf[dom]*1e6:.0f},"
+            f"bottleneck={rf['bottleneck']};compute_s={rf['compute_s']:.4f}"
+            f";memory_s={rf['memory_s']:.4f};collective_s={rf['collective_s']:.4f}"
+            f";useful_ratio={useful if useful is None else round(useful, 3)}"
+            f";resident_GB={r['resident_bytes_per_device']/2**30:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

@@ -1,0 +1,68 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+    table3  benchmarks/transfer_latency.py   KV transfer latency + call counts
+    table1  benchmarks/throughput.py         8B throughput grid (sim)
+    table2  benchmarks/throughput.py         70B throughput grid (sim, TP=4)
+    fig4    benchmarks/heterogeneous.py      L20/H20 placement E2E
+    fig1    benchmarks/time_breakdown.py     single-request time split
+    fig5    benchmarks/allocator_bench.py    allocator contiguity/alignment
+    roof    benchmarks/roofline.py           dry-run roofline table
+
+``python -m benchmarks.run [--full] [--only table3,fig4,...]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full RPS grids (paper-complete, slower)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,roof")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(tag: str) -> bool:
+        return only is None or tag in only
+
+    print("name,us_per_call,derived")
+    t_start = time.time()
+
+    if want("table3"):
+        from benchmarks import transfer_latency
+        for r in transfer_latency.rows():
+            print(r)
+    if want("fig1"):
+        from benchmarks import time_breakdown
+        for r in time_breakdown.rows():
+            print(r)
+    if want("fig5"):
+        from benchmarks import allocator_bench
+        for r in allocator_bench.rows():
+            print(r)
+    if want("table1"):
+        from benchmarks import throughput
+        for r in throughput.rows(full=args.full):
+            print(r)
+    if want("table2"):
+        from benchmarks import throughput
+        for r in throughput.rows_70b(full=args.full):
+            print(r)
+    if want("fig4"):
+        from benchmarks import heterogeneous
+        for r in heterogeneous.rows():
+            print(r)
+    if want("roof"):
+        from benchmarks import roofline
+        for r in roofline.rows():
+            print(r)
+    print(f"# total_wall_s={time.time()-t_start:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

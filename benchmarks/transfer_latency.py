@@ -1,0 +1,88 @@
+"""Table 3 — KV-cache transfer latency vs context length.
+
+Exact call counts come from the real ``TransferPlanner`` over the real
+allocators; latency from the Table-3-calibrated transport profiles.
+Also reports the TPU-target (ICI/DCN) columns — the port's predicted
+transfer latencies — and wall-clock µs/call of the planner itself.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import get_config
+from repro.core.costmodel import (IPC, MOONCAKE_RDMA, NCCL_ENI, NCCL_INTRA,
+                                  TPU_DCN, TPU_ICI, VLLM_MERGE_ENI,
+                                  VLLM_MERGE_INTRA)
+from repro.core.layout import KVCacheSpec
+from repro.core.transfer import TransferPlanner
+
+PAPER_SINGLE = {  # input_tokens -> (mooncake, vllm_disagg, flowkv_layerwise, flowkv)
+    500: (0.3010, 0.1179, 0.0678, 0.0044),
+    1000: (0.5416, 0.2314, 0.1309, 0.0075),
+    2000: (1.0335, 0.3435, 0.2565, 0.0126),
+    4000: (1.3473, 0.6670, 0.5338, 0.0236),
+    8000: (2.0289, 1.3382, 1.1173, 0.0447),
+    10000: (None, 1.7373, 1.4121, 0.0555),
+    12000: (None, 2.1894, 1.7218, 0.0681),
+}
+PAPER_MULTI = {
+    500: (0.3418, 0.1197, 0.1176, 0.0080),
+    1000: (0.5820, 0.1914, 0.3262, 0.0136),
+    2000: (0.8180, 0.3444, 0.4324, 0.0260),
+    4000: (1.4342, 0.6681, 0.8668, 0.0519),
+    8000: (2.1250, 1.3462, 1.6711, 0.0993),
+    10000: (None, 1.7425, 2.0719, 0.1500),
+    12000: (None, 2.1974, 2.4965, 0.1759),
+}
+
+
+def rows(arch: str = "llama31-8b") -> List[str]:
+    cfg = get_config(arch)
+    spec = KVCacheSpec(num_layers=cfg.num_layers, num_blocks=8192,
+                       block_size=cfg.block_size, num_kv_heads=cfg.num_kv_heads,
+                       head_dim=cfg.head_dim, dtype=cfg.dtype)
+    planner = TransferPlanner(spec)
+    out = []
+    for setup, paper in (("single", PAPER_SINGLE), ("multi", PAPER_MULTI)):
+        for tokens, ref in paper.items():
+            n = spec.blocks_for_tokens(tokens)
+            ids = list(range(n))
+            t0 = time.perf_counter()
+            plan_fk = planner.plan_flowkv(ids, ids)
+            plan_us = (time.perf_counter() - t0) * 1e6
+            plan_lw = planner.plan_layerwise(ids, ids)
+            plan_bw = planner.plan_blockwise(ids, ids)
+            if setup == "single":
+                lat_fk = plan_fk.latency(IPC)
+                lat_lw = plan_lw.latency(NCCL_INTRA)
+                lat_bw = plan_bw.latency(VLLM_MERGE_INTRA)
+                lat_mc = plan_bw.latency(MOONCAKE_RDMA)
+                lat_tpu = plan_fk.latency(TPU_ICI)
+            else:
+                lat_fk = plan_fk.latency(NCCL_ENI)
+                lat_lw = plan_lw.latency(NCCL_ENI)
+                lat_bw = plan_bw.latency(VLLM_MERGE_ENI)
+                lat_mc = plan_bw.latency(MOONCAKE_RDMA)
+                lat_tpu = plan_fk.latency(TPU_DCN)
+            speedup = lat_lw / lat_fk
+            pref = f"table3/{setup}/{tokens}"
+            out.append(f"{pref}/flowkv,{lat_fk*1e6:.1f},paper={ref[3]}")
+            out.append(f"{pref}/flowkv_layerwise,{lat_lw*1e6:.1f},paper={ref[2]}")
+            out.append(f"{pref}/vllm_disagg,{lat_bw*1e6:.1f},paper={ref[1]}")
+            out.append(f"{pref}/mooncake,{lat_mc*1e6:.1f},paper={ref[0]}")
+            out.append(f"{pref}/flowkv_tpu,{lat_tpu*1e6:.1f},speedup_vs_layerwise={speedup:.1f}x")
+            out.append(f"{pref}/planner_wallclock,{plan_us:.1f},calls={plan_fk.num_calls}")
+    # headline: calls per request at ~11.7k ctx (paper: 23,469 -> 1)
+    n = spec.blocks_for_tokens(11700)
+    ids = list(range(n))
+    lw = planner.plan_layerwise(ids, ids)
+    fk = planner.plan_flowkv(ids, ids)
+    out.append(f"table3/calls_per_request/layerwise,{lw.num_calls},paper=23469")
+    out.append(f"table3/calls_per_request/flowkv,{fk.num_calls},paper=1")
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

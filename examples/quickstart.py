@@ -1,0 +1,51 @@
+"""Quickstart: FlowKV end-to-end in ~40 lines.
+
+Builds a small model, serves a batch of requests through the disaggregated
+cluster (prefill node -> FlowKV page transfer -> decode node), and verifies
+the output is token-identical to monolithic generation.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.serving.cluster import PDCluster
+from repro.serving.request import Request, SamplingParams
+
+
+def main():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (12, 25, 33)]
+
+    # 1P + 1D cluster with FlowKV transfer
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=128, transfer_schedule="flowkv")
+    reqs = [Request(prompt_tokens=p, sampling=SamplingParams(max_new_tokens=8))
+            for p in prompts]
+    done = cluster.run(reqs, max_cycles=100)
+
+    # verify against monolithic generation
+    for r in done:
+        ref = T.greedy_generate(params, cfg,
+                                jnp.asarray([r.prompt_tokens], jnp.int32), 8)
+        assert r.output_tokens == [int(x) for x in ref[0]], "token mismatch!"
+        print(f"req {r.request_id}: P->D transfer ok, tokens {r.output_tokens}")
+
+    s = cluster.stats()
+    print(f"\nFlowKV transfers: {s['transfers']} "
+          f"(avg {s['mean_transfer_calls']:.1f} call(s)/request, "
+          f"est {s['mean_transfer_s']*1e3:.2f} ms on TPU ICI)")
+    print("disaggregated output == monolithic output: OK")
+
+
+if __name__ == "__main__":
+    main()

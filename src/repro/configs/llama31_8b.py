@@ -1,0 +1,22 @@
+"""llama31-8b — the paper's own measurement model (Meta-Llama-3.1-8B-Instruct):
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256."""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+ARCH_ID = "llama31-8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, head_dim=128, d_ff=14336,
+        vocab_size=128256, rope_theta=500000.0, dtype=jnp.bfloat16,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=128, dtype=jnp.float32,
+    )

@@ -1,0 +1,92 @@
+"""Control-plane block manager: request -> physical block ids.
+
+One per node, shared between that node's prefill and decode schedulers (the
+paper's hybrid scheduler "share[s] a block manager"). The data-plane pool
+(the device array holding pages) lives in ``serving/kv_cache.py`` and is
+indexed by the ids handed out here.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.allocator import OutOfBlocksError, make_allocator
+from repro.core.segments import blocks_to_segments, fragmentation
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int, allocator: str = "flowkv"):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.allocator = make_allocator(allocator, num_blocks)
+        self._table: Dict[int, List[int]] = {}   # request_id -> block ids (ordered)
+
+    # -- capacity ---------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return self.allocator.num_free
+
+    @property
+    def utilization(self) -> float:
+        """KV_u in the paper's load vector."""
+        return 1.0 - self.allocator.num_free / self.num_blocks
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.block_size)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.blocks_needed(num_tokens) <= self.allocator.num_free
+
+    # -- request ops --------------------------------------------------------------
+    def allocate(self, request_id: int, num_tokens: int) -> List[int]:
+        if request_id in self._table:
+            raise ValueError(f"request {request_id} already has blocks")
+        blocks = self.allocator.allocate(self.blocks_needed(num_tokens))
+        self._table[request_id] = blocks
+        return blocks
+
+    def register(self, request_id: int, num_tokens: int) -> List[int]:
+        """Allocate space on a *destination* node ahead of a KV transfer."""
+        return self.allocate(request_id, num_tokens)
+
+    def append_token(self, request_id: int, total_tokens: int) -> Optional[int]:
+        """Ensure capacity for one more token; returns a new block id if grown."""
+        blocks = self._table[request_id]
+        needed = self.blocks_needed(total_tokens)
+        if needed <= len(blocks):
+            return None
+        assert needed == len(blocks) + 1, "decode grows one block at a time"
+        new = self.allocator.extend(blocks, 1)
+        blocks.extend(new)
+        return new[0]
+
+    def free(self, request_id: int) -> None:
+        blocks = self._table.pop(request_id, None)
+        if blocks:
+            self.allocator.free(blocks)
+
+    def get(self, request_id: int) -> List[int]:
+        return list(self._table[request_id])
+
+    def owns(self, request_id: int) -> bool:
+        return request_id in self._table
+
+    # -- diagnostics -----------------------------------------------------------------
+    def request_fragmentation(self, request_id: int) -> float:
+        return fragmentation(blocks_to_segments(self._table[request_id]))
+
+    def mean_fragmentation(self) -> float:
+        if not self._table:
+            return 0.0
+        return sum(self.request_fragmentation(r) for r in self._table) / len(self._table)
+
+    def check_invariants(self) -> None:
+        self.allocator.check_invariants()
+        seen: set[int] = set()
+        for rid, blocks in self._table.items():
+            bs = set(blocks)
+            assert len(bs) == len(blocks), f"duplicate blocks for request {rid}"
+            assert not (bs & seen), f"block shared across requests (request {rid})"
+            seen |= bs
+
+
+__all__ = ["BlockManager", "OutOfBlocksError"]

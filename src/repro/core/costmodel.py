@@ -1,0 +1,143 @@
+"""Transfer cost models, calibrated against the paper's Table 3.
+
+The quantity FlowKV optimizes is::
+
+    latency = num_calls * per_call_overhead + bytes / bandwidth + fixed
+
+``num_calls`` comes from the transfer planner (exact, not modeled); the
+constants below are calibrated so the Table-3 grid reproduces within a few
+percent (see ``benchmarks/transfer_latency.py`` and
+``tests/test_costmodel.py``).
+
+Calibration notes (Llama-3.1-8B: L=32, kv=8, hd=128, bf16, block=32 tokens,
+so 128 KiB/token and ~23.5k layerwise calls at 11.7k ctx — matching the
+paper's 23,469):
+
+* ``nccl``        — per-call ~73 µs: FlowKV-Layerwise single-machine 12k ctx
+                    = 1.72 s at 23.5k calls.
+* ``ipc``         — ~23 GB/s: FlowKV single-machine 12k ctx = 0.068 s for
+                    1.57 GB.
+* ``nccl_eni``    — ~9 GB/s cross-machine: FlowKV multi-machine 12k = 0.176 s.
+* ``vllm_merge``  — vLLM-Disagg's layer-buffer merge path: effective
+                    ~0.75 GB/s (merge memcpy + per-layer calls), matching
+                    2.19 s at 12k.
+* ``mooncake``    — RDMA path without NIC-direct VRAM exchange: ~0.5 GB/s
+                    effective plus high setup, matching 2.03 s at 8k.
+
+TPU-side profiles (the *target* hardware) use the system constants:
+ICI ~50 GB/s/link, DCN modeled at 25 GB/s/host, per-DMA-descriptor
+dispatch ~8 µs. These drive the TPU columns of the benchmark and the
+serving simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportProfile:
+    """latency(calls, bytes) = calls*per_call + bytes/bandwidth + fixed."""
+
+    name: str
+    per_call_s: float          # per contiguous-range call (kernel/descriptor)
+    bandwidth_Bps: float       # steady-state bandwidth for merged payloads
+    fixed_s: float = 0.0       # handshake / metadata exchange
+    per_byte_extra_s: float = 0.0  # extra per-byte work (e.g. merge memcpy)
+
+    def latency(self, num_calls: int, num_bytes: int) -> float:
+        return (
+            self.fixed_s
+            + num_calls * self.per_call_s
+            + num_bytes / self.bandwidth_Bps
+            + num_bytes * self.per_byte_extra_s
+        )
+
+
+# --- GPU-world profiles (paper's measurement environment) --------------------
+NCCL_INTRA = TransportProfile(  # NCCL over NVLink, same machine
+    name="nccl",
+    per_call_s=73e-6,
+    bandwidth_Bps=23e9,
+    fixed_s=4e-4,
+)
+NCCL_ENI = TransportProfile(  # NCCL over Elastic Network Interface, cross machine
+    name="nccl_eni",
+    per_call_s=105e-6,
+    bandwidth_Bps=9.2e9,
+    fixed_s=1.5e-3,
+)
+IPC = TransportProfile(  # cudaIpc same-machine peer copy
+    name="ipc",
+    per_call_s=12e-6,
+    bandwidth_Bps=23.5e9,
+    fixed_s=2e-4,
+)
+VLLM_MERGE_INTRA = TransportProfile(  # vLLM-disagg: merge layer buffers, then send
+    name="vllm_merge",
+    per_call_s=73e-6,           # one NCCL call per layer buffer (2L calls)
+    bandwidth_Bps=23e9,
+    fixed_s=5e-4,
+    per_byte_extra_s=1.0 / 0.80e9,  # small-chunk merge memcpy, effective ~0.8 GB/s
+)
+VLLM_MERGE_ENI = TransportProfile(
+    name="vllm_merge_eni",
+    per_call_s=105e-6,
+    bandwidth_Bps=9.2e9,
+    fixed_s=1.5e-3,
+    per_byte_extra_s=1.0 / 0.85e9,
+)
+MOONCAKE_RDMA = TransportProfile(  # RDMA without NIC-direct VRAM exchange
+    name="mooncake_rdma",
+    per_call_s=30e-6,
+    bandwidth_Bps=0.53e9,
+    fixed_s=2.5e-2,
+)
+
+# --- TPU-world profiles (the port target) ------------------------------------
+TPU_ICI = TransportProfile(  # same-pod, over ICI links
+    name="tpu_ici",
+    per_call_s=8e-6,           # DMA descriptor dispatch
+    bandwidth_Bps=50e9,        # per-link ICI (system constant)
+    fixed_s=5e-5,
+)
+TPU_DCN = TransportProfile(  # cross-pod, over data-center network
+    name="tpu_dcn",
+    per_call_s=20e-6,
+    bandwidth_Bps=25e9,
+    fixed_s=5e-4,
+)
+
+PROFILES: Dict[str, TransportProfile] = {
+    p.name: p
+    for p in (
+        NCCL_INTRA,
+        NCCL_ENI,
+        IPC,
+        VLLM_MERGE_INTRA,
+        VLLM_MERGE_ENI,
+        MOONCAKE_RDMA,
+        TPU_ICI,
+        TPU_DCN,
+    )
+}
+
+
+def get_profile(name: str) -> TransportProfile:
+    try:
+        return PROFILES[name]
+    except KeyError as e:
+        raise ValueError(f"unknown transport profile {name!r}; have {sorted(PROFILES)}") from e
+
+
+def select_route(same_host: bool, target: str = "gpu") -> TransportProfile:
+    """FlowKV §3.2: 'selects the best transfer pipeline based on hardware'.
+
+    GPU world: IPC inside a machine, NCCL across. TPU world: ICI inside a
+    pod, DCN across pods.
+    """
+    if target == "gpu":
+        return IPC if same_host else NCCL_ENI
+    if target == "tpu":
+        return TPU_ICI if same_host else TPU_DCN
+    raise ValueError(f"unknown target {target!r}")

@@ -1,0 +1,162 @@
+"""KV-cache layouts and the FlowKV layout transform (paper Eq. 5).
+
+The baseline (vLLM/PagedAttention) keys the cache by layer::
+
+    VLLM layout:   K,V : (L, 2, B, H)
+
+so the unit of contiguity is *one layer's half (K or V) of one block* — a
+request spanning ``n`` blocks needs ``L * 2 * n`` contiguous-range transfers.
+
+FlowKV transposes block to the major axis::
+
+    FLOWKV layout: K,V : (B, L, 2, H)
+
+making *one block* carry K and V for *all* layers contiguously, so the same
+request needs only ``n`` transfers before alignment (and ideally 1 after).
+
+``H`` here is the flattened per-(layer, k/v, block) payload:
+``block_size * num_kv_heads * head_dim``.
+
+Everything in this module is data-plane: the arrays are real ``jnp`` arrays
+(tiny in tests, ShapeDtypeStructs in the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVLayout(enum.Enum):
+    VLLM = "vllm"        # (L, 2, B, H)  — layer-major baseline
+    FLOWKV = "flowkv"    # (B, L, 2, H)  — block-major, paper Eq. 5
+
+    @property
+    def block_axis(self) -> int:
+        return 2 if self is KVLayout.VLLM else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Static description of one node's paged KV pool."""
+
+    num_layers: int
+    num_blocks: int
+    block_size: int          # tokens per block
+    num_kv_heads: int
+    head_dim: int
+    dtype: jnp.dtype = jnp.bfloat16
+    layout: KVLayout = KVLayout.FLOWKV
+
+    @property
+    def payload(self) -> int:
+        """H — elements per (layer, k/v, block)."""
+        return self.block_size * self.num_kv_heads * self.head_dim
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.layout is KVLayout.VLLM:
+            return (self.num_layers, 2, self.num_blocks, self.payload)
+        return (self.num_blocks, self.num_layers, 2, self.payload)
+
+    @property
+    def bytes_per_block(self) -> int:
+        """Bytes moved when one block (all layers, K+V) is transferred."""
+        return self.num_layers * 2 * self.payload * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def bytes_per_token(self) -> int:
+        return self.bytes_per_block // self.block_size
+
+    @property
+    def total_bytes(self) -> int:
+        return self.num_blocks * self.bytes_per_block
+
+    def blocks_for_tokens(self, num_tokens: int) -> int:
+        return max(1, math.ceil(num_tokens / self.block_size))
+
+    def with_layout(self, layout: KVLayout) -> "KVCacheSpec":
+        return dataclasses.replace(self, layout=layout)
+
+    def transfer_calls_per_block(self) -> int:
+        """Contiguous-range transfer calls needed to move ONE block.
+
+        This is the paper's core observation: the vLLM layout pays L*2 calls
+        per block; FlowKV pays 1.
+        """
+        return self.num_layers * 2 if self.layout is KVLayout.VLLM else 1
+
+    def page_view_shape(self) -> Tuple[int, int, int, int]:
+        """Per-block unflattened page shape (block_size, kv_heads, head_dim) x (L,2)."""
+        return (self.num_layers, 2, self.block_size, self.num_kv_heads * self.head_dim)
+
+
+def alloc_cache(spec: KVCacheSpec) -> jax.Array:
+    return jnp.zeros(spec.shape, dtype=spec.dtype)
+
+
+def vllm_to_flowkv(cache: jax.Array) -> jax.Array:
+    """(L, 2, B, H) -> (B, L, 2, H)."""
+    return jnp.transpose(cache, (2, 0, 1, 3))
+
+
+def flowkv_to_vllm(cache: jax.Array) -> jax.Array:
+    """(B, L, 2, H) -> (L, 2, B, H)."""
+    return jnp.transpose(cache, (1, 2, 0, 3))
+
+
+def convert(cache: jax.Array, src: KVLayout, dst: KVLayout) -> jax.Array:
+    if src is dst:
+        return cache
+    if src is KVLayout.VLLM and dst is KVLayout.FLOWKV:
+        return vllm_to_flowkv(cache)
+    return flowkv_to_vllm(cache)
+
+
+def write_block(cache: jax.Array, spec: KVCacheSpec, block_id, layer: int,
+                k_page: jax.Array, v_page: jax.Array) -> jax.Array:
+    """Write one (layer, block) K/V page. Pages are (block_size, kv*hd) flats."""
+    k_flat = k_page.reshape(-1).astype(spec.dtype)
+    v_flat = v_page.reshape(-1).astype(spec.dtype)
+    if spec.layout is KVLayout.FLOWKV:
+        cache = cache.at[block_id, layer, 0].set(k_flat)
+        cache = cache.at[block_id, layer, 1].set(v_flat)
+    else:
+        cache = cache.at[layer, 0, block_id].set(k_flat)
+        cache = cache.at[layer, 1, block_id].set(v_flat)
+    return cache
+
+
+def read_block(cache: jax.Array, spec: KVCacheSpec, block_id, layer: int) -> Tuple[jax.Array, jax.Array]:
+    """Read one (layer, block) K/V page back as (block_size, kv_heads, head_dim)."""
+    shape = (spec.block_size, spec.num_kv_heads, spec.head_dim)
+    if spec.layout is KVLayout.FLOWKV:
+        k = cache[block_id, layer, 0]
+        v = cache[block_id, layer, 1]
+    else:
+        k = cache[layer, 0, block_id]
+        v = cache[layer, 1, block_id]
+    return k.reshape(shape), v.reshape(shape)
+
+
+def gather_blocks(cache: jax.Array, spec: KVCacheSpec, block_ids) -> jax.Array:
+    """Gather whole blocks (all layers, K+V) — the unit FlowKV transfers.
+
+    Returns (n, L, 2, H) regardless of source layout.
+    """
+    idx = jnp.asarray(block_ids, dtype=jnp.int32)
+    if spec.layout is KVLayout.FLOWKV:
+        return jnp.take(cache, idx, axis=0)
+    return jnp.transpose(jnp.take(cache, idx, axis=2), (2, 0, 1, 3))
+
+
+def scatter_blocks(cache: jax.Array, spec: KVCacheSpec, block_ids, payload: jax.Array) -> jax.Array:
+    """Scatter (n, L, 2, H) payload into the destination pool's blocks."""
+    idx = jnp.asarray(block_ids, dtype=jnp.int32)
+    if spec.layout is KVLayout.FLOWKV:
+        return cache.at[idx].set(payload.astype(cache.dtype))
+    return cache.at[:, :, idx, :].set(jnp.transpose(payload, (1, 2, 0, 3)).astype(cache.dtype))

@@ -1,0 +1,249 @@
+"""Global controller: regime detection, routing, role switching, elastic
+scaling, and the fault path (paper §3.4, Alg. 1, App. B).
+
+The controller is deliberately runtime-agnostic: it sees nodes through
+:class:`NodeHandle` (role, topology coordinates, hardware, and the node's
+:class:`HybridScheduler`), so the same controller drives the real CPU-scale
+cluster (``serving/cluster.py``) and the discrete-event simulator
+(``sim/cluster_sim.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import TransportProfile, select_route
+from repro.core.scheduler.hybrid_scheduler import HybridScheduler
+from repro.core.scheduler.load_score import (Thresholds, classify_regime,
+                                             cluster_scores, node_score)
+from repro.core.scheduler.metrics import NodeStatus, normalize
+from repro.serving.prefix_cache import PrefixCacheIndex
+from repro.serving.request import Request
+from repro.sim.hardware import HardwareProfile
+
+
+@dataclasses.dataclass
+class NodeHandle:
+    node_id: int
+    role: str                      # "prefill" | "decode"
+    host_id: int                   # GPU world: machine; TPU world: pod
+    hardware: HardwareProfile
+    scheduler: HybridScheduler
+    alive: bool = True
+    last_heartbeat: float = 0.0
+    # Temporary role override (imbalanced regime role switch).
+    switched_until_cycle: int = -1
+
+
+@dataclasses.dataclass
+class ModelCost:
+    """Per-token cost constants the controller uses for its estimates."""
+
+    flops_per_token: float          # prefill FLOPs per prompt token (~2N)
+    kv_bytes_per_token: float       # KV cache bytes per token (all layers)
+    weight_bytes: float             # bytes read per decode step (weights)
+
+
+@dataclasses.dataclass
+class ControllerEvent:
+    cycle: int
+    kind: str                       # "role_switch" | "scale_up" | "scale_down" | "failover" | "regime"
+    detail: str
+
+
+class GlobalController:
+    def __init__(self, model_cost: ModelCost, block_size: int,
+                 thresholds: Optional[Thresholds] = None,
+                 target: str = "gpu",
+                 heartbeat_timeout: float = 10.0,
+                 role_switch_cycles: int = 4,
+                 node_factory: Optional[Callable[[str], NodeHandle]] = None):
+        self.model_cost = model_cost
+        self.thresholds = thresholds or Thresholds()
+        self.target = target
+        self.heartbeat_timeout = heartbeat_timeout
+        self.role_switch_cycles = role_switch_cycles
+        self.node_factory = node_factory   # elastic scale-up hook
+        self.nodes: Dict[int, NodeHandle] = {}
+        self.prefix_index = PrefixCacheIndex(block_size)
+        self.cycle = 0
+        self.regime = "normal"
+        self._extreme_streak = 0
+        self._low_streak = 0
+        self.events: List[ControllerEvent] = []
+        self.retry_queue: List[Request] = []
+
+    # -- membership ---------------------------------------------------------------
+    def register_node(self, node: NodeHandle) -> None:
+        self.nodes[node.node_id] = node
+
+    def prefill_nodes(self) -> List[NodeHandle]:
+        return [n for n in self.nodes.values() if n.alive and n.role == "prefill"]
+
+    def decode_nodes(self) -> List[NodeHandle]:
+        return [n for n in self.nodes.values() if n.alive and n.role == "decode"]
+
+    # -- heartbeat / fault tolerance ---------------------------------------------------
+    def heartbeat(self, node_id: int, now: float) -> None:
+        if node_id in self.nodes:
+            self.nodes[node_id].last_heartbeat = now
+
+    def detect_failures(self, now: float) -> List[int]:
+        """Mark dead nodes, drain their requests into the retry queue."""
+        failed = []
+        for node in self.nodes.values():
+            if node.alive and now - node.last_heartbeat > self.heartbeat_timeout:
+                node.alive = False
+                failed.append(node.node_id)
+                drained = node.scheduler.drain_for_failure()
+                self.retry_queue.extend(drained)
+                self.prefix_index.evict_node(node.node_id)
+                self._log("failover",
+                          f"node {node.node_id} dead; requeued {len(drained)} requests")
+        return failed
+
+    def reroute_retries(self) -> int:
+        """Re-dispatch requests drained from failed nodes."""
+        n = 0
+        while self.retry_queue:
+            req = self.retry_queue.pop()
+            if self.route_request(req) is not None:
+                n += 1
+        return n
+
+    # -- normal-regime routing (Alg. 1 lines 18-23) --------------------------------------
+    def route_request(self, req: Request) -> Optional[Tuple[int, int]]:
+        """Pick (prefill_node, decode_node); enqueue prefill; return ids."""
+        pnodes = self.prefill_nodes()
+        dnodes = self.decode_nodes()
+        if not pnodes or not dnodes:
+            # Degenerate cluster (all one role): hybrid nodes take both stages.
+            pnodes = pnodes or list(self.nodes.values())
+            dnodes = dnodes or pnodes
+            pnodes = [n for n in pnodes if n.alive]
+            dnodes = [n for n in dnodes if n.alive]
+            if not pnodes:
+                return None
+        p_best = min(pnodes, key=lambda n: self._ttft_estimate(n, req))
+        req.num_cached_prefix_tokens = min(
+            self.prefix_index.match(p_best.node_id, req.prompt_tokens),
+            max(0, req.prompt_len - 1))
+        d_best = min(dnodes, key=lambda n: self._transfer_estimate(p_best, n, req))
+        req.decode_node = d_best.node_id
+        p_best.scheduler.enqueue_prefill(req)
+        return p_best.node_id, d_best.node_id
+
+    def _ttft_estimate(self, node: NodeHandle, req: Request) -> float:
+        """Queued prefill work + this request's compute, on this node."""
+        hit = min(self.prefix_index.match(node.node_id, req.prompt_tokens),
+                  max(0, req.prompt_len - 1))
+        sched = node.scheduler
+        backlog_tokens = sum(r.prompt_len for r in sched.prefill.waiting)
+        backlog_tokens += sum(r.prompt_len for r in sched.prefill.running)
+        my_tokens = req.prompt_len - hit
+        return node.hardware.prefill_time(
+            (backlog_tokens + my_tokens) * self.model_cost.flops_per_token)
+
+    def _transfer_estimate(self, p: NodeHandle, d: NodeHandle, req: Request) -> float:
+        """Expected KV transfer latency P->D + a decode-load tiebreak."""
+        profile: TransportProfile = select_route(p.host_id == d.host_id, self.target)
+        nbytes = self.model_cost.kv_bytes_per_token * (req.prompt_len + 1)
+        # FlowKV's segment allocator keeps requests ~1 segment => 1 call.
+        latency = profile.latency(num_calls=1, num_bytes=int(nbytes))
+        load_penalty = node_score(d.scheduler.smoothed_status(), "decode")
+        return latency * (1.0 + load_penalty)
+
+    # -- the controller loop ---------------------------------------------------------------
+    def step(self, now: float = 0.0) -> str:
+        """One controller cycle: sample -> score -> classify -> act."""
+        self.cycle += 1
+        self.detect_failures(now)
+        alive = [n for n in self.nodes.values() if n.alive]
+        if not alive:
+            return self.regime
+        raw = {n.node_id: n.scheduler.sample_status() for n in alive}
+        smoothed = {n.node_id: n.scheduler.smoothed_status() for n in alive}
+        norm_list = normalize(list(smoothed.values()))
+        statuses = dict(zip(smoothed.keys(), norm_list))
+        del raw
+        cp, cd = cluster_scores(
+            statuses,
+            [n.node_id for n in self.prefill_nodes()],
+            [n.node_id for n in self.decode_nodes()],
+        )
+        regime = classify_regime(cp, cd, self.thresholds)
+        if regime != self.regime:
+            self._log("regime", f"{self.regime} -> {regime} (C^p={cp:.3f}, C^d={cd:.3f})")
+        self.regime = regime
+
+        if regime == "imbalanced":
+            self._handle_imbalance(statuses, cp, cd)
+            self._extreme_streak = 0
+            self._low_streak = 0
+        elif regime == "extreme":
+            self._extreme_streak += 1
+            self._low_streak = 0
+            if self._extreme_streak >= self.thresholds.scale_patience:
+                self._scale_up(cp, cd)
+                self._extreme_streak = 0
+        else:
+            self._extreme_streak = 0
+            if cp < 0.05 and cd < 0.05:
+                self._low_streak += 1
+                if self._low_streak >= 4 * self.thresholds.scale_patience:
+                    self._scale_down()
+                    self._low_streak = 0
+            else:
+                self._low_streak = 0
+        self.reroute_retries()
+        return regime
+
+    # -- imbalanced regime: role switching (App. B.1) ------------------------------------------
+    def _handle_imbalance(self, statuses: Dict[int, NodeStatus], cp: float, cd: float) -> None:
+        hot_role = "prefill" if cp >= cd else "decode"
+        cold_role = "decode" if hot_role == "prefill" else "prefill"
+        idle = [
+            n for n in self.nodes.values()
+            if n.alive and n.role == cold_role
+            and node_score(statuses[n.node_id], cold_role) < self.thresholds.idle
+        ]
+        for node in idle:
+            node.scheduler.set_priority(hot_role, cycles=self.role_switch_cycles)
+            node.switched_until_cycle = self.cycle + self.role_switch_cycles
+            self._log("role_switch",
+                      f"node {node.node_id} ({cold_role}) -> priority {hot_role} "
+                      f"for {self.role_switch_cycles} cycles")
+
+    # -- extreme regime: elastic scaling (App. B.1) ----------------------------------------------
+    def _scale_up(self, cp: float, cd: float) -> None:
+        if self.node_factory is None:
+            self._log("scale_up", "requested but no node_factory configured")
+            return
+        role = "prefill" if cp >= cd else "decode"
+        node = self.node_factory(role)
+        self.register_node(node)
+        self._log("scale_up", f"added node {node.node_id} as {role}")
+
+    def _scale_down(self) -> None:
+        # Remove the least-loaded node of the more numerous role, if >1 remain.
+        for role_nodes in (self.prefill_nodes(), self.decode_nodes()):
+            if len(role_nodes) > 1:
+                victim = min(role_nodes,
+                             key=lambda n: node_score(n.scheduler.smoothed_status(), n.role))
+                sched = victim.scheduler
+                busy = (sched.prefill.running or sched.decode.running
+                        or sched.prefill.sending)
+                if busy:
+                    continue
+                victim.alive = False
+                self.retry_queue.extend(victim.scheduler.drain_for_failure())
+                self.prefix_index.evict_node(victim.node_id)
+                self._log("scale_down", f"removed idle node {victim.node_id} ({victim.role})")
+                return
+
+    # -- misc ------------------------------------------------------------------------------------
+    def _log(self, kind: str, detail: str) -> None:
+        self.events.append(ControllerEvent(self.cycle, kind, detail))
+
+    def record_prefix(self, node_id: int, tokens: Sequence[int]) -> None:
+        self.prefix_index.insert(node_id, tokens)

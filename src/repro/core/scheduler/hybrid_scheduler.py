@@ -1,0 +1,271 @@
+"""Per-node hybrid scheduler (paper §3.4).
+
+Each node runs BOTH a prefill scheduler and a decode scheduler, "like vLLM's
+scheduler, each one has separate running, waiting, swapped, and pending
+queues ... They share a block manager with the hybrid scheduler. The hybrid
+scheduler manages the inference process by coordinating the prefill and
+decode schedulers. During each scheduling cycle, it can prioritize
+sub-schedulers based on the global controller's instructions. By default,
+prefill has priority".
+
+This module is pure control plane: ``schedule()`` emits a
+:class:`ScheduleDecision` that the real engine (``serving/engine.py``) or the
+discrete-event simulator (``sim/cluster_sim.py``) executes. That split lets
+the same scheduler logic drive CPU-scale real inference *and* cluster-scale
+simulation — and makes Alg. 1 directly unit-testable.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+from repro.core.block_manager import BlockManager
+from repro.core.scheduler.metrics import NodeStatus, SlidingWindow
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    """What the node should run this cycle."""
+
+    kind: str                                  # "prefill" | "decode" | "idle"
+    prefill_batch: List[Request] = dataclasses.field(default_factory=list)
+    prefill_chunks: Dict[int, int] = dataclasses.field(default_factory=dict)  # rid -> tokens this cycle
+    decode_batch: List[Request] = dataclasses.field(default_factory=list)
+    preempted: List[Request] = dataclasses.field(default_factory=list)
+
+    @property
+    def num_prefill_tokens(self) -> int:
+        return sum(self.prefill_chunks.get(r.request_id, r.prompt_len) for r in self.prefill_batch)
+
+
+class SubScheduler:
+    """One role's queue set (prefill or decode)."""
+
+    def __init__(self, role: str):
+        self.role = role
+        self.waiting: Deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self.swapped: Deque[Request] = collections.deque()
+        self.sending: Deque[Request] = collections.deque()   # FlowKV's new queue
+
+    def queue_lengths(self) -> Dict[str, int]:
+        return {
+            "running": len(self.running),
+            "waiting": len(self.waiting),
+            "swapped": len(self.swapped),
+            "sending": len(self.sending),
+        }
+
+    def drain_all(self) -> List[Request]:
+        out = list(self.waiting) + list(self.running) + list(self.swapped) + list(self.sending)
+        self.waiting.clear(); self.running.clear(); self.swapped.clear(); self.sending.clear()
+        return out
+
+
+class HybridScheduler:
+    """Coordinates a node's prefill + decode sub-schedulers over one BlockManager."""
+
+    def __init__(self, node_id: int, block_manager: BlockManager,
+                 max_batch_tokens: int = 8192, max_running: int = 64,
+                 chunked_prefill: bool = True, window: int = 8):
+        self.node_id = node_id
+        self.bm = block_manager
+        self.max_batch_tokens = max_batch_tokens
+        self.max_running = max_running
+        self.chunked_prefill = chunked_prefill
+        self.prefill = SubScheduler("prefill")
+        self.decode = SubScheduler("decode")
+        # Role priority: "prefill" (default), "decode", or "both" when the
+        # controller enables hybrid computation during imbalance.
+        self.priority: str = "prefill"
+        self._priority_cycles_left: int = 0    # role-switch lease (imbalanced regime)
+        self._window = SlidingWindow(window)
+        self._progress: Dict[int, int] = {}    # rid -> prefill tokens already computed
+        # utilization accounting, updated by the engine/simulator after each cycle
+        self.last_compute_util = 0.0
+        self.last_bandwidth_util = 0.0
+        self.last_token_budget_used = 0.0
+
+    # -- queue entry points (called by the controller / engine) -----------------
+    def enqueue_prefill(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        req.prefill_node = self.node_id
+        self.prefill.waiting.append(req)
+
+    def enqueue_decode(self, req: Request) -> None:
+        """Request arrives with its KV already on this node (post-transfer)."""
+        req.state = RequestState.DECODING
+        req.decode_node = self.node_id
+        self.decode.running.append(req)
+
+    def mark_sending(self, req: Request) -> None:
+        req.state = RequestState.SENDING
+        self.prefill.sending.append(req)
+
+    def sending_done(self, req: Request) -> None:
+        try:
+            self.prefill.sending.remove(req)
+        except ValueError:
+            pass
+        self.bm.free(req.request_id)   # P-side blocks are released after transfer
+
+    # -- controller knobs ----------------------------------------------------------
+    def set_priority(self, priority: str, cycles: int = 0) -> None:
+        """Role switch (imbalanced regime): lease lasts ``cycles`` cycles (0 = sticky)."""
+        assert priority in ("prefill", "decode", "both")
+        self.priority = priority
+        self._priority_cycles_left = cycles
+
+    def _tick_priority_lease(self) -> None:
+        if self._priority_cycles_left > 0:
+            self._priority_cycles_left -= 1
+            if self._priority_cycles_left == 0:
+                self.priority = "prefill"   # paper default
+
+    # -- the scheduling cycle ---------------------------------------------------------
+    def schedule(self) -> ScheduleDecision:
+        self._tick_priority_lease()
+        order = {
+            "prefill": ("prefill", "decode"),
+            "decode": ("decode", "prefill"),
+            "both": ("prefill", "decode"),
+        }[self.priority]
+        decision = ScheduleDecision(kind="idle")
+        for role in order:
+            if role == "prefill":
+                self._schedule_prefill(decision)
+            else:
+                self._schedule_decode(decision)
+            if decision.kind != "idle" and self.priority != "both":
+                break
+        return decision
+
+    def _schedule_prefill(self, decision: ScheduleDecision) -> None:
+        budget = self.max_batch_tokens - decision.num_prefill_tokens
+        # continue partially-prefilled (chunked) requests first
+        for req in list(self.prefill.running):
+            if budget <= 0:
+                break
+            done = self._progress.get(req.request_id, req.num_cached_prefix_tokens)
+            remaining = req.prompt_len - done
+            if remaining <= 0:
+                continue
+            chunk = min(remaining, budget) if self.chunked_prefill else remaining
+            self._admit_prefill(req, chunk, decision)
+            budget -= chunk
+        # resume swapped next (vLLM semantics), then admit waiting
+        while self.prefill.swapped and budget > 0:
+            req = self.prefill.swapped[0]
+            need = req.prompt_len - self._progress.get(req.request_id, 0)
+            chunk = min(need, budget) if self.chunked_prefill else need
+            if chunk < need and not self.chunked_prefill:
+                break
+            self.prefill.swapped.popleft()
+            self._admit_prefill(req, chunk, decision)
+            budget -= chunk
+        while self.prefill.waiting and budget > 0 and len(self.prefill.running) < self.max_running:
+            req = self.prefill.waiting[0]
+            new_tokens = req.prompt_len - req.num_cached_prefix_tokens
+            if not self.bm.owns(req.request_id) and not self.bm.can_allocate(req.prompt_len + 1):
+                break   # KV pool full — leave in waiting
+            chunk = min(new_tokens, budget) if self.chunked_prefill else new_tokens
+            if chunk < new_tokens and not self.chunked_prefill:
+                break
+            self.prefill.waiting.popleft()
+            if not self.bm.owns(req.request_id):
+                # +1: prefill also writes the first generated token's KV
+                req.block_ids = self.bm.allocate(req.request_id, req.prompt_len + 1)
+            self._admit_prefill(req, chunk, decision)
+            budget -= chunk
+        self.last_token_budget_used = decision.num_prefill_tokens / max(1, self.max_batch_tokens)
+
+    def _admit_prefill(self, req: Request, chunk: int, decision: ScheduleDecision) -> None:
+        req.state = RequestState.PREFILLING
+        if req not in self.prefill.running:
+            self.prefill.running.append(req)
+        decision.prefill_batch.append(req)
+        decision.prefill_chunks[req.request_id] = chunk
+        decision.kind = "prefill" if decision.kind == "idle" else "mixed"
+
+    def _schedule_decode(self, decision: ScheduleDecision) -> None:
+        # resume swapped requests first when KV space frees up (vLLM order)
+        while self.decode.swapped:
+            req = self.decode.swapped[0]
+            if not self.bm.can_allocate(req.total_len + 1):
+                break
+            self.decode.swapped.popleft()
+            req.block_ids = self.bm.allocate(req.request_id, req.total_len + 1)
+            req.state = RequestState.DECODING
+            self.decode.running.append(req)
+        if not self.decode.running:
+            return
+        batch: List[Request] = []
+        for req in list(self.decode.running)[:self.max_running]:
+            # Ensure one more token of KV space; preempt (swap) on pressure.
+            try:
+                self.bm.append_token(req.request_id, req.total_len + 1)
+            except Exception:
+                self._preempt(req, decision)
+                continue
+            batch.append(req)
+        if batch:
+            decision.decode_batch = batch
+            decision.kind = "decode" if decision.kind == "idle" else "mixed"
+
+    def _preempt(self, req: Request, decision: ScheduleDecision) -> None:
+        """Swap out the youngest decode request under KV pressure."""
+        self.decode.running.remove(req)
+        self.bm.free(req.request_id)
+        req.state = RequestState.SWAPPED
+        req.block_ids = []
+        self.decode.swapped.append(req)
+        decision.preempted.append(req)
+
+    # -- completion callbacks (engine/simulator) ---------------------------------------
+    def prefill_progressed(self, req: Request, tokens: int) -> bool:
+        """Record chunk completion; True when the whole prompt is prefitted."""
+        done = self._progress.get(req.request_id, req.num_cached_prefix_tokens) + tokens
+        self._progress[req.request_id] = done
+        if done >= req.prompt_len:
+            self.prefill.running.remove(req)
+            self._progress.pop(req.request_id, None)
+            return True
+        # not finished: chunked prefill keeps it in running for the next cycle
+        return False
+
+    def decode_finished(self, req: Request) -> None:
+        self.decode.running.remove(req)
+        self.bm.free(req.request_id)
+        req.state = RequestState.FINISHED
+
+    # -- status sampling -----------------------------------------------------------------
+    def sample_status(self) -> NodeStatus:
+        p, d = self.prefill.queue_lengths(), self.decode.queue_lengths()
+        status = NodeStatus(
+            running_prefill=p["running"], waiting_prefill=p["waiting"],
+            swapped_prefill=p["swapped"], sending_prefill=p["sending"],
+            running_decode=d["running"], waiting_decode=d["waiting"],
+            swapped_decode=d["swapped"], sending_decode=d["sending"],
+            token_budget_used=self.last_token_budget_used,
+            kv_utilization=self.bm.utilization,
+            compute_utilization=self.last_compute_util,
+            bandwidth_utilization=self.last_bandwidth_util,
+        )
+        self._window.push(status)
+        return status
+
+    def smoothed_status(self) -> NodeStatus:
+        return self._window.smoothed()
+
+    # -- fault path -----------------------------------------------------------------------
+    def drain_for_failure(self) -> List[Request]:
+        """Node died: return every live request for controller requeue."""
+        reqs = self.prefill.drain_all() + self.decode.drain_all()
+        for r in reqs:
+            if self.bm.owns(r.request_id):
+                self.bm.free(r.request_id)
+            r.reset_for_retry()
+        self._progress.clear()
+        return reqs

@@ -1,0 +1,26 @@
+"""Jitted wrapper for the prefill flash-attention kernel (pads S to tile
+multiples, strips padding after)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.flash_prefill import flash_prefill
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_blk", "k_blk", "interpret"))
+def flash_prefill_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, q_blk: int = 128, k_blk: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    b, s, h, hd = q.shape
+    blk = max(min(q_blk, s), min(k_blk, s))
+    pad = (-s) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = flash_prefill(q, k, v, causal=causal, q_blk=min(q_blk, q.shape[1]),
+                        k_blk=min(k_blk, q.shape[1]), interpret=interpret)
+    return out[:, :s]

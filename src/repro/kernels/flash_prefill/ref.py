@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the prefill flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool = True) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Direct softmax attention."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)

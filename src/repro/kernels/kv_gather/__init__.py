@@ -1,0 +1,5 @@
+from repro.kernels.kv_gather.kv_gather import kv_gather
+from repro.kernels.kv_gather.ops import kv_gather_op, kv_scatter_op
+from repro.kernels.kv_gather.ref import kv_gather_ref
+
+__all__ = ["kv_gather", "kv_gather_op", "kv_scatter_op", "kv_gather_ref"]

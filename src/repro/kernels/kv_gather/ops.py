@@ -1,0 +1,22 @@
+"""Jitted wrapper for the KV gather kernel + the scatter inverse."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kv_gather.kv_gather import kv_gather
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_gather_op(pool: jax.Array, block_ids: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    return kv_gather(pool, block_ids.astype(jnp.int32), interpret=interpret)
+
+
+@jax.jit
+def kv_scatter_op(pool: jax.Array, block_ids: jax.Array,
+                  staging: jax.Array) -> jax.Array:
+    """Receiver side: place staged pages into local blocks."""
+    return pool.at[block_ids.astype(jnp.int32)].set(staging.astype(pool.dtype))

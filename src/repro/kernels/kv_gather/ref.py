@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the KV block-gather staging kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_gather_ref(pool: jax.Array, block_ids: jax.Array) -> jax.Array:
+    """pool (nb, L, 2, payload); block_ids (n,) -> staging (n, L, 2, payload)."""
+    return jnp.take(pool, block_ids, axis=0)

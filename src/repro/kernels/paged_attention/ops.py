@@ -1,0 +1,26 @@
+"""Jitted wrapper for the paged decode attention kernel.
+
+``paged_decode_attention_op`` takes the full FlowKV pool and a layer index,
+slices that layer's contiguous page plane, and runs the kernel. On TPU the
+call compiles to a Mosaic kernel; on this CPU container ``interpret=True``
+executes the same kernel body for correctness (tests sweep shapes/dtypes
+against ``ref.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def paged_decode_attention_op(q: jax.Array, pool: jax.Array, layer,
+                              block_tables: jax.Array, lengths: jax.Array,
+                              *, block_size: int, interpret: bool = True) -> jax.Array:
+    """q (B,H,hd); pool (nb, L, 2, payload) FlowKV layout; layer scalar."""
+    pages = jax.lax.dynamic_index_in_dim(pool, layer, axis=1, keepdims=False)
+    return paged_decode_attention(q, pages, block_tables, lengths,
+                                  block_size=block_size, interpret=interpret)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: decode attention over FlowKV block-major pages.
+
+This is the paper's "targeted optimizations ... for the PagedAttention
+kernel" (§3.3) adapted to TPU: the pool layout is block-major
+``(nb, L, 2, payload)`` (Eq. 5), so the kernel for one layer receives the
+contiguous slice ``pages = pool[:, layer]`` of shape ``(nb, 2, payload)``
+and *one DMA per page* stages a block's K AND V for this layer into VMEM —
+no per-(layer, k/v) descriptors, mirroring the transfer-path win.
+
+Grid: ``(B, max_blocks)`` — the page dim iterates sequentially (TPU minor
+grid dim), maintaining an online-softmax accumulator in VMEM scratch per
+sequence. Page indirection uses scalar-prefetched block tables in the
+BlockSpec index_map, so the pipeline prefetches page ``i+1`` while page
+``i`` is being processed (the TPU analogue of overlapping transfer kernels
+with compute).
+
+Tiling: payload = block_size * KV * hd. With the default 32-token blocks and
+128-wide head_dim every MXU operand is lane-aligned (hd multiple of 128 for
+most archs; 64/160/256 variants still vector-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _kernel(block_tables_ref, lengths_ref,     # scalar prefetch
+            q_ref, pages_ref,                  # VMEM inputs
+            o_ref,                             # VMEM output
+            m_ref, l_ref, acc_ref,             # VMEM scratch
+            *, block_size: int, num_kv: int, head_dim: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    start = i * block_size
+
+    @pl.when(start < length)
+    def _process():
+        q = q_ref[0]                                   # (H, hd)
+        h = q.shape[0]
+        g = h // num_kv
+        page = pages_ref[0]                            # (2, payload)
+        k = page[0].reshape(block_size, num_kv, head_dim)
+        v = page[1].reshape(block_size, num_kv, head_dim)
+        qg = q.reshape(num_kv, g, head_dim)
+        s = jax.lax.dot_general(
+            qg.astype(jnp.float32), k.astype(jnp.float32),
+            (((2,), (2,)), ((0,), (1,))),
+        )                                              # (KV, G, bs)
+        s = s / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (KV, G)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(pos < length, p, 0.0)
+        scale = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32),
+            (((2,), (0,)), ((0,), (1,))),
+        )                                              # (KV, G, hd)
+        acc_ref[...] = acc_ref[...] * scale[..., None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(i == nb - 1)
+    def _finalize():
+        h = q_ref.shape[1]
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = (acc_ref[...] / denom).reshape(h, head_dim)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, pages: jax.Array,
+                           block_tables: jax.Array, lengths: jax.Array,
+                           *, block_size: int, interpret: bool = True) -> jax.Array:
+    """q (B,H,hd); pages (nb,2,payload); block_tables (B,maxb); lengths (B,)."""
+    b, h, hd = q.shape
+    maxb = block_tables.shape[1]
+    payload = pages.shape[-1]
+    num_kv = payload // (block_size * hd)
+    g = h // num_kv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bb, i, bt, ln: (bb, 0, 0)),
+            pl.BlockSpec((1, 2, payload),
+                         lambda bb, i, bt, ln: (bt[bb, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bb, i, bt, ln: (bb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((num_kv, g), jnp.float32),
+            pltpu.VMEM((num_kv, g), jnp.float32),
+            pltpu.VMEM((num_kv, g, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, block_size=block_size,
+                               num_kv=num_kv, head_dim=hd)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, pages)

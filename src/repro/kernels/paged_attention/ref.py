@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the FlowKV-layout paged decode attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q: jax.Array, pages: jax.Array,
+                               block_tables: jax.Array, lengths: jax.Array,
+                               block_size: int) -> jax.Array:
+    """Reference paged decode attention.
+
+    q:            (B, H, hd)        — one query token per sequence
+    pages:        (nb, 2, payload)  — ONE layer's slice of the FlowKV pool,
+                                      payload = block_size * KV * hd
+    block_tables: (B, maxb) int32   — physical block ids per sequence
+    lengths:      (B,) int32        — valid tokens per sequence
+    returns:      (B, H, hd)
+    """
+    b, h, hd = q.shape
+    maxb = block_tables.shape[1]
+    payload = pages.shape[-1]
+    kv = payload // (block_size * hd)
+    g = h // kv
+
+    # gather pages -> dense (B, maxb*bs, KV, hd)
+    gathered = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    gathered = gathered.reshape(b, maxb, 2, block_size, kv, hd)
+    k = gathered[:, :, 0].reshape(b, maxb * block_size, kv, hd)
+    v = gathered[:, :, 1].reshape(b, maxb * block_size, kv, hd)
+
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    t = maxb * block_size
+    valid = jnp.arange(t)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w.astype(v.dtype), v)
+    return out.reshape(b, h, hd)

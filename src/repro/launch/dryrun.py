@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell, both meshes (subprocess per cell)
+    PYTHONPATH=src python -m repro.launch.dryrun --aggregate    # print the table from cached JSON
+
+Each cell writes ``results/dryrun/<arch>__<shape>__<mesh>.json`` with:
+bytes-per-device, HLO FLOPs, per-kind collective bytes, roofline terms, and
+the compile wall time. Failures are recorded with the exception text —
+a failed cell is a bug in the sharding config, not an acceptable outcome.
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+MESHES = ("single", "multi")
+
+
+def _parse_opts(opt: str) -> dict:
+    """'moe_dispatch=gshard,num_heads=64' -> typed dict of config overrides."""
+    out = {}
+    if not opt:
+        return out
+    for kv in opt.split(","):
+        k, v = kv.split("=")
+        if v in ("true", "false"):
+            out[k] = v == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def _lower_cell(arch: str, shape_name: str, mesh_kind: str, extra_tag: str = "",
+                opts: str = ""):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.distributed import sharding as SH
+    from repro.distributed import steps as ST
+    from repro.launch import hlo_analysis as HA
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import get_model, input_specs
+
+    cfg = get_config(arch)
+    if opts:
+        cfg = dataclasses.replace(cfg, **_parse_opts(opts))
+    kind, seq, batch = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    model = get_model(cfg)
+    t0 = time.time()
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    with mesh:
+        if kind == "train":
+            state = ST.abstract_train_state(model)
+            train_step, state_spec = ST.make_train_step(model, mesh, state["params"])
+            batch_specs, batch_axes = input_specs(cfg, "train", seq, batch)
+            b_spec = SH.tree_specs(batch_specs, batch_axes, mesh)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(jax.tree.map(ns, state_spec), jax.tree.map(ns, b_spec)),
+                out_shardings=(jax.tree.map(ns, state_spec), None),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state, batch_specs)
+            tokens = batch * seq
+            model_flops = 6.0 * cfg.active_params() * tokens / n_chips
+        elif kind == "prefill":
+            params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_spec = SH.tree_specs(params, model.param_axes(), mesh)
+            batch_specs, batch_axes = input_specs(cfg, "prefill", seq, batch)
+            b_spec = SH.tree_specs(batch_specs, batch_axes, mesh)
+            step = ST.make_prefill_step(model, mesh)
+            fn = jax.jit(step, in_shardings=(jax.tree.map(ns, p_spec),
+                                             jax.tree.map(ns, b_spec)))
+            lowered = fn.lower(params, batch_specs)
+            model_flops = 2.0 * cfg.active_params() * batch * seq / n_chips
+        else:  # decode
+            params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_spec = SH.tree_specs(params, model.param_axes(), mesh)
+            specs, axes = input_specs(cfg, "decode", seq, batch)
+            tok_spec = SH.tree_specs(specs["token"], axes["token"], mesh)
+            cache_spec = SH.tree_specs(specs["cache"], axes["cache"], mesh)
+            step = ST.make_decode_step(model, mesh)
+            fn = jax.jit(step,
+                         in_shardings=(jax.tree.map(ns, p_spec), ns(tok_spec),
+                                       jax.tree.map(ns, cache_spec)),
+                         out_shardings=(None, jax.tree.map(ns, cache_spec)),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params, specs["token"], specs["cache"])
+            model_flops = 2.0 * cfg.active_params() * batch / n_chips
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = HA.memory_analysis_dict(compiled)
+        hlo = compiled.as_text()
+        if os.environ.get("DRYRUN_DUMP_HLO"):
+            dump = RESULTS_DIR.parent / "hlo" / f"{arch}__{shape_name}__{mesh_kind}{extra_tag}.hlo"
+            dump.parent.mkdir(parents=True, exist_ok=True)
+            dump.write_text(hlo)
+        # XLA's HloCostAnalysis counts while bodies once; re-derive FLOPs,
+        # bytes AND collective traffic with trip-count multiplication
+        # (see launch/hlo_flops.py). Collectives are priced per traversed
+        # fabric: intra-pod groups at ICI bw, pod-crossing groups at DCN bw.
+        from repro.launch.hlo_flops import analyze_hlo
+        parsed = analyze_hlo(hlo, pod_size=256)
+        cost_fixed = {"flops": parsed.flops, "bytes accessed": parsed.bytes}
+        coll = {**{k: int(v) for k, v in parsed.collectives.items()},
+                "total": int(parsed.collective_total),
+                "dcn_total": int(parsed.dcn_total),
+                "ici_total": int(parsed.ici_total)}
+        roof = HA.roofline_from(cost_fixed, coll, model_flops=model_flops,
+                                link_bw=HA.ICI_BW)
+        # re-price: ICI share at ICI bw + DCN share at DCN bw
+        roof.collective_s = parsed.ici_total / HA.ICI_BW + parsed.dcn_total / HA.DCN_BW
+        terms = {"compute": roof.compute_s, "memory": roof.memory_s,
+                 "collective": roof.collective_s}
+        roof.bottleneck = max(terms, key=terms.get)
+
+        # bytes per device of the resident state (params or train state or cache)
+        if kind == "train":
+            resident = SH.bytes_per_device(state, state_spec, mesh)
+        elif kind == "prefill":
+            resident = SH.bytes_per_device(params, p_spec, mesh)
+        else:
+            resident = (SH.bytes_per_device(params, p_spec, mesh)
+                        + SH.bytes_per_device(specs["cache"], cache_spec, mesh))
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": "ok",
+        "kind": kind, "seq": seq, "batch": batch, "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "resident_bytes_per_device": resident,
+        "cost_analysis_xla": {k: v for k, v in cost.items()
+                              if k in ("flops", "bytes accessed", "transcendentals")},
+        "hlo_parsed": {"flops": parsed.flops, "bytes": parsed.bytes,
+                       "unknown_trip_counts": parsed.unknown_trip_counts},
+        "memory_analysis": mem,
+        "collective_bytes": coll,
+        "roofline": roof.as_dict(),
+        "tag": extra_tag,
+    }
+
+
+def _transfer_cell(arch: str):
+    """Lower the FlowKV P->D transfer program on the multi-pod mesh."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.configs import get_config
+    from repro.distributed import steps as ST
+    from repro.launch import hlo_analysis as HA
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    t0 = time.time()
+    with mesh:
+        spec, pspec = ST.kv_transfer_specs(cfg, mesh, seq=32768, batch=128)
+        step = ST.make_kv_transfer_step(mesh)
+        fn = jax.jit(step, in_shardings=(NamedSharding(mesh, pspec),),
+                     out_shardings=NamedSharding(mesh, pspec))
+        lowered = fn.lower(spec)
+        compiled = lowered.compile()
+        coll = HA.collective_bytes(compiled.as_text())
+    return {
+        "arch": arch, "shape": "kv_transfer_32k", "mesh": "multi", "status": "ok",
+        "kind": "transfer", "compile_s": round(time.time() - t0, 2),
+        "collective_bytes": coll,
+        "pool_bytes_global": int(jax.numpy.dtype(cfg.dtype).itemsize
+                                 * __import__("numpy").prod(spec.shape)),
+    }
+
+
+def cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> pathlib.Path:
+    if tag:
+        d = RESULTS_DIR.parent / "perf"
+        d.mkdir(parents=True, exist_ok=True)
+        return d / f"{arch}__{shape}__{mesh}__{tag}.json"
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh}.json"
+
+
+def run_cell(arch: str, shape: str, mesh: str, tag: str = "", opts: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    try:
+        if shape == "kv_transfer_32k":
+            rec = _transfer_cell(arch)
+        else:
+            rec = _lower_cell(arch, shape, mesh, extra_tag=tag, opts=opts)
+            rec["opts"] = opts
+    except Exception as e:  # noqa: BLE001 — recorded, cell marked failed
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "tag": tag,
+               "opts": opts, "status": "failed",
+               "error": f"{type(e).__name__}: {e}"}
+    cell_path(arch, shape, mesh, tag).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def run_all(archs=None, force: bool = False):
+    """Drive every cell in a fresh subprocess (isolates XLA state/memory).
+
+    Cells are ordered smallest-arch-first so the bulk of the table fills in
+    early even if the giant configs compile slowly.
+    """
+    from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+    order = sorted(archs or ASSIGNED_ARCHS,
+                   key=lambda a: get_config(a).num_params())
+    cells = [(a, s, m) for a in order for s in SHAPES for m in MESHES]
+    cells += [(a, "kv_transfer_32k", "multi") for a in order]
+    for arch, shape, mesh in cells:
+        path = cell_path(arch, shape, mesh)
+        if path.exists() and not force:
+            rec = json.loads(path.read_text())
+            if rec.get("status") in ("ok", "skipped"):
+                print(f"[cached] {arch} {shape} {mesh}: {rec['status']}")
+                continue
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh],
+            capture_output=True, text=True,
+            env={**os.environ, "PYTHONPATH": "src"},
+            cwd=str(pathlib.Path(__file__).resolve().parents[3]),
+        )
+        status = "?"
+        if path.exists():
+            status = json.loads(path.read_text()).get("status")
+        print(f"[{time.time()-t0:7.1f}s] {arch} {shape} {mesh}: {status}"
+              + ("" if proc.returncode == 0 else f" (rc={proc.returncode})"))
+        if proc.returncode != 0 and not path.exists():
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh, "status": "failed",
+                "error": proc.stderr[-2000:]}, indent=1))
+
+
+def aggregate() -> list:
+    recs = []
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--aggregate", action="store_true")
+    ap.add_argument("--tag", default="", help="perf-run tag (writes results/perf/)")
+    ap.add_argument("--opt", default="",
+                    help="config overrides, e.g. moe_dispatch=gshard,attn_wedge=true")
+    args = ap.parse_args()
+
+    if args.aggregate:
+        for r in aggregate():
+            line = f"{r['arch']:26s} {r['shape']:16s} {r['mesh']:6s} {r['status']}"
+            if r["status"] == "ok" and "roofline" in r:
+                rf = r["roofline"]
+                line += (f"  comp={rf['compute_s']:.4f}s mem={rf['memory_s']:.4f}s "
+                         f"coll={rf['collective_s']:.4f}s -> {rf['bottleneck']}")
+            print(line)
+        return
+    if args.all:
+        run_all(archs=[args.arch] if args.arch else None, force=args.force)
+        return
+    assert args.arch and args.shape, "--arch and --shape required"
+    rec = run_cell(args.arch, args.shape, args.mesh, tag=args.tag, opts=args.opt)
+    print(json.dumps(rec, indent=1)[:4000])
+    if rec["status"] == "failed":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

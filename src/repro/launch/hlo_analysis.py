@@ -1,0 +1,120 @@
+"""Post-compile HLO analysis: collective bytes, roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM traffic but not collective traffic,
+so we parse the optimized HLO text and sum result-buffer sizes of every
+communication op, bucketed by kind. Roofline terms then follow from the
+hardware constants (TPU v5e targets):
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = coll_bytes / (chips * 50e9)      # per-link ICI
+
+All quantities from cost_analysis / HLO text are *per partition* (SPMD
+module is single-device), so the "/chips" division is already implicit —
+we report per-chip seconds directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+DCN_BW = 25e9              # bytes/s / host (pod-crossing collectives)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g. "  %foo = bf16[16,2048,128]{2,1,0} all-gather(...)", possibly a tuple
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\((?:[^()]|\([^()]*\))*\)|[\w\[\]{},: ]+?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-partition result bytes of each collective kind."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).replace("-start", "")
+        out[kind] += _shape_bytes(m.group(1))
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip bytes accessed
+    coll_bytes: float            # per-chip collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from(cost: Dict, coll: Dict[str, int], model_flops: Optional[float] = None,
+                  link_bw: float = ICI_BW) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    # cost_analysis 'bytes accessed' is per-partition HBM traffic
+    hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = float(coll.get("total", 0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = cb / link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = None
+    if model_flops:
+        useful = model_flops / flops if flops else None
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, bottleneck=bottleneck,
+                    model_flops=model_flops, useful_ratio=useful)
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+        if hasattr(ma, field):
+            out[field] = float(getattr(ma, field))
+    return out

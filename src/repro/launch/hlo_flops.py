@@ -1,0 +1,397 @@
+"""HLO-text FLOP/byte counter with while-loop trip-count multiplication.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) counts
+the body of a ``while`` op ONCE when it cannot derive the trip count — which
+is systematically the case for the nested scans our models compile to
+(layers-scan x flash q-chunk scan x kv-chunk scan). That undercounts prefill
+FLOPs by >30x and would make the roofline report meaningless.
+
+This module re-derives the two roofline inputs from the optimized HLO text:
+
+* **flops** — 2 * numel(result) * contracted-size for every ``dot``
+  (plus convolutions), accumulated over the call graph with ``while`` bodies
+  multiplied by their parsed trip counts.
+* **bytes** — operand + result bytes of top-level ops per computation
+  (fusion internals excluded, matching HloCostAnalysis's optimistic model),
+  same multipliers.
+
+Trip counts are parsed from each while's condition computation: JAX scans
+lower to ``compare(iv, bound), direction=LT`` with a scalar constant bound.
+When no bound is found the multiplier defaults to 1 and the while is
+reported in ``unknown_trip_counts`` so the caller can flag it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "tuple": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_COUNT = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_TOKEN = re.compile(r"^\(?\s*(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"\)?\s*([a-z][a-z0-9\-]*)\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_COND_CONST = re.compile(r"constant\((\d+)\)")
+_DIMS_ATTR = re.compile(r"(\w+_contracting_dims)=\{([\d,]*)\}")
+_BATCH_ATTR = re.compile(r"(\w+_batch_dims)=\{([\d,]*)\}")
+
+
+def _parse_shape(text: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_TOKEN.match(text.strip())
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    """All dtype[dims] tokens in a string (for tuple shapes)."""
+    out = []
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", text):
+        if m.group(1) in _DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+            out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(_DTYPE_BYTES[t] * math.prod(d) for t, d in _all_shapes(text))
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_text: str
+    rest: str        # everything after '=' (shape + op + operands + attrs)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    shapes: Dict[str, Tuple[str, List[int]]]
+
+
+def _split_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and "->" in line:
+                m = _COMP_HEADER.match(line.strip())
+                if m:
+                    cur = _Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rest = dm.group(1), dm.group(2)
+        dtype, dims = _parse_shape(rest)
+        if dtype is not None:
+            cur.shapes[name] = (dtype, dims)
+        om = _OP_RE.search(rest)
+        kind = om.group(1) if om else ""
+        # operand names: %foo tokens inside the first (...) after op name
+        operands = re.findall(r"%?([\w\.\-]+)", rest[om.end():].split(")")[0]) if om else []
+        # result text = everything up to the op name (the shape part)
+        result_text = rest[:om.start()] if om else rest
+        cur.ops.append(_Op(name, kind, result_text, rest, operands))
+    return comps
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    # result numel
+    res_shapes = _all_shapes(op.result_text)
+    if not res_shapes:
+        return 0.0
+    numel = math.prod(res_shapes[0][1]) if res_shapes[0][1] else 1
+    # contracted size from lhs shape + lhs_contracting_dims
+    lhs_name = op.operands[0] if op.operands else None
+    lhs = comp.shapes.get(lhs_name)
+    csize = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lhs and m and m.group(1):
+        for d in m.group(1).split(","):
+            idx = int(d)
+            if idx < len(lhs[1]):
+                csize *= lhs[1][idx]
+    return 2.0 * numel * csize
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    res = _all_shapes(op.result_text)
+    if not res:
+        return 0.0
+    numel = math.prod(res[0][1]) if res[0][1] else 1
+    rhs = comp.shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+    k = math.prod(rhs[1]) if rhs and rhs[1] else 1
+    out_feat = res[0][1][-1] if res[0][1] else 1
+    return 2.0 * numel * max(1, k // max(1, out_feat))
+
+
+_CALL_KINDS = ("fusion", "call", "custom-call", "reduce", "map", "scatter",
+               "reduce-window", "select-and-scatter", "sort", "all-reduce",
+               "reduce-scatter")
+
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+# iota form: replica_groups=[num_groups,group_size]<=[d0,d1,...]T(perm)?
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def crosses_pod(op_rest: str, pod_size: int) -> bool:
+    """True if a collective's replica groups span a pod boundary.
+
+    With the production meshes, devices [0, pod_size) are pod 0 — a group
+    containing ids from different pod_size-blocks crosses DCN; otherwise the
+    collective rides intra-pod ICI. Handles both explicit {{...},{...}} and
+    iota [G,S]<=[dims]T(perm) group encodings.
+    """
+    m = _IOTA_RE.search(op_rest)
+    if m:
+        import numpy as _np
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        order = _np.arange(_np.prod(dims)).reshape(dims)
+        if m.group(4):
+            order = order.transpose([int(p) for p in m.group(4).split(",")])
+        flat = order.reshape(ngroups, gsize)
+        pods = flat // pod_size
+        return bool((pods != pods[:, :1]).any())
+    m = _GROUPS_RE.search(op_rest) or _PAIRS_RE.search(op_rest)
+    if not m:
+        return False
+    for grp in re.findall(r"\{([^}]*)\}", m.group(1)):
+        ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if ids and len({i // pod_size for i in ids}) > 1:
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class HloCounts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    unknown_trip_counts: int = 0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVE_KINDS})
+    # subset of the above that crosses the pod boundary (rides DCN)
+    collectives_dcn: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVE_KINDS})
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+    @property
+    def dcn_total(self) -> float:
+        return sum(self.collectives_dcn.values())
+
+    @property
+    def ici_total(self) -> float:
+        return self.collective_total - self.dcn_total
+
+
+def analyze_hlo(hlo: str, entry: Optional[str] = None,
+                pod_size: int = 256) -> HloCounts:
+    comps = _split_computations(hlo)
+    # find entry computation
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: Dict[str, Tuple[float, float, int]] = {}
+
+    def trip_count(cond_name: str) -> Optional[int]:
+        cond = comps.get(cond_name)
+        if cond is None:
+            return None
+        consts = []
+        for op in cond.ops:
+            if op.kind == "constant":
+                mm = _COND_CONST.search(op.rest)
+                if mm:
+                    consts.append(int(mm.group(1)))
+        has_compare = any(op.kind == "compare" for op in cond.ops)
+        if has_compare and consts:
+            return max(consts)
+        return None
+
+    def _zero():
+        return {k: 0.0 for k in _COLLECTIVE_KINDS}
+
+    def _fusion_operand_bytes(callee_name: str) -> Optional[Dict[int, float]]:
+        """Per-parameter-index effective read bytes inside a fusion.
+
+        A parameter consumed ONLY by slice-family ops reads just the sliced
+        regions; anything else reads the full operand (None entry = full).
+        """
+        callee = comps.get(callee_name)
+        if callee is None:
+            return None
+        param_idx: Dict[str, int] = {}
+        for op in callee.ops:
+            if op.kind == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.rest)
+                if m:
+                    param_idx[op.name] = int(m.group(1))
+        reads: Dict[int, float] = {}
+        full: set = set()
+        for op in callee.ops:
+            for o in op.operands:
+                if o not in param_idx:
+                    continue
+                idx = param_idx[o]
+                if op.kind in ("dynamic-slice", "slice", "gather"):
+                    reads[idx] = reads.get(idx, 0.0) + _bytes_of(op.result_text)
+                elif op.kind == "dynamic-update-slice" and op.operands and op.operands[0] == o:
+                    # in-place destination: reads ~update-sized region
+                    upd = callee.shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+                    if upd:
+                        reads[idx] = reads.get(idx, 0.0) + _DTYPE_BYTES.get(
+                            upd[0], 0) * math.prod(upd[1] or [1])
+                    else:
+                        full.add(idx)
+                elif op.kind == "get-tuple-element":
+                    full.add(idx)   # conservatively full
+                else:
+                    full.add(idx)
+        for idx in full:
+            reads.pop(idx, None)
+            reads[idx] = -1.0   # sentinel: full read
+        return reads
+
+    def _fusion_root_write_bytes(callee_name: str) -> Optional[float]:
+        """If the fusion root is a dynamic-update-slice, only the update
+        region is written (the rest aliases in place)."""
+        callee = comps.get(callee_name)
+        if callee is None or not callee.ops:
+            return None
+        root = callee.ops[-1]
+        if root.kind == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = callee.shapes.get(root.operands[1])
+            if upd:
+                return float(_DTYPE_BYTES.get(upd[0], 0) * math.prod(upd[1] or [1]))
+        return None
+
+    def visit(name: str) -> Tuple[float, float, int, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0, _zero(), _zero())
+        memo[name] = (0.0, 0.0, 0, _zero(), _zero())   # cycle guard
+        flops = 0.0
+        nbytes = 0.0
+        unknown = 0
+        coll = _zero()
+        dcn = _zero()
+        for op in comp.ops:
+            kind_base = op.kind.replace("-start", "")
+            if kind_base in _COLLECTIVE_KINDS:
+                nb_c = _bytes_of(op.result_text)
+                coll[kind_base] += nb_c
+                if crosses_pod(op.rest, pod_size):
+                    dcn[kind_base] += nb_c
+            if op.kind == "dot":
+                flops += _dot_flops(op, comp)
+            elif op.kind == "convolution":
+                flops += _conv_flops(op, comp)
+            elif op.kind == "while":
+                wm = _WHILE_RE.search(op.rest)
+                if wm:
+                    tm = _TRIP_COUNT.search(op.rest)
+                    tc = int(tm.group(1)) if tm else trip_count(wm.group(1))
+                    if tc is None:
+                        tc = 1
+                        unknown += 1
+                    bf, bb, bu, bc, bd = visit(wm.group(2))
+                    flops += tc * bf
+                    nbytes += tc * bb
+                    unknown += bu
+                    for k in coll:
+                        coll[k] += tc * bc[k]
+                        dcn[k] += tc * bd[k]
+                continue
+            elif op.kind == "conditional":
+                for callee in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                         r"(?:true|false)_computation=%?([\w\.\-]+))", op.rest):
+                    for c in ",".join(x for x in callee if x).split(","):
+                        c = c.strip().lstrip("%")
+                        if c:
+                            bf, bb, bu, bc, bd = visit(c)
+                            flops += bf; nbytes += bb; unknown += bu
+                            for k in coll:
+                                coll[k] += bc[k]
+                                dcn[k] += bd[k]
+                continue
+            # callee flops for fusions etc.
+            cm = _CALLS_RE.search(op.rest)
+            if cm and op.kind in _CALL_KINDS:
+                bf, _, bu, bc, bd = visit(cm.group(1))
+                flops += bf
+                unknown += bu
+                for k in coll:
+                    coll[k] += bc[k]
+                    dcn[k] += bd[k]
+            # bytes: operands + result of this top-level op
+            if op.kind in ("parameter", "constant", "get-tuple-element",
+                           "tuple", "bitcast"):
+                continue
+            if op.kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region, not the full operand
+                nbytes += 2.0 * _bytes_of(op.result_text)
+                continue
+            if op.kind in ("dynamic-update-slice", "scatter"):
+                # in-place update: read+write of the update region only
+                upd = comp.shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+                if upd:
+                    nbytes += 2.0 * _DTYPE_BYTES.get(upd[0], 0) * math.prod(upd[1] or [1])
+                else:
+                    nbytes += 2.0 * _bytes_of(op.result_text)
+                continue
+            if op.kind == "fusion" and cm:
+                # fusion: writes = root (DUS-aware); reads = per-param
+                # effective bytes (slice-only params read slices, not fulls)
+                w = _fusion_root_write_bytes(cm.group(1))
+                nbytes += w if w is not None else _bytes_of(op.result_text)
+                reads = _fusion_operand_bytes(cm.group(1)) or {}
+                for i, o in enumerate(op.operands):
+                    sh = comp.shapes.get(o)
+                    if not sh:
+                        continue
+                    full_b = _DTYPE_BYTES.get(sh[0], 0) * math.prod(sh[1] or [1])
+                    eff = reads.get(i)
+                    nbytes += full_b if (eff is None or eff < 0) else min(eff, full_b)
+                continue
+            nbytes += _bytes_of(op.result_text)
+            for o in op.operands:
+                sh = comp.shapes.get(o)
+                if sh:
+                    nbytes += _DTYPE_BYTES.get(sh[0], 0) * math.prod(sh[1] or [1])
+        memo[name] = (flops, nbytes, unknown, coll, dcn)
+        return memo[name]
+
+    f, b, u, c, dc = visit(entry)
+    return HloCounts(flops=f, bytes=b, unknown_trip_counts=u, collectives=c,
+                     collectives_dcn=dc)

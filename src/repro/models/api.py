@@ -1,0 +1,168 @@
+"""Uniform model API over the four families.
+
+``get_model(cfg)`` returns a :class:`Model` whose members close over the
+config; every consumer (training step, serving engine, dry-run) talks to
+this protocol instead of family-specific modules:
+
+    init(key) -> params
+    param_axes() -> logical-axis pytree (same structure as params)
+    loss(params, batch) -> scalar
+    prefill(params, batch) -> (logits, cache)
+    decode(params, token, cache) -> (logits, cache)
+    init_cache(batch, max_len) -> cache pytree
+    cache_axes() -> logical-axis pytree for the cache
+    input_specs(shape_kind, seq, batch) -> (batch_pytree_of_ShapeDtypeStruct,
+                                            logical-axis pytree)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, griffin, mamba2, transformer
+from repro.models.common import ModelConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    param_axes: Callable[[], Params]
+    loss: Callable[[Params, Dict[str, jax.Array]], jax.Array]
+    prefill: Callable[[Params, Dict[str, jax.Array]], Tuple[jax.Array, Dict[str, jax.Array]]]
+    decode: Callable[[Params, jax.Array, Dict[str, jax.Array]], Tuple[jax.Array, Dict[str, jax.Array]]]
+    init_cache: Callable[..., Dict[str, jax.Array]]
+    cache_axes: Callable[[], Dict[str, Tuple[Optional[str], ...]]]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return _transformer_model(cfg)
+    if cfg.family == "ssm":
+        return _simple_model(cfg, mamba2)
+    if cfg.family == "hybrid":
+        return _griffin_model(cfg)
+    if cfg.family == "encdec":
+        return _encdec_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _transformer_model(cfg: ModelConfig) -> Model:
+    def prefill_fn(params, batch):
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   batch.get("frontend_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        param_axes=lambda: transformer.param_axes(cfg),
+        loss=lambda p, b: transformer.loss_fn(p, cfg, b),
+        prefill=prefill_fn,
+        decode=lambda p, tok, cache: transformer.decode_step(p, cfg, tok, cache),
+        init_cache=lambda batch, max_len, **kw: transformer.init_cache(cfg, batch, max_len, **kw),
+        cache_axes=transformer.cache_axes,
+    )
+
+
+def _simple_model(cfg: ModelConfig, mod) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        param_axes=lambda: mod.param_axes(cfg),
+        loss=lambda p, b: mod.loss_fn(p, cfg, b),
+        prefill=lambda p, b: mod.prefill(p, cfg, b["tokens"]),
+        decode=lambda p, tok, cache: mod.decode_step(p, cfg, tok, cache),
+        init_cache=lambda batch, max_len=0, **kw: mod.init_cache(cfg, batch, max_len, **kw),
+        cache_axes=mod.cache_axes,
+    )
+
+
+def _griffin_model(cfg: ModelConfig) -> Model:
+    m = _simple_model(cfg, griffin)
+    return dataclasses.replace(m, cache_axes=lambda: griffin.cache_axes(cfg))
+
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: encdec.init_params(cfg, key),
+        param_axes=lambda: encdec.param_axes(cfg),
+        loss=lambda p, b: encdec.loss_fn(p, cfg, b),
+        prefill=lambda p, b: encdec.prefill(p, cfg, b),
+        decode=lambda p, tok, cache: encdec.decode_step(p, cfg, tok, cache),
+        init_cache=lambda batch, max_len, enc_len=4096, **kw: encdec.init_cache(
+            cfg, batch, max_len, enc_len, **kw),
+        cache_axes=encdec.cache_axes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+ENC_MEMORY_LEN = 4096   # stub encoder length for enc-dec decode cells
+
+
+def input_specs(cfg: ModelConfig, shape_kind: str, seq: int, batch: int
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (specs, logical_axes) for one dry-run cell.
+
+    ``specs`` mirrors the step function's batch argument; every leaf is a
+    ``jax.ShapeDtypeStruct``.
+    """
+    i32 = jnp.int32
+    bf16 = cfg.dtype
+    S = jax.ShapeDtypeStruct
+
+    if shape_kind == "train":
+        if cfg.family == "encdec":
+            dec = max(seq // 8, 128)
+            specs = {"frames": S((batch, seq, cfg.d_model), bf16),
+                     "tokens": S((batch, dec), i32),
+                     "labels": S((batch, dec), i32)}
+            axes = {"frames": ("batch", "seq", "embed"),
+                    "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        elif cfg.frontend != "none":
+            f = cfg.frontend_tokens
+            specs = {"tokens": S((batch, seq - f), i32),
+                     "labels": S((batch, seq), i32),
+                     "frontend_embeds": S((batch, f, cfg.d_model), bf16)}
+            axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+                    "frontend_embeds": ("batch", "seq", "embed")}
+        else:
+            specs = {"tokens": S((batch, seq), i32), "labels": S((batch, seq), i32)}
+            axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return specs, axes
+
+    if shape_kind == "prefill":
+        if cfg.family == "encdec":
+            specs = {"frames": S((batch, seq, cfg.d_model), bf16),
+                     "tokens": S((batch, 1), i32)}
+            axes = {"frames": ("batch", "seq", "embed"), "tokens": ("batch", "seq")}
+        elif cfg.frontend != "none":
+            f = cfg.frontend_tokens
+            specs = {"tokens": S((batch, seq - f), i32),
+                     "frontend_embeds": S((batch, f, cfg.d_model), bf16)}
+            axes = {"tokens": ("batch", "seq"),
+                    "frontend_embeds": ("batch", "seq", "embed")}
+        else:
+            specs = {"tokens": S((batch, seq), i32)}
+            axes = {"tokens": ("batch", "seq")}
+        return specs, axes
+
+    if shape_kind == "decode":
+        model = get_model(cfg)
+        if cfg.family == "encdec":
+            cache = jax.eval_shape(lambda: model.init_cache(batch, seq, enc_len=ENC_MEMORY_LEN))
+        else:
+            cache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+        cache_axes = model.cache_axes()
+        specs = {"token": S((batch,), i32), "cache": cache}
+        axes = {"token": ("batch",), "cache": cache_axes}
+        return specs, axes
+
+    raise ValueError(f"unknown shape kind {shape_kind!r}")

@@ -1,0 +1,250 @@
+"""Shared model substrate: config schema, normed layers, RoPE, embeddings,
+and logical-axis annotations used by the sharding layer.
+
+Models are pure-functional JAX: ``init_*`` builds a params pytree of
+``jnp`` arrays; a parallel *axes* pytree (same structure, tuples of logical
+axis names) feeds ``distributed/sharding.py``, which maps logical axes onto
+the production mesh with divisibility fallbacks.
+
+Layer parameters are **stacked** along a leading ``layers`` axis and the
+forward passes scan over them (``jax.lax.scan``) so the lowered HLO stays
+compact even for 60-layer configs — essential for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention (0/None where attention-free)
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_window: int = 0             # 0 = full causal; >0 = local windowed
+    # mlp
+    d_ff: int = 0
+    activation: str = "silu"         # silu (swiglu) | gelu (geglu)
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden (granite: 512)
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # hybrid (recurrentgemma): repeating layer pattern, e.g. ("rec","rec","attn")
+    layer_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0
+    # encoder-decoder
+    num_encoder_layers: int = 0
+    cross_attention: bool = False
+    # modality frontend stub
+    frontend: str = "none"           # none | vision | audio
+    frontend_tokens: int = 0         # patches / frames consumed per example
+    # numerics / serving
+    dtype: Any = jnp.bfloat16
+    block_size: int = 32             # KV page size (tokens)
+    tie_embeddings: bool = True
+    embed_scale: bool = False        # gemma-style sqrt(d_model) input scale
+    norm_eps: float = 1e-6
+    # attention impl knobs (perf levers; defaults are the faithful baseline)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    attn_wedge: bool = False         # exact-causal unrolled flash (see models/flash.py)
+    flash_threshold: int = 1024      # use chunked flash above this seq length
+    moe_sparse_dispatch: bool = False  # gather-based top-1 (serving-scale only)
+    moe_dispatch: str = "dense"      # dense (paper-faithful baseline) | gshard
+    moe_capacity_factor: float = 1.25
+    remat: str = "none"              # none | full | dots — scan-body checkpointing
+    tp_reduce_bf16: bool = False     # emit TP partial-sum reductions in bf16
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(1, self.num_kv_heads)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid-with-bounded-window)."""
+        return self.family == "ssm" or (self.family == "hybrid" and self.attn_window > 0)
+
+    def kv_bytes_per_token(self) -> int:
+        """KV-cache bytes per token (what the P->D transfer moves)."""
+        itemsize = jnp.dtype(self.dtype).itemsize
+        if self.family == "ssm":
+            # SSD state is per-request, not per-token; report amortized 0.
+            return 0
+        n_attn = self.num_attention_layers()
+        return 2 * n_attn * self.num_kv_heads * self.head_dim * itemsize
+
+    def num_attention_layers(self) -> int:
+        if self.family == "ssm":
+            return 0
+        if self.family == "hybrid" and self.layer_pattern:
+            pat = self.layer_pattern
+            full, rem = divmod(self.num_layers, len(pat))
+            return full * sum(1 for t in pat if t == "attn") + sum(
+                1 for t in pat[:rem] if t == "attn")
+        return self.num_layers
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, v = self.d_model, self.vocab_size
+        emb = v * d
+        if self.family == "ssm":
+            di, n, h = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            per = d * (2 * di + 2 * n + h) + di * d + di + h  # in/x/B/C/dt proj + out
+            return emb + self.num_layers * per
+        attn = d * self.num_heads * self.head_dim + 2 * d * self.num_kv_heads * self.head_dim \
+            + self.num_heads * self.head_dim * d
+        if self.family == "moe":
+            ff = self.num_experts * 3 * d * (self.moe_d_ff or self.d_ff) + d * self.num_experts
+        else:
+            ff = 3 * d * self.d_ff
+        per = attn + ff
+        n_layers = self.num_layers
+        if self.family == "hybrid":
+            rec = 3 * d * self.lru_width + 2 * self.lru_width  # coarse RG-LRU block
+            n_attn = self.num_attention_layers()
+            return emb + n_attn * per + (self.num_layers - n_attn) * (rec + 3 * d * self.d_ff)
+        if self.family == "encdec":
+            cross = d * self.num_heads * self.head_dim * 2 + 2 * d * self.num_kv_heads * self.head_dim
+            return emb + self.num_encoder_layers * per + n_layers * (per + cross)
+        return emb + n_layers * per
+
+    def active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.family != "moe":
+            return self.num_params()
+        d = self.d_model
+        dense_share = self.num_params() - self.num_layers * (
+            self.num_experts * 3 * d * (self.moe_d_ff or self.d_ff))
+        return dense_share + self.num_layers * self.top_k * 3 * d * (self.moe_d_ff or self.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take explicit keys; stacked over layers where noted)
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype, scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * s).astype(dtype)
+
+
+def stacked_dense_init(key: jax.Array, layers: int, shape: Tuple[int, ...], dtype,
+                       scale: Optional[float] = None) -> jax.Array:
+    return dense_init(key, (layers, *shape), dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# Normalization / positional encodings
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed(tokens: jax.Array, table: jax.Array, scale: bool = False) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    if scale:  # gemma-style sqrt(d) embedding scale
+        out = out * jnp.asarray(out.shape[-1] ** 0.5, out.dtype)
+    return out
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL. logits (..., vocab) fp32; labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Param-tree helpers
+# ---------------------------------------------------------------------------
+def maybe_remat(body, cfg: "ModelConfig"):
+    """Wrap a scan body with activation checkpointing per cfg.remat.
+
+    ``full`` recomputes the whole layer in backward (save only carries);
+    ``dots`` saves matmul outputs (jax checkpoint_dots policy) — the usual
+    sweet spot on TPU where recomputing attention is cheap but recomputing
+    big GEMMs is not.
+    """
+    if cfg.remat == "full":
+        return jax.checkpoint(body)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return body
+
+
+def count_params(params: Dict[str, Any]) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def cast_params(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                        params)

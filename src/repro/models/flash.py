@@ -1,0 +1,211 @@
+"""Chunked (flash-style) attention in pure jnp.
+
+Materializing (S, T) score matrices at 32k context would need hundreds of
+GB per device, so every full-sequence attention in this repo goes through
+this module: queries are processed in chunks with an online-softmax
+accumulator over key/value chunks. Two variants:
+
+* ``flash_attention(..., wedge=False)`` — baseline: scan over ALL kv chunks
+  with causal masking (computes the upper triangle and masks it; ~2x causal
+  FLOPs, fully scan-compact HLO).
+* ``flash_attention(..., wedge=True)``  — beyond-paper perf variant: the
+  query-chunk loop is unrolled in Python and each query chunk contracts only
+  against its causal prefix (exact causal FLOPs, HLO grows with S/chunk).
+
+* ``window > 0`` — local attention: each query chunk attends to a
+  statically-sized key window (window + q_chunk), giving O(S * window) work —
+  the sub-quadratic path required by recurrentgemma and long_500k.
+
+All variants are GQA-aware and accumulate in fp32. They are reverse-mode
+differentiable (scan + masking only, no while loops) so training uses the
+same code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _split_heads(q: jax.Array, kvh: int) -> jax.Array:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, kvh, h // kvh, d)
+
+
+def _chunk_attend(qg: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                  m_prev: jax.Array, l_prev: jax.Array, acc: jax.Array):
+    """One online-softmax accumulation step.
+
+    qg (B,Sq,KV,G,hd); k/v (B,Tc,KV,hd); mask (B,1,1,Sq,Tc) or (Sq,Tc)-broadcastable.
+    m/l (B,KV,G,Sq); acc (B,Sq,KV,G,hd).
+    """
+    hd = qg.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m_cur = jnp.max(scores, axis=-1)                          # (B,KV,G,Sq)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (all NEG_INF)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(scores - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    scale = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_new = l_prev * scale + p.sum(axis=-1)
+    pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = acc * jnp.transpose(scale, (0, 3, 1, 2))[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finalize(l: jax.Array, acc: jax.Array, dtype) -> jax.Array:
+    denom = jnp.maximum(jnp.transpose(l, (0, 3, 1, 2))[..., None], 1e-30)
+    out = acc / denom
+    b, s, kv, g, hd = out.shape
+    return out.reshape(b, s, kv * g, hd).astype(dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    q_offset: int = 0, wedge: bool = False,
+                    _mask_window: int = 0) -> jax.Array:
+    """q (B,S,H,hd); k,v (B,T,KV,hd) -> (B,S,H,hd).
+
+    ``q_offset``: global position of q[0] relative to k[0] (chunked prefill).
+    ``_mask_window``: internal — apply a window mask without the sliced-KV
+    local path (used when the sequence is shorter than the window span).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    if window > 0:
+        return _local_flash(q, k, v, window=window, q_chunk=q_chunk, q_offset=q_offset)
+    if wedge:
+        return _wedge_flash(q, k, v, causal=causal, q_chunk=q_chunk, q_offset=q_offset)
+
+    # pad S to a multiple of q_chunk
+    q_chunk = min(q_chunk, s)
+    pad_q = (-s) % q_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_chunk
+    kv_chunk = min(kv_chunk, t)
+    pad_k = (-t) % kv_chunk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nk = k.shape[1] // kv_chunk
+
+    qg = _split_heads(q, kvh).reshape(b, nq, q_chunk, kvh, h // kvh, hd)
+    qg = jnp.moveaxis(qg, 1, 0)                               # (nq,B,qc,KV,G,hd)
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kvh, hd), 1, 0)
+
+    qpos_base = jnp.arange(q_chunk)
+    kpos_base = jnp.arange(kv_chunk)
+
+    def q_body(_, qi_and_chunk):
+        qi, qc = qi_and_chunk
+        qpos = q_offset + qi * q_chunk + qpos_base            # (qc,)
+
+        def kv_body(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kc, vc = ki_and_kv
+            kpos = ki * kv_chunk + kpos_base
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            mask &= kpos[None, :] < t                         # padding
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if _mask_window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - _mask_window
+            m, l, acc = _chunk_attend(qc, kc, vc, mask[None, None, None], m, l, acc)
+            return (m, l, acc), None
+
+        g = h // kvh
+        init = (jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+                jnp.zeros((b, q_chunk, kvh, g, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (jnp.arange(nk), ks, vs))
+        return None, _finalize(l, acc, q.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :s]
+
+
+def _wedge_flash(q, k, v, *, causal: bool, q_chunk: int, q_offset: int):
+    """Unrolled causal wedge: each query chunk sees a statically-sized causal
+    prefix — exact causal FLOPs at the cost of HLO size O(S/q_chunk)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = min(q_chunk, s)
+    outs = []
+    for qi in range(0, s, q_chunk):
+        qc_len = min(q_chunk, s - qi)
+        qc = _split_heads(q[:, qi:qi + qc_len], kvh)
+        hi = min(t, q_offset + qi + qc_len) if causal else t
+        kc, vc = k[:, :hi], v[:, :hi]
+        qpos = q_offset + qi + jnp.arange(qc_len)
+        mask = jnp.ones((qc_len, hi), bool)
+        if causal:
+            mask &= jnp.arange(hi)[None, :] <= qpos[:, None]
+        m = jnp.full((b, kvh, g, qc_len), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kvh, g, qc_len), jnp.float32)
+        acc = jnp.zeros((b, qc_len, kvh, g, hd), jnp.float32)
+        m, l, acc = _chunk_attend(qc, kc, vc, mask[None, None, None], m, l, acc)
+        outs.append(_finalize(l, acc, q.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _local_flash(q, k, v, *, window: int, q_chunk: int, q_offset: int):
+    """Sliding-window causal attention, O(S * (window + q_chunk)).
+
+    Each query chunk attends to a static-size key slice
+    [chunk_start - window + 1, chunk_end) via dynamic_slice.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = min(q_chunk, s)
+    span = window + q_chunk                     # static key-slice size
+    if span >= t:
+        return flash_attention(q, k, v, causal=True, window=0,
+                               q_chunk=q_chunk, kv_chunk=max(128, min(1024, t)),
+                               q_offset=q_offset, _mask_window=window)
+    pad_q = (-s) % q_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_chunk
+    qg = jnp.moveaxis(_split_heads(q, kvh).reshape(b, nq, q_chunk, kvh, g, hd), 1, 0)
+    qpos_base = jnp.arange(q_chunk)
+    kpos_base = jnp.arange(span)
+
+    def q_body(_, qi_and_chunk):
+        qi, qc = qi_and_chunk
+        qstart = q_offset + qi * q_chunk
+        start = jnp.clip(qstart - window + 1, 0, t - span)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        qpos = qstart + qpos_base
+        kpos = start + kpos_base
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
+        m = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        acc = jnp.zeros((b, q_chunk, kvh, g, hd), jnp.float32)
+        m, l, acc = _chunk_attend(qc, kc, vc, mask[None, None, None], m, l, acc)
+        return None, _finalize(l, acc, q.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_jit(q, k, v, causal: bool = True, window: int = 0):
+    return flash_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,360 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU recurrent blocks +
+local (sliding-window) MQA attention in a repeating (rec, rec, attn) pattern.
+
+RG-LRU gate math (c = 8):
+
+    r_t = sigmoid(x_t W_a + b_a)          # recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)          # input gate
+    log a_t = -c * softplus(-Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(O(log S) depth); decode is the O(1) update. Local-attention layers keep a
+ring-buffer KV cache of ``attn_window`` slots — this is what bounds the
+long_500k cache and makes the arch sub-quadratic.
+
+The layer pattern is scanned by *group* (one (rec, rec, attn) triple per
+scan step) with the non-multiple tail unrolled, so HLO depth stays O(1) in
+layer count while preserving exact layer ordering.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mlp as MLPM
+from repro.models.common import (ModelConfig, dense_init, embed, maybe_remat,
+                                 rms_norm, softmax_cross_entropy, unembed)
+
+Params = Dict[str, Any]
+_C = 8.0   # RG-LRU gate sharpness constant
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _rec_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "norm": (d,), "w_gate": (d, w), "w_branch": (d, w), "conv": (4, w),
+        "w_a": (w, w), "b_a": (w,), "w_i": (w, w), "b_i": (w,),
+        "lam": (w,), "w_out": (w, d),
+    }
+
+
+def _rec_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "norm": ("embed",), "w_gate": ("embed", "lru"), "w_branch": ("embed", "lru"),
+        "conv": ("conv", "lru"), "w_a": ("lru_in", "lru"), "b_a": ("lru",),
+        "w_i": ("lru_in", "lru"), "b_i": ("lru",), "lam": ("lru",),
+        "w_out": ("lru", "embed"),
+    }
+
+
+def _mlp_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    return {"norm": (cfg.d_model,), **MLPM.mlp_param_shapes(cfg)}
+
+
+def _mlp_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {"norm": ("embed",), **MLPM.mlp_param_axes()}
+
+
+def _attn_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    return {"norm": (cfg.d_model,), **A.attn_param_shapes(cfg)}
+
+
+def _attn_axes(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {"norm": ("embed",), **A.attn_param_axes(cfg)}
+
+
+def _init_block(key, shapes: Dict[str, Tuple[int, ...]], cfg, stack: int = 0) -> Params:
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for (name, shape), k in zip(shapes.items(), keys):
+        full = (stack, *shape) if stack else shape
+        if name == "lam":
+            # init so that a = sigmoid(lam)^(c*r) lies in ~(0.9, 0.999)
+            out[name] = jnp.broadcast_to(jnp.asarray(4.0, jnp.float32), full).astype(jnp.float32)
+        elif name.startswith(("b_", "norm")):
+            out[name] = jnp.zeros(full, cfg.dtype if not name.startswith("b_") else jnp.float32)
+        else:
+            out[name] = dense_init(k, full, cfg.dtype)
+    return out
+
+
+def num_groups_and_tail(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(cfg.layer_pattern)
+    return cfg.num_layers // plen, cfg.num_layers % plen
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    assert cfg.layer_pattern == ("rec", "rec", "attn"), "griffin pattern fixed"
+    G, tail = num_groups_and_tail(cfg)
+    ks = jax.random.split(key, 12)
+    group = {
+        "rec0": _init_block(ks[0], _rec_shapes(cfg), cfg, stack=G),
+        "mlp0": _init_block(ks[1], _mlp_shapes(cfg), cfg, stack=G),
+        "rec1": _init_block(ks[2], _rec_shapes(cfg), cfg, stack=G),
+        "mlp1": _init_block(ks[3], _mlp_shapes(cfg), cfg, stack=G),
+        "attn": _init_block(ks[4], _attn_shapes(cfg), cfg, stack=G),
+        "mlp2": _init_block(ks[5], _mlp_shapes(cfg), cfg, stack=G),
+    }
+    params: Params = {
+        "embed": dense_init(ks[6], (cfg.vocab_size, cfg.d_model), cfg.dtype, 0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "groups": group,
+    }
+    for t in range(tail):   # tail layers are always "rec" for 26 = 8*3 + 2
+        params[f"tail_rec{t}"] = _init_block(ks[7 + 2 * t], _rec_shapes(cfg), cfg)
+        params[f"tail_mlp{t}"] = _init_block(ks[8 + 2 * t], _mlp_shapes(cfg), cfg)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    G, tail = num_groups_and_tail(cfg)
+
+    def stack_axes(ax):
+        return {k: ("groups", *v) for k, v in ax.items()}
+
+    axes: Params = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "groups": {
+            "rec0": stack_axes(_rec_axes()), "mlp0": stack_axes(_mlp_axes()),
+            "rec1": stack_axes(_rec_axes()), "mlp1": stack_axes(_mlp_axes()),
+            "attn": stack_axes(_attn_axes(cfg)), "mlp2": stack_axes(_mlp_axes()),
+        },
+    }
+    for t in range(tail):
+        axes[f"tail_rec{t}"] = _rec_axes()
+        axes[f"tail_mlp{t}"] = _mlp_axes()
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+def _rg_lru(bx: jax.Array, p: Params, h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """bx (B,S,W) -> (out (B,S,W), h_final (B,W)). Associative scan over S."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", bx, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"][None, None])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", bx, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"][None, None])
+    log_a = -_C * jax.nn.softplus(-p["lam"].astype(jnp.float32))[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * bx.astype(jnp.float32)
+    if bx.shape[1] == 1:   # decode fast path
+        h0v = jnp.zeros_like(gated[:, 0]) if h0 is None else h0
+        h = a[:, 0] * h0v + gated[:, 0]
+        return h[:, None].astype(bx.dtype), h
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_scan, h_scan = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h_scan = h_scan + a_scan * h0[:, None]
+    return h_scan.astype(bx.dtype), h_scan[:, -1]
+
+
+def _rec_block(cfg: ModelConfig, p: Params, x: jax.Array,
+               conv_state=None, h0=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_conv_state, h_final)."""
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, p["w_gate"]), approximate=True)
+    bx = jnp.einsum("bsd,dw->bsw", xn, p["w_branch"])
+    # causal depthwise conv (window 4), silu-free (griffin uses plain conv)
+    cw = p["conv"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], cw - 1, bx.shape[-1]), bx.dtype)
+    xx = jnp.concatenate([conv_state, bx], axis=1)
+    bx = sum(xx[:, i:i + bx.shape[1]] * p["conv"][i][None, None] for i in range(cw))
+    new_conv = xx[:, -(cw - 1):]
+    lru_out, h_final = _rg_lru(bx, p, h0)
+    out = jnp.einsum("bsw,wd->bsd", lru_out * gate, p["w_out"])
+    return x + out, new_conv, h_final
+
+
+def _mlp_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    return x + MLPM.gated_mlp({k: p[k] for k in ("w_gate", "w_up", "w_down")}, xn, "gelu")
+
+
+def _attn_block_train(cfg: ModelConfig, p: Params, x: jax.Array,
+                      positions: jax.Array) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    out, (k, v) = A.self_attention(p, xn, cfg, positions, window=cfg.attn_window)
+    return x + out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def _scan_groups(cfg: ModelConfig, params: Params, x: jax.Array, positions,
+                 collect_cache: bool):
+    def body(h, gp):
+        h, conv0, hf0 = _rec_block(cfg, gp["rec0"], h)
+        h = _mlp_block(cfg, gp["mlp0"], h)
+        h, conv1, hf1 = _rec_block(cfg, gp["rec1"], h)
+        h = _mlp_block(cfg, gp["mlp1"], h)
+        h, (k, v) = _attn_block_train(cfg, gp["attn"], h, positions)
+        h = _mlp_block(cfg, gp["mlp2"], h)
+        out = (conv0, hf0, conv1, hf1, k, v) if collect_cache else None
+        return h, out
+
+    fn = body if collect_cache else maybe_remat(body, cfg)
+    return jax.lax.scan(fn, x, params["groups"])
+
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  frontend_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _scan_groups(cfg, params, x, positions, collect_cache=False)
+    _, tail = num_groups_and_tail(cfg)
+    for t in range(tail):
+        x, _, _ = _rec_block(cfg, params[f"tail_rec{t}"], x)
+        x = _mlp_block(cfg, params[f"tail_mlp{t}"], x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits, _ = forward_train(params, cfg, batch["tokens"])
+    mask = batch.get("loss_mask")
+    return softmax_cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                                 None if mask is None else mask[:, 1:])
+
+
+def _ring_from_prefill(k: jax.Array, window: int) -> jax.Array:
+    """k (..., S, KV, hd) -> ring (..., W, KV, hd) with slot q%W = roped k[q]."""
+    s = k.shape[-3]
+    w = window
+    ring = jnp.zeros((*k.shape[:-3], w, *k.shape[-2:]), k.dtype)
+    if s >= w:
+        tail = k[..., s - w:, :, :]
+        slots = (jnp.arange(s - w, s)) % w
+        ring = ring.at[..., slots, :, :].set(tail)
+    else:
+        ring = ring.at[..., :s, :, :].set(k)
+    return ring
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frontend_embeds=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, outs = _scan_groups(cfg, params, x, positions, collect_cache=True)
+    conv0, hf0, conv1, hf1, ks, vs = outs
+    cache: Dict[str, jax.Array] = {
+        "g_conv0": conv0, "g_h0": hf0, "g_conv1": conv1, "g_h1": hf1,
+        "g_k": _ring_from_prefill(ks, cfg.attn_window),
+        "g_v": _ring_from_prefill(vs, cfg.attn_window),
+    }
+    _, tail = num_groups_and_tail(cfg)
+    for t in range(tail):
+        x, conv, hf = _rec_block(cfg, params[f"tail_rec{t}"], x)
+        x = _mlp_block(cfg, params[f"tail_mlp{t}"], x)
+        cache[f"t_conv{t}"] = conv
+        cache[f"t_h{t}"] = hf
+    cache["length"] = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"])[:, 0], cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None) -> Dict[str, jax.Array]:
+    del max_len   # bounded by window / state size
+    dtype = dtype or cfg.dtype
+    G, tail = num_groups_and_tail(cfg)
+    w, lru, cw = cfg.attn_window, cfg.lru_width, 4
+    cache = {
+        "g_conv0": jnp.zeros((G, batch, cw - 1, lru), dtype),
+        "g_h0": jnp.zeros((G, batch, lru), jnp.float32),
+        "g_conv1": jnp.zeros((G, batch, cw - 1, lru), dtype),
+        "g_h1": jnp.zeros((G, batch, lru), jnp.float32),
+        "g_k": jnp.zeros((G, batch, w, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "g_v": jnp.zeros((G, batch, w, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    for t in range(tail):
+        cache[f"t_conv{t}"] = jnp.zeros((batch, cw - 1, lru), dtype)
+        cache[f"t_h{t}"] = jnp.zeros((batch, lru), jnp.float32)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    _, tail = num_groups_and_tail(cfg)
+    axes = {
+        "g_conv0": ("groups", "batch", "conv", "lru"),
+        "g_h0": ("groups", "batch", "lru"),
+        "g_conv1": ("groups", "batch", "conv", "lru"),
+        "g_h1": ("groups", "batch", "lru"),
+        "g_k": ("groups", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "g_v": ("groups", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "length": ("batch",),
+    }
+    for t in range(tail):
+        axes[f"t_conv{t}"] = ("batch", "conv", "lru")
+        axes[f"t_h{t}"] = ("batch", "lru")
+    return axes
+
+
+def _ring_decode_attn(cfg: ModelConfig, p: Params, x: jax.Array,
+                      ring_k: jax.Array, ring_v: jax.Array, pos: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token local attention over a ring buffer of W slots.
+
+    x (B,1,D); ring_k/v (B,W,KV,hd); pos (B,) absolute position of the new
+    token. Slot s holds absolute position q = pos - ((pos - s) mod W).
+    """
+    w = ring_k.shape[1]
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = A.qkv_project(p, xn, cfg, pos[:, None])
+    slot = pos % w
+    b_idx = jnp.arange(x.shape[0])
+    ring_k = ring_k.at[b_idx, slot].set(k_new[:, 0])
+    ring_v = ring_v.at[b_idx, slot].set(v_new[:, 0])
+    s_idx = jnp.arange(w)[None, :]
+    qpos = pos[:, None]
+    slot_pos = qpos - jnp.mod(qpos - s_idx, w)
+    valid = slot_pos >= 0
+    mask = valid[:, None, None, None, :]
+    out = A.attend(q, ring_k, ring_v, mask)
+    return x + A.out_project(p, out), ring_k, ring_v
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(token[:, None], params["embed"], cfg.embed_scale)
+    pos = cache["length"]
+
+    def body(h, inp):
+        gp, c0, h0, c1, h1, rk, rv = inp
+        h, c0, h0 = _rec_block(cfg, gp["rec0"], h, conv_state=c0, h0=h0)
+        h = _mlp_block(cfg, gp["mlp0"], h)
+        h, c1, h1 = _rec_block(cfg, gp["rec1"], h, conv_state=c1, h0=h1)
+        h = _mlp_block(cfg, gp["mlp1"], h)
+        h, rk, rv = _ring_decode_attn(cfg, gp["attn"], h, rk, rv, pos)
+        h = _mlp_block(cfg, gp["mlp2"], h)
+        return h, (c0, h0, c1, h1, rk, rv)
+
+    x, (c0, h0, c1, h1, rk, rv) = jax.lax.scan(
+        body, x, (params["groups"], cache["g_conv0"], cache["g_h0"],
+                  cache["g_conv1"], cache["g_h1"], cache["g_k"], cache["g_v"]))
+    new_cache = {"g_conv0": c0, "g_h0": h0, "g_conv1": c1, "g_h1": h1,
+                 "g_k": rk, "g_v": rv}
+    _, tail = num_groups_and_tail(cfg)
+    for t in range(tail):
+        x, conv, hf = _rec_block(cfg, params[f"tail_rec{t}"], x,
+                                 conv_state=cache[f"t_conv{t}"], h0=cache[f"t_h{t}"])
+        x = _mlp_block(cfg, params[f"tail_mlp{t}"], x)
+        new_cache[f"t_conv{t}"] = conv
+        new_cache[f"t_h{t}"] = hf
+    new_cache["length"] = cache["length"] + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"])[:, 0], new_cache

@@ -1,0 +1,280 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD formulation: the sequence is split into chunks of Q tokens;
+within a chunk the output is a masked, decay-weighted "attention" matmul
+(MXU-friendly), and a recurrent state h (B, H, P, N) is carried across
+chunks with a ``lax.scan``. Decode is the O(1) recurrent update
+``h = a*h + B ⊗ x·dt; y = C·h``.
+
+Per layer (ngroups = 1, B/C shared across heads):
+
+    z, xs, Bm, Cm, dt = projections(u)
+    xs, Bm, Cm <- causal depthwise conv (window 4) + silu
+    dt = softplus(dt + dt_bias);  log a = -exp(A_log) * dt
+    y = SSD(log a, Bm, Cm, xs * dt) + D * xs
+    out = W_out @ rms_norm(y * silu(z))
+
+P -> D serving transfer for this family ships the (conv_state, h) pair —
+a single contiguous tensor per request, which FlowKV moves in one call
+(see DESIGN.md §4, ssm row).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, dense_init, embed, maybe_remat,
+                                 rms_norm, softmax_cross_entropy, unembed)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    L, d = cfg.num_layers, cfg.d_model
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 12)
+
+    def stack(k, shape, scale=None):
+        return dense_init(k, (L, *shape), cfg.dtype, scale)
+
+    layer = {
+        "w_z": stack(ks[0], (d, di)),
+        "w_x": stack(ks[1], (d, di)),
+        "w_B": stack(ks[2], (d, n)),
+        "w_C": stack(ks[3], (d, n)),
+        "w_dt": stack(ks[4], (d, h)),
+        "conv_x": stack(ks[5], (cw, di), scale=cw ** -0.5),
+        "conv_B": stack(ks[6], (cw, n), scale=cw ** -0.5),
+        "conv_C": stack(ks[7], (cw, n), scale=cw ** -0.5),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.linspace(1.0, 16.0, h), (L, h))).astype(jnp.float32),
+        "D": jnp.ones((L, h), cfg.dtype),
+        "dt_bias": jnp.zeros((L, h), jnp.float32),
+        "norm": jnp.zeros((L, di), cfg.dtype),
+        "w_out": stack(ks[8], (di, d)),
+        "norm_in": jnp.zeros((L, d), cfg.dtype),
+    }
+    return {
+        "embed": dense_init(ks[9], (cfg.vocab_size, d), cfg.dtype, 0.02),
+        "final_norm": jnp.zeros((d,), cfg.dtype),
+        "layers": layer,
+    }
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    lx = {
+        "w_z": ("layers", "embed", "inner"),
+        "w_x": ("layers", "embed", "inner"),
+        "w_B": ("layers", "embed", "state"),
+        "w_C": ("layers", "embed", "state"),
+        "w_dt": ("layers", "embed", "heads"),
+        "conv_x": ("layers", "conv", "inner"),
+        "conv_B": ("layers", "conv", "state"),
+        "conv_C": ("layers", "conv", "state"),
+        "A_log": ("layers", "heads"),
+        "D": ("layers", "heads"),
+        "dt_bias": ("layers", "heads"),
+        "norm": ("layers", "inner"),
+        "w_out": ("layers", "inner", "embed"),
+        "norm_in": ("layers", "embed"),
+    }
+    return {"embed": ("vocab", "embed"), "final_norm": ("embed",), "layers": lx}
+
+
+# ---------------------------------------------------------------------------
+# Pieces
+# ---------------------------------------------------------------------------
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,C), w (cw,C); state (B,cw-1,C) carries
+    the last cw-1 inputs across calls. Returns (out, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)          # (B, S+cw-1, C)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    new_state = xx[:, -(cw - 1):] if cw > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(log_a: jax.Array, Bm: jax.Array, Cm: jax.Array, xdt: jax.Array,
+                 h0: jax.Array, chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    log_a (B,S,H); Bm/Cm (B,S,N); xdt (B,S,H,P); h0 (B,H,P,N).
+    Returns (y (B,S,H,P), h_final).
+    """
+    b, s, H = log_a.shape
+    n = Bm.shape[-1]
+    p = xdt.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = log_a.shape[1] // chunk
+
+    def resh(x, trailing):
+        return jnp.moveaxis(x.reshape(b, nc, chunk, *trailing), 1, 0)
+
+    la_c = resh(log_a, (H,))          # (nc,B,Q,H)
+    B_c = resh(Bm, (n,))
+    C_c = resh(Cm, (n,))
+    x_c = resh(xdt, (H, p))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))          # s<=t (key idx, query idx)
+
+    def body(h, inp):
+        la, Bq, Cq, xq = inp                                  # (B,Q,H), (B,Q,N), (B,Q,H,P)
+        la = la.astype(jnp.float32)
+        cum = jnp.cumsum(la, axis=1)                          # (B,Q,H)
+        # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) (C_t . B_s) x_s
+        decay = cum[:, :, None, :] - cum[:, None, :, :]       # (B,T,S,H) t x s
+        decay = jnp.where(tri[None, :, :, None], decay, -jnp.inf)
+        gamma = jnp.exp(decay)                                # (B,T,S,H)
+        scores = jnp.einsum("btn,bsn->bts", Cq, Bq)           # (B,T,S)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp",
+                             scores.astype(jnp.float32), gamma,
+                             xq.astype(jnp.float32))
+        # inter-chunk: y[t] += exp(cum_t) * (C_t . h0)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cq.astype(jnp.float32),
+                             h, jnp.exp(cum))
+        # state update: h' = exp(cum_Q) h + sum_s exp(cum_Q - cum_s) B_s x_s
+        total = cum[:, -1]                                    # (B,H)
+        w = jnp.exp(total[:, None, :] - cum)                  # (B,Q,H)
+        h_new = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bsn,bshp,bsh->bhpn", Bq.astype(jnp.float32),
+            xq.astype(jnp.float32), w)
+        return h_new, (y_intra + y_inter)
+
+    h_final, ys = jax.lax.scan(body, h0.astype(jnp.float32), (la_c, B_c, C_c, x_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, H, p)[:, :s]
+    return y.astype(xdt.dtype), h_final
+
+
+def _layer(cfg: ModelConfig, lp: Params, u: jax.Array,
+           conv_state=None, h0=None) -> Tuple[jax.Array, Tuple[jax.Array, ...], jax.Array]:
+    """One mamba2 block on u (B,S,D). Returns (out, conv_states, h_final)."""
+    b, s, _ = u.shape
+    H, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x_res = u
+    u = rms_norm(u, lp["norm_in"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", u, lp["w_z"])
+    xs = jnp.einsum("bsd,de->bse", u, lp["w_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", u, lp["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", u, lp["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", u, lp["w_dt"]).astype(jnp.float32)
+
+    cs_x, cs_B, cs_C = conv_state if conv_state is not None else (None, None, None)
+    xs, cs_x = _causal_conv(xs, lp["conv_x"], cs_x)
+    Bm, cs_B = _causal_conv(Bm, lp["conv_B"], cs_B)
+    Cm, cs_C = _causal_conv(Cm, lp["conv_C"], cs_C)
+
+    dt = jax.nn.softplus(dt + lp["dt_bias"][None, None])
+    log_a = -jnp.exp(lp["A_log"].astype(jnp.float32))[None, None] * dt   # (B,S,H)
+    xh = xs.reshape(b, s, H, p)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, p, n), jnp.float32)
+    y, h_final = _ssd_chunked(log_a, Bm, Cm, xdt, h0, cfg.ssm_chunk)
+    y = y + lp["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, H * p)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    # TP note: w_out contracts the model-sharded inner dim -> partial sums
+    # all-reduced per layer. tp_reduce_bf16 emits the dot (and thus the AR)
+    # in bf16, halving per-layer collective bytes (§Perf iteration).
+    pet = cfg.dtype if cfg.tp_reduce_bf16 else None
+    out = jnp.einsum("bse,ed->bsd", y, lp["w_out"], preferred_element_type=pet)
+    return x_res + out.astype(x_res.dtype), (cs_x, cs_B, cs_C), h_final
+
+
+# ---------------------------------------------------------------------------
+# Entry points (same protocol as models/transformer.py)
+# ---------------------------------------------------------------------------
+def forward_train(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  frontend_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+
+    def body(h, lp):
+        h, _, _ = _layer(cfg, lp, h)
+        return h, None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits, _ = forward_train(params, cfg, batch["tokens"])
+    return softmax_cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                                 batch.get("loss_mask", None) if batch.get("loss_mask") is None
+                                 else batch["loss_mask"][:, 1:])
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frontend_embeds=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(tokens, params["embed"], cfg.embed_scale)
+
+    def body(h, lp):
+        h, conv, hf = _layer(cfg, lp, h)
+        return h, (conv, hf)
+
+    x, (convs, hs) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"])[:, 0]
+    cache = {
+        "conv_x": convs[0], "conv_B": convs[1], "conv_C": convs[2],  # (L,B,cw-1,*)
+        "h": hs,                                                      # (L,B,H,P,N)
+        "length": jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None) -> Dict[str, jax.Array]:
+    del max_len  # state size is O(1) in sequence length
+    dtype = dtype or cfg.dtype
+    L, cw = cfg.num_layers, cfg.ssm_conv
+    di, n, H, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv_x": jnp.zeros((L, batch, cw - 1, di), dtype),
+        "conv_B": jnp.zeros((L, batch, cw - 1, n), dtype),
+        "conv_C": jnp.zeros((L, batch, cw - 1, n), dtype),
+        "h": jnp.zeros((L, batch, H, p, n), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "conv_x": ("layers", "batch", "conv", "inner"),
+        "conv_B": ("layers", "batch", "conv", "state"),
+        "conv_C": ("layers", "batch", "conv", "state"),
+        "h": ("layers", "batch", "heads", "head_dim", "state"),
+        "length": ("batch",),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(token[:, None], params["embed"], cfg.embed_scale)
+
+    def body(h, inp):
+        lp, cx, cb, cc, hs = inp
+        h, (cx, cb, cc), hf = _layer(cfg, lp, h, conv_state=(cx, cb, cc), h0=hs)
+        return h, (cx, cb, cc, hf)
+
+    x, (cx, cb, cc, hs) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv_x"], cache["conv_B"],
+                  cache["conv_C"], cache["h"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"])[:, 0]
+    return logits, {"conv_x": cx, "conv_B": cb, "conv_C": cc, "h": hs,
+                    "length": cache["length"] + 1}

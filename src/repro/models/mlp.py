@@ -1,0 +1,38 @@
+"""Gated MLPs (SwiGLU / GeGLU) and the dense transformer block glue."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def mlp_param_shapes(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+
+
+def mlp_param_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def gated_mlp(p: Dict[str, jax.Array], x: jax.Array, activation: str) -> jax.Array:
+    """SwiGLU/GeGLU: down( act(x @ gate) * (x @ up) )."""
+    gate = _act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]), activation)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, p["w_down"])

@@ -1,0 +1,212 @@
+"""Mixture-of-Experts FFN with top-k routing and expert parallelism.
+
+Dispatch is dense (one-hot combine over the expert axis) — the standard
+pjit-friendly formulation: experts live sharded on the ``model`` mesh axis
+(granite: 32 experts / 16 shards; llama4: 16 / 16) and the einsum contraction
+over the expert axis lowers to local expert compute + reduce over the
+expert-parallel axis. An auxiliary load-balancing loss (Switch-style) is
+returned for training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def moe_param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_model
+    e = cfg.num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    return {
+        "router": (d, e),
+        "w_gate": (e, d, f),
+        "w_up": (e, d, f),
+        "w_down": (e, f, d),
+    }
+
+
+def moe_param_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
+
+
+def moe_ffn(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    k = cfg.top_k
+    top_p, top_idx = jax.lax.top_k(probs, k)                      # (B,S,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # combine weights as a dense (B,S,E) tensor: 0 off the top-k
+    combine = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None, None],
+        jnp.arange(probs.shape[1])[None, :, None],
+        top_idx,
+    ].set(top_p)
+
+    combine = combine.astype(x.dtype)                             # (B,S,E)
+    # expert compute — dense dispatch: every expert sees all tokens, result
+    # weighted by `combine`. Lowered under pjit this becomes expert-parallel
+    # local matmuls + a reduce over the expert axis shards.
+    gate = _act(jnp.einsum("bsd,edf->bsef", x, p["w_gate"]), cfg.activation)
+    up = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    expert_out = jnp.einsum("bsef,efd->bsed", gate * up, p["w_down"])
+    out = jnp.einsum("bsed,bse->bsd", expert_out, combine)
+
+    # Switch-style load-balance aux loss
+    density = combine.astype(jnp.float32).mean(axis=(0, 1))       # actual load
+    router_prob = probs.mean(axis=(0, 1))                         # router mass
+    aux = cfg.num_experts * jnp.sum(density * router_prob)
+    return out, aux
+
+
+def moe_ffn_gshard(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                   capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based gather/scatter dispatch (the §Perf optimized path).
+
+    Dense dispatch computes ALL experts for every token (E/top_k x FLOP and
+    HBM inflation). Here each expert processes at most
+    ``C = ceil(S * top_k * capacity_factor / E)`` tokens per sequence:
+    token slots are assigned by cumulative arrival order (Switch semantics;
+    overflow tokens fall back to the residual path), tokens are GATHERED
+    into per-expert buffers (B, E, C, D), and results SCATTER-ADD back —
+    all data movement is linear in tokens, no (B,S,E,F) intermediates.
+
+    Under pjit the E axis stays expert-parallel on the model mesh axis; the
+    gather/scatter cross the replicated S dim so XLA inserts one
+    all-reduce per layer instead of materializing dense expert outputs.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(s * k * capacity_factor / e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                        # (B,S,E)
+    top_p, top_idx = jax.lax.top_k(probs, k)                       # (B,S,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # arrival-order slot within each expert's capacity buffer
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)           # (B,S,k,E)
+    flat = onehot.reshape(b, s * k, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1                        # (B,S*k,E)
+    pos = jnp.where(flat > 0, pos_flat, 0).max(-1).reshape(b, s, k)
+    keep = pos < cap
+
+    b_idx = jnp.arange(b)[:, None, None]
+    # slot -> source token index / combine weight (B, E, C). Overflow tokens
+    # are routed to out-of-range slot `cap` and dropped by the scatter.
+    slot = jnp.where(keep, pos, cap)
+    slot_tok = jnp.zeros((b, e, cap), jnp.int32).at[
+        b_idx, top_idx, slot].set(
+        jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, k)),
+        mode="drop")
+    slot_w = jnp.zeros((b, e, cap), jnp.float32).at[
+        b_idx, top_idx, slot].set(top_p, mode="drop")
+
+    # gather tokens into per-expert buffers
+    xin = jnp.take_along_axis(x, slot_tok.reshape(b, e * cap)[..., None],
+                              axis=1).reshape(b, e, cap, d)
+    gate = _act(jnp.einsum("becd,edf->becf", xin, p["w_gate"]), cfg.activation)
+    up = jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", gate * up, p["w_down"])   # (B,E,C,D)
+    out_e = out_e * slot_w[..., None].astype(out_e.dtype)
+
+    # scatter-add back to token order
+    out = jnp.zeros((b, s, d), x.dtype).at[
+        b_idx[..., 0], slot_tok.reshape(b, e * cap)].add(
+        out_e.reshape(b, e * cap, d).astype(x.dtype))
+
+    density = onehot.astype(jnp.float32).sum(2).mean((0, 1))       # (E,)
+    aux = cfg.num_experts * jnp.sum(density / k * probs.mean((0, 1)))
+    return out, aux
+
+
+def moe_ffn_gshard_einsum(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                          capacity_factor: float = 1.25
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Mesh-TF/GShard one-hot EINSUM dispatch (§Perf optimized path, v2).
+
+    The gather/scatter variant above lowers poorly under SPMD (XLA expands
+    the scatters into one-hot dots anyway — measured 8x FLOP blowup, see
+    EXPERIMENTS.md §Perf iteration 1). This variant expresses dispatch as
+    explicit einsums against a (B, S, E, C) one-hot — the exact formulation
+    GShard/Switch ran on TPU:
+
+        dispatch cost ~ B*S*E_loc*C*D  per chip (two einsums)
+        expert cost   ~ B*E_loc*C*3*D*F
+        no (B, S, E, F) dense intermediate
+
+    Per-(token, expert) there is at most one top-k choice, so position and
+    combine weight collapse to (B, S, E) tensors before the one-hot.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(s * k * capacity_factor / e))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                        # (B,S,E)
+    top_p, top_idx = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    assigned = jax.nn.one_hot(top_idx, e, dtype=probs.dtype)       # (B,S,k,E)
+    gate_se = jnp.einsum("bske,bsk->bse", assigned, top_p)         # combine w
+    mask_se = assigned.sum(2)                                      # 0/1 (B,S,E)
+    # arrival-order position of each token within its expert buffer
+    pos = jnp.cumsum(mask_se, axis=1) * mask_se - 1.0              # (B,S,E)
+    keep = (pos >= 0) & (pos < cap)
+    pos_c = jax.nn.one_hot(jnp.where(keep, pos, cap).astype(jnp.int32),
+                           cap, dtype=x.dtype)                     # (B,S,E,C)
+    dispatch = pos_c * keep[..., None].astype(x.dtype)             # (B,S,E,C)
+    combine = dispatch * gate_se[..., None].astype(x.dtype)
+
+    xin = jnp.einsum("bsd,bsec->becd", x, dispatch)                # (B,E,C,D)
+    gate = _act(jnp.einsum("becd,edf->becf", xin, p["w_gate"]), cfg.activation)
+    up = jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", gate * up, p["w_down"])
+    out = jnp.einsum("becd,bsec->bsd", out_e, combine)
+
+    density = mask_se.mean((0, 1))
+    aux = cfg.num_experts * jnp.sum(density / k * probs.mean((0, 1)))
+    return out, aux
+
+
+def moe_ffn_topk_sparse(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Gather-based dispatch used when top_k == 1 (llama4-style).
+
+    For top-1 routing, dense dispatch wastes E× compute; gathering the single
+    expert's weights per token is the cheaper lowering on small E.
+    """
+    assert cfg.top_k == 1
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1)                              # (B,S)
+    gate_w = jnp.take(p["w_gate"], idx, axis=0)                   # (B,S,D,F)
+    up_w = jnp.take(p["w_up"], idx, axis=0)
+    down_w = jnp.take(p["w_down"], idx, axis=0)
+    gate = _act(jnp.einsum("bsd,bsdf->bsf", x, gate_w), cfg.activation)
+    up = jnp.einsum("bsd,bsdf->bsf", x, up_w)
+    out = jnp.einsum("bsf,bsfd->bsd", gate * up, down_w)
+    top_p = jnp.take_along_axis(probs, idx[..., None], axis=-1).astype(x.dtype)
+    out = out * top_p
+    density = jax.nn.one_hot(idx, cfg.num_experts).mean(axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(density * probs.mean(axis=(0, 1)))
+    return out, aux

@@ -1,0 +1,250 @@
+"""Checkpoint/restore for the serving cluster and training state.
+
+Serving: captures every node's pool array, block tables, queue contents and
+in-flight request lifecycle so a controller restart resumes mid-stream.
+Training: params/opt-state/step with atomic rename (crash-safe), plus
+``latest()`` discovery for resume-from-latest.
+
+Format: numpy ``.npz`` for arrays + msgpack for structure (both available
+offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import tempfile
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.serving.request import Request, RequestState, SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat npz helpers
+# ---------------------------------------------------------------------------
+def _flatten(tree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = prefix + "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                                for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            out[key] = arr
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix: str = ""):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = prefix + "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                                for p in path)
+        if key + "@bf16" in flat:
+            leaves.append(jnp.asarray(flat[key + "@bf16"], jnp.bfloat16))
+        else:
+            leaves.append(jnp.asarray(flat[key]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Request (de)serialization
+# ---------------------------------------------------------------------------
+def request_to_dict(r: Request) -> dict:
+    return {
+        "request_id": int(r.request_id),
+        "prompt_tokens": [int(t) for t in r.prompt_tokens],
+        "output_tokens": [int(t) for t in r.output_tokens],
+        "state": r.state.value,
+        "prefill_node": r.prefill_node,
+        "decode_node": r.decode_node,
+        "block_ids": [int(b) for b in r.block_ids],
+        "arrival_time": r.arrival_time,
+        "max_new_tokens": r.sampling.max_new_tokens,
+        "retries": r.retries,
+    }
+
+
+def request_from_dict(d: dict) -> Request:
+    r = Request(prompt_tokens=list(d["prompt_tokens"]),
+                sampling=SamplingParams(max_new_tokens=d["max_new_tokens"]),
+                request_id=d["request_id"], arrival_time=d["arrival_time"])
+    r.output_tokens = list(d["output_tokens"])
+    r.state = RequestState(d["state"])
+    r.prefill_node = d["prefill_node"]
+    r.decode_node = d["decode_node"]
+    r.block_ids = list(d["block_ids"])
+    r.retries = d["retries"]
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Serving cluster checkpoint
+# ---------------------------------------------------------------------------
+def cluster_state(cluster) -> dict:
+    nodes = {}
+    for nid, engine in cluster.engines.items():
+        sched = engine.scheduler
+        node = {
+            "role": cluster.controller.nodes[nid].role,
+            "alive": cluster.controller.nodes[nid].alive,
+            "queues": {
+                "prefill_waiting": [request_to_dict(r) for r in sched.prefill.waiting],
+                "prefill_running": [request_to_dict(r) for r in sched.prefill.running],
+                "sending": [request_to_dict(r) for r in sched.prefill.sending],
+                "decode_running": [request_to_dict(r) for r in sched.decode.running],
+                "decode_swapped": [request_to_dict(r) for r in sched.decode.swapped],
+            },
+            "block_table": {str(rid): [int(b) for b in engine.scheduler.bm.get(rid)]
+                            for rid in list(engine.scheduler.bm._table)},
+        }
+        nodes[str(nid)] = node
+    return {"clock": cluster.clock, "nodes": nodes,
+            "finished": [request_to_dict(r) for r in cluster.finished]}
+
+
+def save_cluster(cluster, path: str) -> None:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    meta = cluster_state(cluster)
+    _atomic_write_bytes(path / "meta.msgpack", msgpack.packb(meta))
+    arrays = {}
+    for nid, engine in cluster.engines.items():
+        if engine.paged:
+            arrays[f"pool_{nid}"] = np.asarray(engine.kv.pool.astype(jnp.float32))
+    _atomic_savez(path / "pools.npz", arrays)
+
+
+def load_cluster(cluster, path: str) -> dict:
+    """Restore pools + queues into an already-constructed cluster."""
+    path = pathlib.Path(path)
+    meta = msgpack.unpackb((path / "meta.msgpack").read_bytes(), strict_map_key=False)
+    pools = np.load(path / "pools.npz")
+    cluster.clock = meta["clock"]
+    for nid_s, node in meta["nodes"].items():
+        nid = int(nid_s)
+        engine = cluster.engines[nid]
+        if engine.paged and f"pool_{nid}" in pools:
+            engine.kv.pool = jnp.asarray(pools[f"pool_{nid}"], engine.kv.spec.dtype)
+        sched = engine.scheduler
+        sched.prefill.waiting.clear(); sched.prefill.running.clear()
+        sched.prefill.sending.clear(); sched.decode.running.clear()
+        bm = sched.bm
+        # rebuild the block table exactly (allocate the recorded ids)
+        for rid_s, blocks in node["block_table"].items():
+            bm._table[int(rid_s)] = list(blocks)
+            for b in blocks:
+                if isinstance(bm.allocator.__dict__.get("_free"), list):
+                    try:
+                        bm.allocator._free.remove(b)
+                        bm.allocator._allocated.add(b)
+                    except ValueError:
+                        pass
+        if hasattr(bm.allocator, "free_segments"):
+            _rebuild_segment_allocator(bm)
+        for qname, target in (("prefill_waiting", sched.prefill.waiting),
+                              ("prefill_running", sched.prefill.running),
+                              ("sending", sched.prefill.sending),
+                              ("decode_running", sched.decode.running),
+                              ("decode_swapped", sched.decode.swapped)):
+            for rd in node["queues"][qname]:
+                req = request_from_dict(rd)
+                if isinstance(target, list):
+                    target.append(req)
+                else:
+                    target.append(req)
+    cluster.finished = [request_from_dict(d) for d in meta["finished"]]
+    return meta
+
+
+def _rebuild_segment_allocator(bm) -> None:
+    """Reconstruct a SegmentAllocator's free heaps from the block table."""
+    from repro.core.allocator import SegmentAllocator
+    if not isinstance(bm.allocator, SegmentAllocator):
+        return
+    allocated = set()
+    for blocks in bm._table.values():
+        allocated.update(blocks)
+    fresh = SegmentAllocator(bm.num_blocks)
+    if allocated:
+        # carve out the allocated ids
+        fresh._allocated = set()
+        fresh._heaps.__init__()
+        fresh._by_start.clear(); fresh._by_end.clear()
+        free_runs = []
+        cur = None
+        for b in range(bm.num_blocks):
+            if b in allocated:
+                if cur is not None:
+                    free_runs.append((cur, b - cur))
+                    cur = None
+            else:
+                if cur is None:
+                    cur = b
+        if cur is not None:
+            free_runs.append((cur, bm.num_blocks - cur))
+        from repro.core.segments import Segment
+        for start, length in free_runs:
+            fresh._insert_free(Segment(start, length))
+        fresh._num_free = sum(l for _, l in free_runs)
+        fresh._allocated = set(allocated)
+    bm.allocator = fresh
+
+
+# ---------------------------------------------------------------------------
+# Training checkpoint (atomic, resume-from-latest)
+# ---------------------------------------------------------------------------
+def save_train_state(state, step: int, ckpt_dir: str) -> str:
+    d = pathlib.Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(state)
+    final = d / f"step_{step:08d}.npz"
+    _atomic_savez(final, flat)
+    return str(final)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    ckpts = sorted(d.glob("step_*.npz"))
+    return str(ckpts[-1]) if ckpts else None
+
+
+def load_train_state(template, path: str):
+    flat = dict(np.load(path))
+    return _unflatten_into(template, flat)
+
+
+# ---------------------------------------------------------------------------
+# atomic writes
+# ---------------------------------------------------------------------------
+def _atomic_write_bytes(path: pathlib.Path, data: bytes) -> None:
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _atomic_savez(path: pathlib.Path, arrays: Dict[str, np.ndarray]) -> None:
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

@@ -1,0 +1,155 @@
+"""Per-node inference engine: executes the hybrid scheduler's decisions with
+real JAX compute against the paged pool.
+
+Two request-state transports, per DESIGN.md §4:
+
+* paged KV path (transformer families) — prefill writes pages, decode
+  gathers pages into the dense cache format (reference path for the Pallas
+  paged-attention kernel) and appends the new token's K/V back to pages.
+* state path (ssm / hybrid / encdec) — the request's cache pytree is held
+  whole and shipped whole (one logical segment).
+
+The engine is deliberately synchronous and single-host-scale: the paper's
+*timing* claims are reproduced by ``sim/cluster_sim.py`` with calibrated
+cost models; this engine proves the *data path* is correct (disaggregated
+generation must be token-identical to monolithic generation — see
+tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_manager import BlockManager
+from repro.core.scheduler.hybrid_scheduler import HybridScheduler, ScheduleDecision
+from repro.models.api import Model, get_model
+from repro.models.common import ModelConfig
+from repro.serving.kv_cache import PagedKVCache, spec_for_model
+from repro.serving.request import Request, RequestState
+
+PAGED_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+class NodeEngine:
+    def __init__(self, node_id: int, cfg: ModelConfig, params,
+                 num_blocks: int = 256, allocator: str = "flowkv",
+                 max_batch_tokens: int = 2048, max_model_len: int = 512):
+        self.node_id = node_id
+        self.cfg = cfg
+        self.model: Model = get_model(cfg)
+        self.params = params
+        self.max_model_len = max_model_len
+        self.paged = cfg.family in PAGED_FAMILIES
+        if self.paged:
+            self.kv = PagedKVCache(spec_for_model(cfg, num_blocks), allocator)
+            bm = self.kv.bm
+        else:
+            # state path: block manager still gates admission (token budget),
+            # but state lives in a per-request pytree store.
+            self.kv = None
+            bm = BlockManager(num_blocks, cfg.block_size, allocator)
+        self.states: Dict[int, Any] = {}        # request_id -> cache pytree (state path)
+        self.scheduler = HybridScheduler(node_id, bm,
+                                         max_batch_tokens=max_batch_tokens)
+
+    # -- prefill ------------------------------------------------------------------
+    def run_prefill(self, decision: ScheduleDecision) -> List[Request]:
+        """Execute the prefill batch; returns requests that finished prefill."""
+        done: List[Request] = []
+        for req in decision.prefill_batch:   # simple per-request prefill (no padding waste)
+            tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
+            logits, cache = self.model.prefill(self.params, {"tokens": tokens})
+            first = int(jnp.argmax(logits[0]))
+            req.output_tokens.append(first)
+            if self.paged:
+                k = cache["k"][:, 0]
+                v = cache["v"][:, 0]
+                self.kv.write_prefill(req.request_id, k, v, req.prompt_len)
+            else:
+                self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
+            if self.scheduler.prefill_progressed(req, req.prompt_len):
+                done.append(req)
+        self.scheduler.last_compute_util = 1.0 if decision.prefill_batch else 0.0
+        return done
+
+    # -- decode --------------------------------------------------------------------
+    def run_decode(self, decision: ScheduleDecision) -> List[Request]:
+        """One decode step for the running batch; returns finished requests."""
+        batch = decision.decode_batch
+        if not batch:
+            return []
+        finished: List[Request] = []
+        if self.paged:
+            self._decode_paged(batch)
+        else:
+            self._decode_state(batch)
+        for req in batch:
+            last = req.output_tokens[-1]
+            eos = req.sampling.eos_token_id
+            if req.num_output >= req.sampling.max_new_tokens or (eos is not None and last == eos):
+                finished.append(req)
+                if not self.paged:
+                    self.states.pop(req.request_id, None)
+                self.scheduler.decode_finished(req)
+        self.scheduler.last_bandwidth_util = 1.0
+        return finished
+
+    def _decode_paged(self, batch: List[Request]) -> None:
+        max_len = max(r.total_len for r in batch) + 1
+        ks, vs, lens, toks = [], [], [], []
+        for r in batch:
+            k, v = self.kv.gather_dense(r.request_id, max_len)
+            ks.append(k); vs.append(v)
+            # KV stored so far = prompt + all outputs except the newest token,
+            # whose KV is written by THIS decode step at position total-1.
+            lens.append(r.total_len - 1)
+            toks.append(r.output_tokens[-1])
+        cache = {
+            "k": jnp.stack(ks, axis=1),            # (L, B, T, KV, hd)
+            "v": jnp.stack(vs, axis=1),
+            "length": jnp.asarray(lens, jnp.int32),
+        }
+        logits, new_cache = self.model.decode(
+            self.params, jnp.asarray(toks, jnp.int32), cache)
+        nxt = jnp.argmax(logits, axis=-1)
+        for i, r in enumerate(batch):
+            pos = lens[i]
+            k_new = new_cache["k"][:, i, pos]
+            v_new = new_cache["v"][:, i, pos]
+            self.kv.append_token(r.request_id, k_new, v_new, pos)
+            r.output_tokens.append(int(nxt[i]))
+
+    def _decode_state(self, batch: List[Request]) -> None:
+        for r in batch:   # state caches are per-request pytrees
+            cache = self.states[r.request_id]
+            logits, cache = self.model.decode(
+                self.params, jnp.asarray([r.output_tokens[-1]], jnp.int32), cache)
+            self.states[r.request_id] = cache
+            r.output_tokens.append(int(jnp.argmax(logits[0])))
+
+    # -- transfer hooks (used by the cluster runtime) -----------------------------------
+    def export_state(self, req: Request):
+        """State-path transfer payload (shipped whole, one segment)."""
+        return self.states.pop(req.request_id)
+
+    def import_state(self, req: Request, state) -> None:
+        self.states[req.request_id] = state
+
+    def register_transfer_in(self, req: Request, num_tokens: int) -> List[int]:
+        """Destination-side block registration ahead of a paged transfer."""
+        return self.scheduler.bm.register(req.request_id, num_tokens)
+
+    # -- cycle -----------------------------------------------------------------------
+    def step(self) -> Tuple[List[Request], List[Request]]:
+        """One scheduling cycle. Returns (prefill_done, decode_finished)."""
+        decision = self.scheduler.schedule()
+        pre = self.run_prefill(decision) if decision.prefill_batch else []
+        fin = self.run_decode(decision) if decision.decode_batch else []
+        if not decision.prefill_batch:
+            self.scheduler.last_compute_util = 0.0
+        if not decision.decode_batch:
+            self.scheduler.last_bandwidth_util = 0.0
+        return pre, fin

@@ -1,0 +1,116 @@
+"""Device-side paged KV cache in the FlowKV block-major layout.
+
+The pool is ONE array ``(num_blocks, L, 2, payload)`` (paper Eq. 5) so a
+request's KV for all layers lives in its blocks contiguously — the transfer
+engine moves whole block ranges with single calls. The control plane
+(which blocks belong to whom) is ``core.block_manager.BlockManager``.
+
+``write_prefill`` / ``gather_dense`` / ``append_token`` bridge between the
+model's dense cache format (L, S, KV, hd) and pages. On TPU the decode-time
+gather is replaced by ``kernels/paged_attention`` reading pages in place;
+the dense bridge here is the reference data path (and the oracle the kernel
+is tested against).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_manager import BlockManager
+from repro.core.layout import KVCacheSpec, KVLayout, alloc_cache
+from repro.models.common import ModelConfig
+
+
+def spec_for_model(cfg: ModelConfig, num_blocks: int,
+                   layout: KVLayout = KVLayout.FLOWKV) -> KVCacheSpec:
+    return KVCacheSpec(
+        num_layers=cfg.num_attention_layers() or cfg.num_layers,
+        num_blocks=num_blocks,
+        block_size=cfg.block_size,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        dtype=cfg.dtype,
+        layout=layout,
+    )
+
+
+class PagedKVCache:
+    """One node's paged pool + block manager."""
+
+    def __init__(self, spec: KVCacheSpec, allocator: str = "flowkv"):
+        self.spec = spec
+        self.pool = alloc_cache(spec)
+        self.bm = BlockManager(spec.num_blocks, spec.block_size, allocator)
+
+    # -- write path -------------------------------------------------------------
+    def write_prefill(self, request_id: int, k: jax.Array, v: jax.Array,
+                      length: int) -> List[int]:
+        """Store a request's prefill KV. k/v: (L, S, KV, hd), S >= length.
+
+        Blocks must already be allocated (scheduler does it at admission).
+        """
+        spec = self.spec
+        blocks = self.bm.get(request_id)
+        nb = spec.blocks_for_tokens(length)
+        assert nb <= len(blocks), (nb, len(blocks))
+        pad = nb * spec.block_size - length
+        k = k[:, :length]
+        v = v[:, :length]
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = spec.num_layers
+        # (L, nb, bs, KV, hd) -> (nb, L, bs*KV*hd)
+        kp = k.reshape(L, nb, spec.block_size, -1).transpose(1, 0, 2, 3).reshape(nb, L, -1)
+        vp = v.reshape(L, nb, spec.block_size, -1).transpose(1, 0, 2, 3).reshape(nb, L, -1)
+        idx = jnp.asarray(blocks[:nb], jnp.int32)
+        self.pool = self.pool.at[idx, :, 0].set(kp.astype(spec.dtype))
+        self.pool = self.pool.at[idx, :, 1].set(vp.astype(spec.dtype))
+        return blocks[:nb]
+
+    def append_token(self, request_id: int, k_new: jax.Array, v_new: jax.Array,
+                     position: int) -> None:
+        """Write one token's K/V (L, KV, hd) at absolute position."""
+        spec = self.spec
+        blocks = self.bm.get(request_id)
+        block = blocks[position // spec.block_size]
+        slot = position % spec.block_size
+        L = spec.num_layers
+        pv = self.pool[block].reshape(L, 2, spec.block_size, -1)
+        pv = pv.at[:, 0, slot].set(k_new.reshape(L, -1).astype(spec.dtype))
+        pv = pv.at[:, 1, slot].set(v_new.reshape(L, -1).astype(spec.dtype))
+        self.pool = self.pool.at[block].set(pv.reshape(L, 2, -1))
+
+    # -- read path ---------------------------------------------------------------
+    def gather_dense(self, request_id: int, max_len: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Rebuild (L, max_len, KV, hd) dense K/V from pages (reference path)."""
+        spec = self.spec
+        blocks = self.bm.get(request_id)
+        idx = jnp.asarray(blocks, jnp.int32)
+        pages = jnp.take(self.pool, idx, axis=0)          # (nb, L, 2, payload)
+        nb = pages.shape[0]
+        L = spec.num_layers
+        pages = pages.reshape(nb, L, 2, spec.block_size, spec.num_kv_heads, spec.head_dim)
+        k = pages[:, :, 0].transpose(1, 0, 2, 3, 4).reshape(L, nb * spec.block_size,
+                                                            spec.num_kv_heads, spec.head_dim)
+        v = pages[:, :, 1].transpose(1, 0, 2, 3, 4).reshape(L, nb * spec.block_size,
+                                                            spec.num_kv_heads, spec.head_dim)
+        cur = k.shape[1]
+        if cur < max_len:
+            k = jnp.pad(k, ((0, 0), (0, max_len - cur), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, max_len - cur), (0, 0), (0, 0)))
+        return k[:, :max_len], v[:, :max_len]
+
+    # -- capacity / bookkeeping -----------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        return self.bm.utilization
+
+    def free(self, request_id: int) -> None:
+        self.bm.free(request_id)
+
+    def check_invariants(self) -> None:
+        self.bm.check_invariants()

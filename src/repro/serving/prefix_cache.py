@@ -1,0 +1,72 @@
+"""Global prefix-cache index (paper §3.2: the controller "identifies global
+cache prefix matches to boost throughput and reduce KV Cache transfer
+latency").
+
+Prefixes are tracked at block granularity: a chain of rolling hashes, one per
+full block of tokens, per node. The controller queries the index when routing
+a prefill request; a hit lets the target node skip recomputing the matched
+prefix (``Request.num_cached_prefix_tokens``).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Sequence, Tuple
+
+
+def _block_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Rolling per-block hash chain: hash(i) covers tokens[0 : (i+1)*block)."""
+    hashes: List[int] = []
+    h = 0
+    for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+        h = hash((h, tuple(tokens[i:i + block_size])))
+        hashes.append(h)
+    return hashes
+
+
+class PrefixCacheIndex:
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        # node_id -> set of block-chain hashes resident on that node
+        self._node_hashes: Dict[int, set[int]] = collections.defaultdict(set)
+        # hash -> ref count across nodes (for stats)
+        self._refcount: collections.Counter = collections.Counter()
+
+    # -- updates ------------------------------------------------------------------
+    def insert(self, node_id: int, tokens: Sequence[int]) -> None:
+        for h in _block_hashes(tokens, self.block_size):
+            if h not in self._node_hashes[node_id]:
+                self._node_hashes[node_id].add(h)
+                self._refcount[h] += 1
+
+    def evict_node(self, node_id: int) -> None:
+        for h in self._node_hashes.pop(node_id, set()):
+            self._refcount[h] -= 1
+            if self._refcount[h] <= 0:
+                del self._refcount[h]
+
+    # -- queries ------------------------------------------------------------------
+    def match(self, node_id: int, tokens: Sequence[int]) -> int:
+        """Longest cached prefix (in tokens) resident on ``node_id``."""
+        resident = self._node_hashes.get(node_id)
+        if not resident:
+            return 0
+        matched = 0
+        for h in _block_hashes(tokens, self.block_size):
+            if h in resident:
+                matched += self.block_size
+            else:
+                break
+        return matched
+
+    def best_nodes(self, tokens: Sequence[int]) -> List[Tuple[int, int]]:
+        """(node_id, matched_tokens) sorted by match length, desc."""
+        out = [(nid, self.match(nid, tokens)) for nid in self._node_hashes]
+        out.sort(key=lambda t: -t[1])
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "nodes": len(self._node_hashes),
+            "unique_prefixes": len(self._refcount),
+            "total_entries": sum(len(s) for s in self._node_hashes.values()),
+        }

@@ -1,0 +1,128 @@
+"""Request lifecycle for the PD-disaggregated serving runtime.
+
+FlowKV extends the usual vLLM state machine with a SENDING stage (paper
+App. B.2): requests that finished prefill and are waiting for their KV cache
+to reach the decode node sit in the sending queue, and the sending-queue
+length is one of the load-score features.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional, Sequence
+
+_req_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"          # queued, not yet scheduled for prefill
+    PREFILLING = "prefilling"    # running prefill on a P-role scheduler
+    SENDING = "sending"          # prefill done; KV cache transfer in flight
+    DECODING = "decoding"        # running decode on a D-role scheduler
+    SWAPPED = "swapped"          # preempted, KV swapped out
+    FINISHED = "finished"
+    FAILED = "failed"            # node died; will be requeued by the controller
+
+# States that occupy KV blocks on some node.
+LIVE_STATES = (RequestState.PREFILLING, RequestState.SENDING,
+               RequestState.DECODING, RequestState.SWAPPED)
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    max_new_tokens: int = 256
+    temperature: float = 0.0
+    top_k: int = 1
+    eos_token_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_tokens: List[int]
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    arrival_time: float = 0.0
+
+    # --- mutable lifecycle state ---------------------------------------------
+    state: RequestState = RequestState.WAITING
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    prefill_node: Optional[int] = None
+    decode_node: Optional[int] = None
+    block_ids: List[int] = dataclasses.field(default_factory=list)   # on current node
+    num_cached_prefix_tokens: int = 0   # prefix-cache hit length (skipped compute)
+
+    # --- timing (set by engine / simulator clocks) ----------------------------
+    prefill_start: Optional[float] = None
+    prefill_end: Optional[float] = None
+    transfer_start: Optional[float] = None
+    transfer_end: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    retries: int = 0
+
+    # -- derived ----------------------------------------------------------------
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def num_output(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.num_output
+
+    def num_blocks(self, block_size: int) -> int:
+        return -(-self.total_len // block_size)
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    # -- metrics ------------------------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def tpot(self) -> Optional[float]:
+        """Time per output token, excluding the first (paper's TPOT)."""
+        if self.finish_time is None or self.first_token_time is None or self.num_output < 2:
+            return None
+        return (self.finish_time - self.first_token_time) / (self.num_output - 1)
+
+    def transfer_latency(self) -> Optional[float]:
+        if self.transfer_start is None or self.transfer_end is None:
+            return None
+        return self.transfer_end - self.transfer_start
+
+    def reset_for_retry(self) -> None:
+        """Return the request to WAITING after a node failure (fault path)."""
+        self.state = RequestState.WAITING
+        self.output_tokens.clear()
+        self.block_ids = []
+        self.prefill_node = None
+        self.decode_node = None
+        self.prefill_start = self.prefill_end = None
+        self.transfer_start = self.transfer_end = None
+        self.first_token_time = None
+        self.retries += 1
+
+
+def make_batch(prompts: Sequence[Sequence[int]], arrival_times: Optional[Sequence[float]] = None,
+               max_new_tokens: int = 256) -> List[Request]:
+    out = []
+    for i, p in enumerate(prompts):
+        out.append(Request(
+            prompt_tokens=list(p),
+            sampling=SamplingParams(max_new_tokens=max_new_tokens),
+            arrival_time=0.0 if arrival_times is None else float(arrival_times[i]),
+        ))
+    return out

@@ -1,0 +1,305 @@
+"""Discrete-event PD-cluster simulator.
+
+The control plane is REAL: each simulated node owns an actual
+``HybridScheduler`` + ``BlockManager`` (segment or freelist allocator), and
+the global controller is the actual ``GlobalController``. Only the data
+plane is virtual — step durations come from the hardware cost models and
+transfer latencies from the exact ``TransferPlanner`` call counts over the
+Table-3-calibrated transport profiles. This is what lets the simulator
+reproduce the paper's throughput tables while exercising the same scheduler
+code the CPU-scale runtime runs.
+
+``SystemKind`` encodes the paper's comparison set:
+
+  flowkv        — segment allocator, aligned transfer, load-aware scheduling
+  vllm_disagg   — freelist allocator, per-layer buffer-merge transfer,
+                  fixed roles, least-loaded routing
+  mooncake      — freelist, RDMA-profile transfer (no NIC-direct VRAM)
+  distserve     — fixed roles, NO chunked prefill (one prefill at a time)
+  vllm_colocated— single-instance P+D with chunked prefill interference
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.scheduler.global_controller import (GlobalController, ModelCost,
+                                                    NodeHandle)
+from repro.core.scheduler.hybrid_scheduler import HybridScheduler
+from repro.core.block_manager import BlockManager
+from repro.core.costmodel import (MOONCAKE_RDMA, NCCL_ENI, IPC,
+                                  VLLM_MERGE_ENI, VLLM_MERGE_INTRA,
+                                  TransportProfile, select_route)
+from repro.core.layout import KVCacheSpec
+from repro.core.transfer import TransferPlanner
+from repro.models.common import ModelConfig
+from repro.serving.request import Request, RequestState
+from repro.sim.events import EventQueue
+from repro.sim.hardware import A100, HardwareProfile
+
+SYSTEMS = ("flowkv", "vllm_disagg", "mooncake", "distserve", "vllm_colocated")
+
+
+@dataclasses.dataclass
+class SystemSpec:
+    kind: str
+    allocator: str
+    schedule: str                      # transfer schedule
+    chunked_prefill: bool
+    load_aware: bool
+    colocated: bool = False
+    transfer_intra: Optional[TransportProfile] = None
+    transfer_inter: Optional[TransportProfile] = None
+    # fraction of transfer latency that BLOCKS the sender's compute stream
+    # (paper §1/§3.3: per-block NCCL kernels contend with GEMMs; FlowKV's
+    # single merged call all but removes this)
+    transfer_blocking: float = 0.5
+
+
+def system_spec(kind: str) -> SystemSpec:
+    if kind == "flowkv":
+        return SystemSpec(kind, "flowkv", "flowkv", True, True,
+                          transfer_intra=IPC, transfer_inter=NCCL_ENI,
+                          transfer_blocking=0.05)
+    if kind == "vllm_disagg":
+        return SystemSpec(kind, "freelist", "blockwise", True, False,
+                          transfer_intra=VLLM_MERGE_INTRA,
+                          transfer_inter=VLLM_MERGE_ENI)
+    if kind == "mooncake":
+        return SystemSpec(kind, "freelist", "blockwise", True, False,
+                          transfer_intra=MOONCAKE_RDMA,
+                          transfer_inter=MOONCAKE_RDMA,
+                          transfer_blocking=0.3)
+    if kind == "distserve":
+        # modeled without continuous prefill batching (one prompt at a time) —
+        # reproduces the paper's observed long-prompt saturation (Table 1/2)
+        return SystemSpec(kind, "freelist", "blockwise", False, False,
+                          transfer_intra=VLLM_MERGE_INTRA,
+                          transfer_inter=VLLM_MERGE_ENI)
+    if kind == "vllm_colocated":
+        return SystemSpec(kind, "freelist", "blockwise", True, False,
+                          colocated=True,
+                          transfer_intra=IPC, transfer_inter=NCCL_ENI)
+    raise ValueError(f"unknown system {kind!r}")
+
+
+class SimNode:
+    def __init__(self, node_id: int, role: str, hw: HardwareProfile,
+                 spec: SystemSpec, kv_spec: KVCacheSpec, cost: ModelCost,
+                 max_batch_tokens: int):
+        self.node_id = node_id
+        self.role = role
+        self.hw = hw
+        self.spec = spec
+        self.kv_spec = kv_spec
+        self.cost = cost
+        self.bm = BlockManager(kv_spec.num_blocks, kv_spec.block_size, spec.allocator)
+        self.scheduler = HybridScheduler(
+            node_id, self.bm,
+            max_batch_tokens=max_batch_tokens if spec.chunked_prefill else 1 << 30,
+            chunked_prefill=spec.chunked_prefill,
+            # distserve-style: whole-prompt prefill, one prompt at a time
+            # (no sarathi chunking) — reproduces the long-prompt saturation
+            max_running=1 if (role == "prefill" and not spec.chunked_prefill) else 64,
+        )
+        if spec.colocated:
+            self.scheduler.set_priority("both")
+        self.busy_until = 0.0
+        self.planner = TransferPlanner(kv_spec)
+
+    # -- cost model ----------------------------------------------------------
+    def prefill_duration(self, num_tokens: int) -> float:
+        return self.hw.prefill_time(num_tokens * self.cost.flops_per_token)
+
+    def decode_duration(self, batch: List[Request]) -> float:
+        kv_bytes = sum(self.cost.kv_bytes_per_token * r.total_len for r in batch)
+        return self.hw.decode_time(self.cost.weight_bytes + kv_bytes)
+
+
+class ClusterSim:
+    def __init__(self, cfg: ModelConfig, kind: str, *, num_prefill: int = 1,
+                 num_decode: int = 1, hw_prefill: HardwareProfile = A100,
+                 hw_decode: Optional[HardwareProfile] = None,
+                 same_host: bool = True, blocks_per_node: int = 8192,
+                 max_batch_tokens: int = 8192, tp: int = 1):
+        self.cfg = cfg
+        self.spec = system_spec(kind)
+        self.kind = kind
+        self.same_host = same_host
+        hw_decode = hw_decode or hw_prefill
+        n_attn = cfg.num_attention_layers() or cfg.num_layers
+        self.kv_spec = KVCacheSpec(
+            num_layers=n_attn, num_blocks=blocks_per_node,
+            block_size=cfg.block_size, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, dtype=cfg.dtype)
+        cost = ModelCost(
+            flops_per_token=2.0 * cfg.active_params() / tp,
+            kv_bytes_per_token=float(cfg.kv_bytes_per_token() or 1024) / tp,
+            weight_bytes=2.0 * cfg.num_params() / tp,
+        )
+        self.cost = cost
+        self.controller = GlobalController(cost, cfg.block_size,
+                                           target="gpu")
+        self.nodes: Dict[int, SimNode] = {}
+        if self.spec.colocated:
+            # same GPU budget as 1P1D: two colocated hybrid instances
+            roles = [("prefill", hw_prefill)] * (num_prefill + num_decode)
+        else:
+            roles = [("prefill", hw_prefill)] * num_prefill + \
+                    [("decode", hw_decode)] * num_decode
+        for i, (role, hw) in enumerate(roles):
+            node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
+                           max_batch_tokens)
+            self.nodes[i] = node
+            self.controller.register_node(NodeHandle(
+                node_id=i, role=role, host_id=0 if same_host else i,
+                hardware=hw, scheduler=node.scheduler))
+        if self.spec.colocated:
+            for node in self.nodes.values():
+                node.scheduler.set_priority("both")
+        self.eq = EventQueue()
+        self.finished: List[Request] = []
+        self.transfer_latencies: List[float] = []
+        self.transfer_calls: List[int] = []
+        self._poll_scheduled: Dict[int, bool] = {i: False for i in self.nodes}
+
+    # -- routing ------------------------------------------------------------------
+    def _route(self, req: Request) -> None:
+        if self.spec.load_aware:
+            self.controller.route_request(req)
+        else:
+            # baseline: round-robin over P nodes, least-loaded D node
+            pn = [n for n in self.controller.prefill_nodes()]
+            p = pn[req.request_id % len(pn)]
+            dn = self.controller.decode_nodes() or pn
+            d = min(dn, key=lambda n: len(n.scheduler.decode.running))
+            req.decode_node = d.node_id
+            p.scheduler.enqueue_prefill(req)
+        node_id = req.prefill_node
+        self._poke(node_id)
+
+    def _poke(self, node_id: int) -> None:
+        """Schedule a scheduling-cycle poll for a node if idle."""
+        if self._poll_scheduled.get(node_id):
+            return
+        self._poll_scheduled[node_id] = True
+        node = self.nodes[node_id]
+        self.eq.push(max(self.eq.now, node.busy_until), lambda: self._cycle(node_id))
+
+    # -- node cycle -----------------------------------------------------------------
+    def _cycle(self, node_id: int) -> None:
+        self._poll_scheduled[node_id] = False
+        node = self.nodes[node_id]
+        handle = self.controller.nodes[node_id]
+        if not handle.alive:
+            return
+        self.controller.heartbeat(node_id, self.eq.now)
+        decision = node.scheduler.schedule()
+        duration = 0.0
+        if decision.prefill_batch:
+            tokens = decision.num_prefill_tokens
+            duration += node.prefill_duration(tokens)
+            node.scheduler.last_compute_util = 1.0
+        if decision.decode_batch:
+            duration += node.decode_duration(decision.decode_batch)
+            node.scheduler.last_bandwidth_util = 1.0
+        if not decision.prefill_batch and not decision.decode_batch:
+            node.scheduler.last_compute_util = 0.0
+            node.scheduler.last_bandwidth_util = 0.0
+            return   # idle: next arrival/transfer will poke us
+        node.busy_until = self.eq.now + duration
+        self.eq.push(node.busy_until,
+                     lambda: self._complete(node_id, decision))
+
+    def _complete(self, node_id: int, decision) -> None:
+        node = self.nodes[node_id]
+        now = self.eq.now
+        # prefill completions
+        for req in list(decision.prefill_batch):
+            chunk = decision.prefill_chunks.get(req.request_id, req.prompt_len)
+            if node.scheduler.prefill_progressed(req, chunk):
+                req.prefill_end = now
+                req.output_tokens.append(0)   # first token (virtual)
+                if self.spec.colocated:
+                    node.scheduler.bm  # same pool: no transfer
+                    node.scheduler.enqueue_decode(req)
+                    if req.first_token_time is None:
+                        req.first_token_time = now
+                else:
+                    node.scheduler.mark_sending(req)
+                    self._start_transfer(req, now)
+        # decode completions (one token per request per cycle)
+        for req in list(decision.decode_batch):
+            req.output_tokens.append(0)
+            if req.first_token_time is None:
+                req.first_token_time = now
+            if req.num_output >= req.sampling.max_new_tokens:
+                node.scheduler.decode_finished(req)
+                req.finish_time = now
+                self.finished.append(req)
+        # keep heartbeats fresh for all healthy nodes (failure injection is
+        # explicit in this simulator; idle != dead)
+        for nid, handle in self.controller.nodes.items():
+            if handle.alive:
+                self.controller.heartbeat(nid, now)
+        self.controller.step(now)
+        self._poke(node_id)
+
+    # -- transfer ----------------------------------------------------------------------
+    def _start_transfer(self, req: Request, now: float) -> None:
+        src = self.nodes[req.prefill_node]
+        dst_id = req.decode_node if req.decode_node is not None else req.prefill_node
+        dst = self.nodes[dst_id]
+        if not src.bm.owns(req.request_id):
+            return   # request was drained/requeued (failover) mid-transfer
+        n = src.kv_spec.blocks_for_tokens(req.prompt_len)
+        src_blocks = src.bm.get(req.request_id)[:n]
+        try:
+            dst_blocks = dst.bm.register(req.request_id, req.prompt_len + 1)[:n]
+        except Exception:
+            # D pool full: requeue transfer shortly (backpressure)
+            self.eq.push(now + 0.01, lambda: self._start_transfer(req, self.eq.now))
+            return
+        plan = src.planner.plan(self.spec.schedule, src_blocks, dst_blocks)
+        profile = (self.spec.transfer_intra if self.same_host
+                   else self.spec.transfer_inter)
+        latency = plan.latency(profile)
+        req.transfer_start = now
+        self.transfer_latencies.append(latency)
+        self.transfer_calls.append(plan.num_calls)
+        # sender-side compute blocked for a schedule-dependent share of the
+        # transfer (per-call kernel contention)
+        src.busy_until = max(src.busy_until, now) + \
+            self.spec.transfer_blocking * latency
+
+        def arrive():
+            req.transfer_end = self.eq.now
+            if req.first_token_time is None:
+                req.first_token_time = self.eq.now
+            src.scheduler.sending_done(req)
+            dst.scheduler.enqueue_decode(req)
+            self._poke(dst.node_id)
+
+        self.eq.push(now + latency, arrive)
+
+    # -- run ---------------------------------------------------------------------------
+    def run(self, requests: List[Request], t_max: float = 10_000.0) -> Dict[str, float]:
+        for req in requests:
+            self.eq.push(req.arrival_time, (lambda r: (lambda: self._route(r)))(req))
+        self.eq.run_until(t_max)
+        total_tokens = sum(r.num_output for r in self.finished)
+        span = max((r.finish_time for r in self.finished), default=1.0)
+        e2e = [r.e2e() for r in self.finished if r.e2e() is not None]
+        tpot = [t for t in (r.tpot() for r in self.finished) if t is not None]
+        return {
+            "system": self.kind,
+            "finished": len(self.finished),
+            "throughput_tok_s": total_tokens / span if span else 0.0,
+            "mean_e2e_s": sum(e2e) / len(e2e) if e2e else 0.0,
+            "mean_tpot_s": sum(tpot) / len(tpot) if tpot else 0.0,
+            "mean_transfer_s": (sum(self.transfer_latencies) / len(self.transfer_latencies)
+                                if self.transfer_latencies else 0.0),
+            "mean_transfer_calls": (sum(self.transfer_calls) / len(self.transfer_calls)
+                                    if self.transfer_calls else 0.0),
+            "events": len(self.controller.events),
+        }

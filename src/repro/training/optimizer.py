@@ -1,0 +1,127 @@
+"""AdamW with mixed-precision master weights, plus optional int8 gradient
+compression with error feedback (the DCN-friendly distributed-optimization
+path used across the pod axis).
+
+Train state layout (pytree-parallel to params):
+
+    params  — compute copy, model dtype (bf16 on the big configs)
+    master  — fp32 master weights
+    m, v    — fp32 Adam moments
+    step    — int32
+
+``compress_grads``/``decompress_grads`` implement per-tensor symmetric int8
+quantization with an error-feedback accumulator, halving (vs bf16) the bytes
+an all-reduce moves over DCN; the residual keeps the update unbiased over
+time (Seide et al. style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "params": params,
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(state: Dict[str, Any], grads, cfg: AdamWConfig,
+                  compute_dtype=None) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_state, metrics)."""
+    step = state["step"] + 1
+    lr = _lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2); new_v.append(v2); new_w.append(w2)
+
+    master = jax.tree.unflatten(treedef, new_w)
+    params_dtype = compute_dtype
+    params = jax.tree.map(
+        lambda w, p: w.astype(params_dtype or p.dtype), master, state["params"])
+    new_state = {"params": params, "master": master,
+                 "m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "step": step}
+    return new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_grads(grads, residual):
+    """Per-tensor symmetric int8 quantization; returns (q, scales, new_residual)."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    qs, scales, rs = [], [], []
+    for g, r in zip(flat, flat_r):
+        q, s, nr = one(g, r)
+        qs.append(q); scales.append(s); rs.append(nr)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, rs))
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)

@@ -1,0 +1,54 @@
+"""Property tests: bidirectional segment alignment (paper Fig. 5)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alignment import align, reconstruct
+
+
+@st.composite
+def _block_lists(draw):
+    n = draw(st.integers(0, 120))
+    src = draw(st.permutations(range(200)).map(lambda p: list(p[:n])))
+    dst = draw(st.permutations(range(200)).map(lambda p: list(p[:n])))
+    return src, dst
+
+
+@given(_block_lists())
+@settings(max_examples=80, deadline=None)
+def test_align_reconstruct_roundtrip(lists):
+    src, dst = lists
+    res = align(src, dst)
+    rs, rd = reconstruct(res)
+    assert rs == src and rd == dst
+    assert res.num_blocks == len(src)
+    # every run is contiguous on BOTH sides by construction
+    for run in res.runs:
+        assert run.src.length == run.dst.length
+
+
+@given(st.integers(1, 200), st.integers(0, 50), st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_align_ideal_case_single_call(n, off_s, off_d):
+    """Both sides contiguous -> exactly one call (paper's O(n) -> O(1))."""
+    res = align(list(range(off_s, off_s + n)), list(range(off_d, off_d + n)))
+    assert res.num_calls == 1
+    assert res.merge_ratio == n
+
+
+def test_align_partial_runs():
+    res = align([0, 1, 2, 5, 6], [3, 4, 5, 6, 7])
+    assert res.num_calls == 2
+    assert [r.length for r in res.runs] == [3, 2]
+
+
+def test_align_hostile_interleave():
+    """One side reversed -> no merging possible."""
+    src = list(range(10))
+    dst = list(range(9, -1, -1))
+    assert align(src, dst).num_calls == 10
+
+
+def test_align_empty_and_mismatch():
+    assert align([], []).num_calls == 0
+    import pytest
+    with pytest.raises(ValueError):
+        align([1], [1, 2])

@@ -1,0 +1,119 @@
+"""Property tests: allocators + segments (hypothesis)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (BlockAllocator, OutOfBlocksError,
+                                  SegmentAllocator)
+from repro.core.segments import (Segment, blocks_to_segments, fragmentation,
+                                 segments_to_blocks, validate_disjoint)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+@given(st.lists(st.integers(0, 500), max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_blocks_segments_roundtrip(ids):
+    assert segments_to_blocks(blocks_to_segments(ids)) == ids
+
+
+def test_segment_basics():
+    s = Segment(4, 3)
+    assert s.end == 7 and s.contains(6) and not s.contains(7)
+    assert s.merge(Segment(7, 2)) == Segment(4, 5)
+    taken, rest = s.split(2)
+    assert taken == Segment(4, 2) and rest == Segment(6, 1)
+    with pytest.raises(ValueError):
+        Segment(0, 0)
+    with pytest.raises(ValueError):
+        s.merge(Segment(9, 1))
+    assert fragmentation(blocks_to_segments([1, 2, 3])) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants under random workloads
+# ---------------------------------------------------------------------------
+@st.composite
+def _ops(draw):
+    return draw(st.lists(
+        st.tuples(st.sampled_from(["alloc", "free", "extend"]),
+                  st.integers(1, 40)),
+        min_size=1, max_size=120))
+
+
+@pytest.mark.parametrize("cls", [BlockAllocator, SegmentAllocator])
+@given(ops=_ops(), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_allocator_invariants(cls, ops, seed):
+    rng = random.Random(seed)
+    alloc = cls(256)
+    live = {}
+    rid = 0
+    for kind, n in ops:
+        if kind == "alloc":
+            if n <= alloc.num_free:
+                live[rid] = alloc.allocate(n)
+                rid += 1
+            else:
+                with pytest.raises(OutOfBlocksError):
+                    alloc.allocate(n)
+        elif kind == "free" and live:
+            victim = rng.choice(list(live))
+            alloc.free(live.pop(victim))
+        elif kind == "extend" and live and alloc.num_free >= 1:
+            victim = rng.choice(list(live))
+            live[victim] = live[victim] + alloc.extend(live[victim], 1)
+        alloc.check_invariants()
+        # no block owned twice
+        seen = set()
+        for blocks in live.values():
+            bs = set(blocks)
+            assert len(bs) == len(blocks)
+            assert not (bs & seen)
+            seen |= bs
+
+
+def test_segment_allocator_merges_on_free():
+    a = SegmentAllocator(64)
+    r1, r2, r3 = a.allocate(10), a.allocate(10), a.allocate(10)
+    a.free(r1); a.free(r3); a.free(r2)     # out-of-order frees must coalesce
+    segs = a.free_segments()
+    assert segs == [Segment(0, 64)], segs
+
+
+def test_segment_allocator_best_fit_prefers_single_run():
+    a = SegmentAllocator(64)
+    r1 = a.allocate(8)
+    r2 = a.allocate(16)
+    a.free(r1)
+    # 8-run and 40-run free; a 6-block request should carve the 8-run
+    r3 = a.allocate(6)
+    assert r3 == list(range(0, 6))
+    assert len(blocks_to_segments(r3)) == 1
+
+
+def test_segment_extend_in_place():
+    a = SegmentAllocator(64)
+    r = a.allocate(4)
+    ext = a.extend(r, 3)
+    assert ext == [4, 5, 6]                 # tail-adjacent growth
+
+
+def test_freelist_scatters_segment_keeps_contiguity():
+    rng = random.Random(0)
+    for cls, expect_contig in ((BlockAllocator, False), (SegmentAllocator, True)):
+        a = cls(512)
+        live = {}
+        for i in range(200):
+            if live and rng.random() < 0.45:
+                a.free(live.pop(rng.choice(list(live))))
+            elif a.num_free >= 16:
+                live[i] = a.allocate(16)
+        runs = [len(blocks_to_segments(b)) for b in live.values()]
+        mean_runs = sum(runs) / len(runs)
+        if expect_contig:
+            assert mean_runs < 2.5, mean_runs
+        else:
+            assert mean_runs > 2.5, mean_runs

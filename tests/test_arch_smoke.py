@@ -1,0 +1,74 @@
+"""Per-assigned-architecture smoke tests: REDUCED config of the same family,
+one forward/train step on CPU, asserting output shapes + no NaNs (spec
+requirement). Full configs are exercised only by the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.models.api import get_model
+
+
+def _smoke_batch(cfg, B=2, S=8):
+    if cfg.family == "encdec":
+        return {"frames": jnp.ones((B, S, cfg.d_model)),
+                "tokens": jnp.ones((B, S - 2), jnp.int32),
+                "labels": jnp.ones((B, S - 2), jnp.int32)}
+    if cfg.frontend != "none":
+        return {"tokens": jnp.ones((B, S), jnp.int32),
+                "labels": jnp.ones((B, S + cfg.frontend_tokens), jnp.int32),
+                "frontend_embeds": jnp.ones((B, cfg.frontend_tokens, cfg.d_model))}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gn)), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    if cfg.family == "encdec":
+        batch = {"frames": jnp.ones((B, S, cfg.d_model)),
+                 "tokens": jnp.ones((B, 4), jnp.int32)}
+    elif cfg.frontend != "none":
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "frontend_embeds": jnp.ones((B, cfg.frontend_tokens, cfg.d_model))}
+    else:
+        batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite prefill"
+    if cfg.family == "encdec":
+        c = model.init_cache(B, 16, enc_len=S)
+        c["k"] = c["k"].at[:, :, :4].set(cache["k"])
+        c["v"] = c["v"].at[:, :, :4].set(cache["v"])
+        c["cross_k"], c["cross_v"] = cache["cross_k"], cache["cross_v"]
+        c["length"] = jnp.full((B,), 4, jnp.int32)
+        cache = c
+    elif cfg.family in ("dense", "moe", "vlm", "audio"):
+        n = logits.shape[0]
+        total = S + (cfg.frontend_tokens if cfg.frontend != "none" else 0)
+        c = model.init_cache(B, total + 4)
+        c["k"] = c["k"].at[:, :, :total].set(cache["k"])
+        c["v"] = c["v"].at[:, :, :total].set(cache["v"])
+        c["length"] = jnp.full((B,), total, jnp.int32)
+        cache = c
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache2 = model.decode(params, tok, cache)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: non-finite decode"
+    assert int(cache2["length"][0]) == int(cache["length"][0]) + 1

@@ -1,0 +1,51 @@
+"""Training checkpoint: atomic save, resume-from-latest, exact roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.api import get_model
+from repro.serving.checkpoint import (latest_checkpoint, load_train_state,
+                                      save_train_state)
+from repro.training import optimizer as OPT
+
+
+def test_train_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("gemma-2b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = OPT.init_state(params)
+    state["step"] = jnp.asarray(7, jnp.int32)
+    path = save_train_state(state, 7, str(tmp_path))
+    assert os.path.exists(path)
+    assert latest_checkpoint(str(tmp_path)) == path
+
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = load_train_state(template, path)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6, atol=1e-6)
+    assert int(restored["step"]) == 7
+
+
+def test_latest_checkpoint_ordering(tmp_path):
+    cfg = get_smoke_config("gemma-2b")
+    model = get_model(cfg)
+    state = OPT.init_state(model.init(jax.random.PRNGKey(0)))
+    for step in (3, 10, 7):
+        save_train_state(state, step, str(tmp_path))
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000010.npz")
+    assert latest_checkpoint(str(tmp_path / "nope")) is None
+
+
+def test_bf16_roundtrip(tmp_path):
+    state = {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+             "step": jnp.asarray(1, jnp.int32)}
+    path = save_train_state(state, 1, str(tmp_path))
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = load_train_state(template, path)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(state["w"], np.float32))

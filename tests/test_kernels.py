@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_op, flash_prefill_ref
+from repro.kernels.kv_gather import kv_gather, kv_gather_op, kv_gather_ref, kv_scatter_op
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_op,
+                                           paged_decode_attention_ref)
+
+SWEEP_PAGED = [
+    # (B, H, KV, HD, BS, MAXB, dtype)
+    (1, 4, 4, 16, 4, 3, jnp.float32),
+    (3, 8, 4, 32, 8, 5, jnp.float32),
+    (2, 8, 2, 64, 16, 4, jnp.float32),
+    (2, 4, 1, 32, 8, 6, jnp.float32),        # MQA
+    (2, 8, 4, 32, 8, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,h,kv,hd,bs,maxb,dtype", SWEEP_PAGED)
+def test_paged_attention_sweep(b, h, kv, hd, bs, maxb, dtype):
+    key = jax.random.PRNGKey(0)
+    nb = b * maxb + 4
+    q = jax.random.normal(key, (b, h, hd), dtype)
+    pages = jax.random.normal(jax.random.PRNGKey(1), (nb, 2, bs * kv * hd), dtype)
+    bt = jax.random.permutation(jax.random.PRNGKey(2), nb)[:b * maxb]
+    bt = bt.reshape(b, maxb).astype(jnp.int32)
+    lengths = jax.random.randint(jax.random.PRNGKey(3), (b,), 1, maxb * bs + 1)
+    out = paged_decode_attention(q, pages, bt, lengths, block_size=bs)
+    ref = paged_decode_attention_ref(q, pages, bt, lengths, bs)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_paged_attention_op_layer_slice():
+    """ops wrapper slices one layer from the full FlowKV pool."""
+    b, h, kv, hd, bs, maxb, L = 2, 4, 2, 16, 4, 3, 3
+    nb = 16
+    pool = jax.random.normal(jax.random.PRNGKey(0), (nb, L, 2, bs * kv * hd))
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, hd))
+    bt = jnp.arange(b * maxb, dtype=jnp.int32).reshape(b, maxb)
+    lengths = jnp.asarray([7, 12], jnp.int32)
+    for layer in range(L):
+        out = paged_decode_attention_op(q, pool, layer, bt, lengths, block_size=bs)
+        ref = paged_decode_attention_ref(q, pool[:, layer], bt, lengths, bs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+SWEEP_FLASH = [
+    # (B, S, H, KV, HD, q_blk, k_blk, causal, dtype)
+    (2, 64, 4, 2, 16, 16, 16, True, jnp.float32),
+    (1, 128, 8, 8, 32, 32, 64, True, jnp.float32),     # MHA
+    (2, 96, 4, 1, 16, 32, 32, True, jnp.float32),      # MQA, uneven blocks
+    (2, 64, 4, 2, 16, 16, 16, False, jnp.float32),
+    (2, 64, 4, 2, 32, 32, 32, True, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,qb,kb,causal,dtype", SWEEP_FLASH)
+def test_flash_prefill_sweep(b, s, h, kv, hd, qb, kb, causal, dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd), dtype)
+    out = flash_prefill(q, k, v, causal=causal, q_blk=qb, k_blk=kb)
+    ref = flash_prefill_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_prefill_op_pads():
+    b, s, h, kv, hd = 1, 50, 2, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    out = flash_prefill_op(q, k, v, q_blk=16, k_blk=16)
+    ref = flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [1, 5, 16])
+def test_kv_gather_sweep(dtype, n):
+    pool = jax.random.normal(jax.random.PRNGKey(0), (32, 3, 2, 64), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, 32)
+    out = kv_gather(pool, ids.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(kv_gather_ref(pool, ids), np.float32))
+
+
+def test_kv_gather_scatter_roundtrip():
+    pool = jax.random.normal(jax.random.PRNGKey(0), (32, 2, 2, 16))
+    ids = jnp.asarray([4, 9, 30], jnp.int32)
+    staged = kv_gather_op(pool, ids)
+    dst = jnp.zeros_like(pool)
+    dst = kv_scatter_op(dst, jnp.asarray([0, 1, 2], jnp.int32), staged)
+    np.testing.assert_array_equal(np.asarray(dst[:3]), np.asarray(staged))

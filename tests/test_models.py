@@ -1,0 +1,129 @@
+"""Model-family equivalence tests: prefill/decode must match teacher-forced
+training forward for every family (the property FlowKV's P->D split relies
+on)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import encdec as E
+from repro.models import griffin as G
+from repro.models import mamba2 as M2
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+
+
+def _dense_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=32,
+                vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=8,
+                d_ff=64, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("cfg", [
+    _dense_cfg(),
+    _dense_cfg(qk_norm=True),
+    _dense_cfg(num_kv_heads=1, head_dim=16, num_heads=2, embed_scale=True,
+               activation="gelu"),
+    _dense_cfg(family="moe", d_ff=0, moe_d_ff=32, num_experts=4, top_k=2),
+    _dense_cfg(family="moe", d_ff=0, moe_d_ff=32, num_experts=4, top_k=1),
+], ids=["dense", "qk_norm", "mqa_gelu", "moe_top2", "moe_top1"])
+def test_transformer_decode_matches_train(cfg):
+    key = jax.random.PRNGKey(0)
+    p = T.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 9), 0, cfg.vocab_size)
+    logits, _ = T.forward_train(p, cfg, toks)
+    assert logits.shape == (2, 9, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    lg, pre = T.prefill(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    cache = T.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    cache["k"] = cache["k"].at[:, :, :9].set(pre["k"])
+    cache["v"] = cache["v"].at[:, :, :9].set(pre["v"])
+    cache["length"] = jnp.full((2,), 9, jnp.int32)
+    full = jnp.concatenate([toks, toks[:, :3]], axis=1)
+    logits_full, _ = T.forward_train(p, cfg, full)
+    for i in range(3):
+        lg, cache = T.decode_step(p, cfg, full[:, 9 + i], cache)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full[:, 9 + i]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_mamba2_decode_matches_train():
+    cfg = ModelConfig(name="m", family="ssm", num_layers=2, d_model=32,
+                      vocab_size=64, ssm_state=8, ssm_expand=2, ssm_head_dim=8,
+                      ssm_conv=4, ssm_chunk=4, dtype=jnp.float32)
+    p = M2.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 11), 0, 64)
+    logits, _ = M2.forward_train(p, cfg, toks)
+    c = M2.init_cache(cfg, 2)
+    for i in range(11):
+        lg, c = M2.decode_step(p, cfg, toks[:, i], c)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, i]),
+                                   rtol=5e-3, atol=5e-3)
+    # chunk-size invariance
+    cfg2 = dataclasses.replace(cfg, ssm_chunk=11)
+    logits2, _ = M2.forward_train(p, cfg2, toks)
+    np.testing.assert_allclose(np.asarray(logits2), np.asarray(logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_griffin_decode_matches_train():
+    cfg = ModelConfig(name="g", family="hybrid", num_layers=8, d_model=16,
+                      vocab_size=50, num_heads=2, num_kv_heads=1, head_dim=8,
+                      d_ff=32, attn_window=4, layer_pattern=("rec", "rec", "attn"),
+                      lru_width=16, dtype=jnp.float32)
+    p = G.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 11), 0, 50)
+    logits, _ = G.forward_train(p, cfg, toks)
+    lg, cache = G.prefill(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    cc = dict(cache)
+    full = jnp.concatenate([toks, toks[:, :3]], axis=1)
+    logits_full, _ = G.forward_train(p, cfg, full)
+    for i in range(3):
+        lg, cc = G.decode_step(p, cfg, full[:, 11 + i], cc)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full[:, 11 + i]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_encdec_decode_matches_train():
+    cfg = ModelConfig(name="e", family="encdec", num_layers=2,
+                      num_encoder_layers=2, d_model=16, vocab_size=50,
+                      num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                      cross_attention=True, frontend="audio", dtype=jnp.float32)
+    p = E.init_params(cfg, jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 16))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, 50)
+    logits, _ = E.forward_train(p, cfg, {"frames": frames, "tokens": toks})
+    lg, cache = E.prefill(p, cfg, {"frames": frames, "tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    c = E.init_cache(cfg, 2, 10, 7, dtype=jnp.float32)
+    c["k"] = c["k"].at[:, :, :6].set(cache["k"])
+    c["v"] = c["v"].at[:, :, :6].set(cache["v"])
+    c["cross_k"], c["cross_v"] = cache["cross_k"], cache["cross_v"]
+    c["length"] = jnp.full((2,), 6, jnp.int32)
+    full = jnp.concatenate([toks, toks[:, :2]], axis=1)
+    logits_full, _ = E.forward_train(p, cfg, {"frames": frames, "tokens": full})
+    for i in range(2):
+        lg, c = E.decode_step(p, cfg, full[:, 6 + i], c)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full[:, 6 + i]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_vlm_frontend_splice():
+    cfg = _dense_cfg(family="vlm", frontend="vision", frontend_tokens=4)
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 64)
+    fe = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 32))
+    logits, _ = T.forward_train(p, cfg, toks, fe)
+    assert logits.shape == (2, 10, 64)
+    loss = T.loss_fn(p, cfg, {"tokens": toks, "labels": jnp.zeros((2, 10), jnp.int32),
+                              "frontend_embeds": fe})
+    assert bool(jnp.isfinite(loss))

@@ -1,0 +1,94 @@
+"""The §Perf optimization knobs must be semantics-preserving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, dense_init
+from repro.models import transformer as T
+from repro.models.moe import moe_ffn, moe_ffn_gshard_einsum, moe_param_shapes
+
+
+def _moe_cfg(**kw):
+    base = dict(name="m", family="moe", num_layers=2, d_model=16, vocab_size=32,
+                num_heads=2, num_kv_heads=2, head_dim=8,
+                num_experts=4, top_k=2, moe_d_ff=32, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_gshard_einsum_matches_dense_dispatch():
+    cfg = _moe_cfg()
+    shapes = moe_param_shapes(cfg)
+    p = {n: dense_init(k, s, jnp.float32)
+         for (n, s), k in zip(shapes.items(),
+                              jax.random.split(jax.random.PRNGKey(0), len(shapes)))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+    ref, _ = moe_ffn(p, x, cfg)
+    out, _ = moe_ffn_gshard_einsum(p, x, cfg, capacity_factor=8.0)  # no drops
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_gshard_einsum_tight_capacity_finite_and_differentiable():
+    cfg = _moe_cfg()
+    shapes = moe_param_shapes(cfg)
+    p = {n: dense_init(k, s, jnp.float32)
+         for (n, s), k in zip(shapes.items(),
+                              jax.random.split(jax.random.PRNGKey(0), len(shapes)))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+    out, aux = moe_ffn_gshard_einsum(p, x, cfg, capacity_factor=1.0)
+    assert bool(jnp.all(jnp.isfinite(out))) and bool(jnp.isfinite(aux))
+    g = jax.grad(lambda pp: moe_ffn_gshard_einsum(pp, x, cfg, 1.25)[0].sum())(p)
+    assert bool(jnp.all(jnp.isfinite(g["w_down"])))
+
+
+def test_remat_preserves_loss_and_grads():
+    base = _moe_cfg(family="dense", d_ff=32, num_experts=0, top_k=0, moe_d_ff=0)
+    p = T.init_params(base, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 32)
+    batch = {"tokens": toks, "labels": toks}
+    loss0, g0 = jax.value_and_grad(lambda pp: T.loss_fn(pp, base, batch))(p)
+    for mode in ("full", "dots"):
+        cfg = dataclasses.replace(base, remat=mode)
+        loss1, g1 = jax.value_and_grad(lambda pp: T.loss_fn(pp, cfg, batch))(p)
+        np.testing.assert_allclose(float(loss1), float(loss0), rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_head_padding_with_zero_weights_preserves_logits():
+    """The llava hillclimb: zero-init padded heads change nothing."""
+    base = _moe_cfg(family="dense", d_ff=32, num_experts=0, top_k=0, moe_d_ff=0,
+                    num_heads=2, num_kv_heads=1)
+    padded = dataclasses.replace(base, num_heads=4)
+    p = T.init_params(base, jax.random.PRNGKey(0))
+    pp = T.init_params(padded, jax.random.PRNGKey(0))
+    # copy shared weights; zero the extra head columns
+    lp, lpp = p["layers"], pp["layers"]
+    lpp["wq"] = lpp["wq"].at[:].set(0).at[:, :, :2, :].set(lp["wq"])
+    lpp["wo"] = lpp["wo"].at[:].set(0).at[:, :2, :, :].set(lp["wo"])
+    for k in ("wk", "wv", "norm_attn", "norm_mlp", "w_gate", "w_up", "w_down"):
+        lpp[k] = lp[k]
+    pp["embed"] = p["embed"]
+    pp["final_norm"] = p["final_norm"]
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 32)
+    ref, _ = T.forward_train(p, base, toks)
+    out, _ = T.forward_train(pp, padded, toks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tp_reduce_bf16_close_to_f32():
+    from repro.models import mamba2 as M2
+    cfg = ModelConfig(name="s", family="ssm", num_layers=2, d_model=32,
+                      vocab_size=64, ssm_state=8, ssm_expand=2, ssm_head_dim=8,
+                      ssm_conv=4, ssm_chunk=4, dtype=jnp.bfloat16)
+    p = M2.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    ref, _ = M2.forward_train(p, cfg, toks)
+    cfg2 = dataclasses.replace(cfg, tp_reduce_bf16=True)
+    out, _ = M2.forward_train(p, cfg2, toks)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=0.1, atol=0.15)

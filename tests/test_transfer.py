@@ -1,0 +1,117 @@
+"""Transfer planner/engine: correctness across layouts, schedules, dtypes;
+call-count formulas; Table-3 cost-model calibration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout as L
+from repro.core.costmodel import IPC, NCCL_INTRA, VLLM_MERGE_INTRA, get_profile
+from repro.core.transfer import TransferPlanner, transfer_request
+
+
+def _spec(layout=L.KVLayout.FLOWKV, dtype=jnp.float32, layers=3):
+    return L.KVCacheSpec(num_layers=layers, num_blocks=24, block_size=4,
+                         num_kv_heads=2, head_dim=8, dtype=dtype, layout=layout)
+
+
+@pytest.mark.parametrize("schedule", ["flowkv", "layerwise", "blockwise"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_transfer_executes_exactly(schedule, dtype):
+    spec = _spec(dtype=dtype)
+    if schedule == "flowkv":
+        src_spec = dst_spec = spec
+    else:
+        src_spec = dst_spec = spec
+    rng = np.random.RandomState(0)
+    src = jnp.asarray(rng.randn(*src_spec.shape), dtype)
+    dst = jnp.zeros(dst_spec.shape, dtype)
+    sb, db = [3, 4, 5, 11], [7, 8, 9, 2]
+    out, plan, lat = transfer_request(src_spec, src, sb, dst_spec, dst, db,
+                                      schedule, get_profile("nccl"))
+    np.testing.assert_array_equal(np.asarray(out)[np.array(db)],
+                                  np.asarray(src)[np.array(sb)])
+    assert lat > 0
+
+
+def test_cross_layout_transfer():
+    """P node on FlowKV layout -> D node on vLLM layout still lands exactly."""
+    src_spec = _spec(L.KVLayout.FLOWKV)
+    dst_spec = _spec(L.KVLayout.VLLM)
+    rng = np.random.RandomState(1)
+    src = jnp.asarray(rng.randn(*src_spec.shape), jnp.float32)
+    dst = jnp.zeros(dst_spec.shape, jnp.float32)
+    sb, db = [0, 1, 2], [5, 6, 7]
+    out, plan, _ = transfer_request(src_spec, src, sb, dst_spec, dst, db, "layerwise")
+    for layer in range(3):
+        for s, d in zip(sb, db):
+            np.testing.assert_array_equal(
+                np.asarray(out)[layer, 0, d], np.asarray(src)[s, layer, 0])
+
+
+def test_call_count_formulas():
+    spec = _spec(layers=5)
+    planner = TransferPlanner(spec)
+    n = 7
+    ids = list(range(n))
+    assert planner.plan_layerwise(ids, ids).num_calls == 2 * 5 * n
+    assert planner.plan_blockwise(ids, ids).num_calls == 2 * 5
+    assert planner.plan_flowkv(ids, ids).num_calls == 1
+    scattered_dst = [10, 3, 7, 1, 20, 15, 8]
+    assert planner.plan_flowkv(ids, scattered_dst).num_calls == n
+
+
+def test_flowkv_schedule_requires_flowkv_layout():
+    planner = TransferPlanner(_spec(L.KVLayout.VLLM))
+    with pytest.raises(ValueError):
+        planner.plan_flowkv([0], [0])
+
+
+def test_bytes_conservation():
+    spec = _spec()
+    planner = TransferPlanner(spec)
+    ids = list(range(6))
+    total = 6 * spec.bytes_per_block
+    assert planner.plan_flowkv(ids, ids).total_bytes == total
+    assert planner.plan_layerwise(ids, ids).total_bytes == total
+
+
+# ---------------------------------------------------------------------------
+# Table-3 calibration: model must reproduce the paper's numbers within 25 %
+# ---------------------------------------------------------------------------
+TABLE3_SINGLE = {  # tokens -> (vllm_disagg, flowkv_layerwise, flowkv)
+    1000: (0.2314, 0.1309, 0.0075),
+    4000: (0.6670, 0.5338, 0.0236),
+    8000: (1.3382, 1.1173, 0.0447),
+    12000: (2.1894, 1.7218, 0.0681),
+}
+
+
+def test_costmodel_matches_table3():
+    from repro.configs import get_config
+    cfg = get_config("llama31-8b")
+    spec = L.KVCacheSpec(num_layers=cfg.num_layers, num_blocks=8192,
+                         block_size=cfg.block_size, num_kv_heads=cfg.num_kv_heads,
+                         head_dim=cfg.head_dim, dtype=cfg.dtype)
+    planner = TransferPlanner(spec)
+    for tokens, (p_vllm, p_lw, p_fk) in TABLE3_SINGLE.items():
+        ids = list(range(spec.blocks_for_tokens(tokens)))
+        lat_fk = planner.plan_flowkv(ids, ids).latency(IPC)
+        lat_lw = planner.plan_layerwise(ids, ids).latency(NCCL_INTRA)
+        lat_bw = planner.plan_blockwise(ids, ids).latency(VLLM_MERGE_INTRA)
+        assert abs(lat_fk - p_fk) / p_fk < 0.25, (tokens, lat_fk, p_fk)
+        assert abs(lat_lw - p_lw) / p_lw < 0.25, (tokens, lat_lw, p_lw)
+        assert abs(lat_bw - p_vllm) / p_vllm < 0.30, (tokens, lat_bw, p_vllm)
+
+
+def test_calls_per_request_headline():
+    """Paper: 23,469 layerwise calls -> 1 FlowKV call at ~11.7k ctx."""
+    from repro.configs import get_config
+    cfg = get_config("llama31-8b")
+    spec = L.KVCacheSpec(num_layers=cfg.num_layers, num_blocks=8192,
+                         block_size=cfg.block_size, num_kv_heads=cfg.num_kv_heads,
+                         head_dim=cfg.head_dim, dtype=cfg.dtype)
+    planner = TransferPlanner(spec)
+    ids = list(range(spec.blocks_for_tokens(11700)))
+    lw = planner.plan_layerwise(ids, ids).num_calls
+    assert abs(lw - 23469) / 23469 < 0.01
+    assert planner.plan_flowkv(ids, ids).num_calls == 1

@@ -10,6 +10,18 @@
     roof    benchmarks/roofline.py           dry-run roofline table
 
 ``python -m benchmarks.run [--full] [--only table3,fig4,...]``
+
+Environment notes:
+
+* deps: ``pip install -r requirements.txt`` (jax, numpy, msgpack, pytest;
+  ``hypothesis`` optional — property tests skip without it).
+* before benchmarking, verify the build with the fast tier-1 selection
+  (skips the multi-device dry-run)::
+
+      PYTHONPATH=src python -m pytest -q -m "not slow"
+
+* run benchmarks from the repo root so ``benchmarks`` and ``src/repro``
+  both resolve: ``PYTHONPATH=src python -m benchmarks.run``.
 """
 from __future__ import annotations
 

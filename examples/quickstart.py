@@ -1,8 +1,9 @@
 """Quickstart: FlowKV end-to-end in ~40 lines.
 
-Builds a small model, serves a batch of requests through the disaggregated
-cluster (prefill node -> FlowKV page transfer -> decode node), and verifies
-the output is token-identical to monolithic generation.
+Builds a small model, streams requests through the disaggregated cluster
+(prefill node -> FlowKV page transfer -> decode node) with the
+``FlowKVClient`` handle API, and verifies the streamed output is
+token-identical to monolithic generation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +14,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import transformer as T
 from repro.models.api import get_model
-from repro.serving.cluster import PDCluster
-from repro.serving.request import Request, SamplingParams
+from repro.serving.api import FlowKVClient
+from repro.serving.request import SamplingParams
 
 
 def main():
@@ -26,25 +27,29 @@ def main():
     prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
                for n in (12, 25, 33)]
 
-    # 1P + 1D cluster with FlowKV transfer
-    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
-                        num_blocks=128, transfer_schedule="flowkv")
-    reqs = [Request(prompt_tokens=p, sampling=SamplingParams(max_new_tokens=8))
-            for p in prompts]
-    done = cluster.run(reqs, max_cycles=100)
+    # 1P + 1D cluster with FlowKV transfer, fronted by the streaming client
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=128, transfer_schedule="flowkv")
+    handles = [client.submit(p, SamplingParams(max_new_tokens=8))
+               for p in prompts]
 
-    # verify against monolithic generation
-    for r in done:
+    # stream: tokens arrive per cluster cycle, before the request finishes
+    for h in handles:
+        streamed = list(h.tokens())
         ref = T.greedy_generate(params, cfg,
-                                jnp.asarray([r.prompt_tokens], jnp.int32), 8)
-        assert r.output_tokens == [int(x) for x in ref[0]], "token mismatch!"
-        print(f"req {r.request_id}: P->D transfer ok, tokens {r.output_tokens}")
+                                jnp.asarray([h.request.prompt_tokens], jnp.int32), 8)
+        assert streamed == [int(x) for x in ref[0]], "token mismatch!"
+        t = h.stats()
+        print(f"req {h.request_id}: streamed {streamed}")
+        print(f"   queue={t['queue_s']:.0f} prefill={t['prefill_s']:.0f} "
+              f"transfer={t['transfer_s']:.3f} decode={t['decode_s']:.2f} "
+              f"(cluster cycles), ttft={t['ttft_s']:.0f}")
 
-    s = cluster.stats()
+    s = client.stats()
     print(f"\nFlowKV transfers: {s['transfers']} "
           f"(avg {s['mean_transfer_calls']:.1f} call(s)/request, "
           f"est {s['mean_transfer_s']*1e3:.2f} ms on TPU ICI)")
-    print("disaggregated output == monolithic output: OK")
+    print("streamed disaggregated output == monolithic output: OK")
 
 
 if __name__ == "__main__":

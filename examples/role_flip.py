@@ -1,0 +1,71 @@
+"""P<->D role flip under imbalanced load (the Load-Aware Scheduler's
+headline capability), on the REAL engine with token-correctness checks.
+
+A prefill-heavy burst hits a cluster provisioned decode-heavy (1P + 3D).
+With ``role_flip=True`` the controller detects the computational imbalance
+and REASSIGNS idle decode nodes to the prefill role (``set_role``) — not
+just a bounded priority lease — then flips them back once the burst drains.
+Every request still decodes token-identically to monolithic generation,
+because a NodeEngine serves either role from one block pool.
+
+    PYTHONPATH=src python examples/role_flip.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.serving.api import FlowKVClient
+from repro.serving.request import SamplingParams
+
+
+def main():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # decode-heavy cluster, flip policy armed
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=3,
+                          num_blocks=256, max_batch_tokens=256,
+                          role_flip=True)
+
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(120, 200)).tolist()
+               for _ in range(16)]
+
+    print("roles before burst:",
+          {n.node_id: n.role for n in client.controller.nodes.values()})
+    handles = [client.submit(p, SamplingParams(max_new_tokens=4))
+               for p in prompts]
+    client.drain(max_cycles=400)
+
+    flips = [e for e in client.controller.events if e.kind == "set_role"]
+    print(f"\n{len(flips)} role reassignments under the burst:")
+    for e in flips:
+        print(f"  [cycle {e.cycle}] {e.detail}")
+
+    # idle out the cluster: the policy returns borrowed nodes to their home
+    # role once the imbalance clears (sustained-normal + residency hysteresis)
+    for _ in range(30):
+        client.step()
+    print("roles after the burst clears:",
+          {n.node_id: n.role for n in client.controller.nodes.values()})
+
+    # correctness: every streamed output == monolithic generation
+    for h in handles:
+        ref = T.greedy_generate(
+            params, cfg, jnp.asarray([h.request.prompt_tokens], jnp.int32), 4)
+        assert h.request.output_tokens == [int(x) for x in ref[0]], \
+            f"req {h.request_id} diverged after role flip!"
+    print(f"\nall {len(handles)} requests token-identical to monolithic "
+          f"generation across the flips: OK")
+    s = client.stats()
+    print(f"mean TTFT {s['mean_ttft_cycles']:.1f} cycles, "
+          f"{s['transfers']} transfers, "
+          f"{s['mean_transfer_calls']:.1f} calls/transfer")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,9 @@ class NodeHandle:
     last_heartbeat: float = 0.0
     # Temporary role override (imbalanced regime role switch).
     switched_until_cycle: int = -1
+    # Set when the flip policy reassigned this node away from its original
+    # role; the controller flips it back once the cluster re-balances.
+    home_role: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -57,12 +60,17 @@ class GlobalController:
                  target: str = "gpu",
                  heartbeat_timeout: float = 10.0,
                  role_switch_cycles: int = 4,
+                 role_flip: bool = False,
                  node_factory: Optional[Callable[[str], NodeHandle]] = None):
         self.model_cost = model_cost
         self.thresholds = thresholds or Thresholds()
         self.target = target
         self.heartbeat_timeout = heartbeat_timeout
         self.role_switch_cycles = role_switch_cycles
+        # role_flip=True upgrades the imbalanced-regime response from a
+        # bounded priority lease to a FULL role reassignment (set_role),
+        # reverted automatically once the cluster re-balances.
+        self.role_flip = role_flip
         self.node_factory = node_factory   # elastic scale-up hook
         self.nodes: Dict[int, NodeHandle] = {}
         self.prefix_index = PrefixCacheIndex(block_size)
@@ -70,6 +78,7 @@ class GlobalController:
         self.regime = "normal"
         self._extreme_streak = 0
         self._low_streak = 0
+        self._normal_streak = 0   # flip-back hysteresis (see _flip_back)
         self.events: List[ControllerEvent] = []
         self.retry_queue: List[Request] = []
 
@@ -82,6 +91,27 @@ class GlobalController:
 
     def decode_nodes(self) -> List[NodeHandle]:
         return [n for n in self.nodes.values() if n.alive and n.role == "decode"]
+
+    # -- node lifecycle -------------------------------------------------------------
+    def set_role(self, node_id: int, role: str) -> bool:
+        """Reassign a node P<->D mid-run.
+
+        Routing sees the new role immediately; the node's scheduler gets a
+        sticky priority matching it. In-flight work of the OLD role keeps
+        running from the same block pool (NodeEngine is role-flexible), so
+        no drain is needed. Returns True if the role actually changed.
+        """
+        if role not in ("prefill", "decode"):
+            raise ValueError(f"role must be 'prefill' or 'decode', got {role!r}")
+        node = self.nodes[node_id]
+        if node.role == role:
+            return False
+        old = node.role
+        node.role = role
+        node.switched_until_cycle = -1
+        node.scheduler.set_priority(role, cycles=0)   # sticky until next set_role
+        self._log("set_role", f"node {node_id}: {old} -> {role}")
+        return True
 
     # -- heartbeat / fault tolerance ---------------------------------------------------
     def heartbeat(self, node_id: int, now: float) -> None:
@@ -180,13 +210,17 @@ class GlobalController:
             self._handle_imbalance(statuses, cp, cd)
             self._extreme_streak = 0
             self._low_streak = 0
+            self._normal_streak = 0
         elif regime == "extreme":
             self._extreme_streak += 1
             self._low_streak = 0
+            self._normal_streak = 0
             if self._extreme_streak >= self.thresholds.scale_patience:
                 self._scale_up(cp, cd)
                 self._extreme_streak = 0
         else:
+            self._normal_streak += 1
+            self._flip_back(statuses)
             self._extreme_streak = 0
             if cp < 0.05 and cd < 0.05:
                 self._low_streak += 1
@@ -207,12 +241,50 @@ class GlobalController:
             if n.alive and n.role == cold_role
             and node_score(statuses[n.node_id], cold_role) < self.thresholds.idle
         ]
+        hot_score, cold_score = (cp, cd) if hot_role == "prefill" else (cd, cp)
         for node in idle:
+            if self.role_flip:
+                if self.cycle < node.switched_until_cycle:
+                    continue   # residency: a fresh flip may not be reversed yet
+                # Full reassignment needs a decisive skew (flipping idle nodes
+                # into the hot role dilutes its mean score, so a lukewarm
+                # near-tie would otherwise ping-pong the hot side each cycle)
+                # and must never strand the cold role at zero nodes.
+                remaining = [n for n in self.nodes.values()
+                             if n.alive and n.role == cold_role]
+                if hot_score - cold_score > self.thresholds.idle and len(remaining) > 1:
+                    if node.home_role is None:
+                        node.home_role = cold_role
+                    self.set_role(node.node_id, hot_role)
+                    # minimum residency in the borrowed role (anti-thrash)
+                    node.switched_until_cycle = self.cycle + self.role_switch_cycles
+                    continue
             node.scheduler.set_priority(hot_role, cycles=self.role_switch_cycles)
             node.switched_until_cycle = self.cycle + self.role_switch_cycles
             self._log("role_switch",
                       f"node {node.node_id} ({cold_role}) -> priority {hot_role} "
                       f"for {self.role_switch_cycles} cycles")
+
+    def _flip_back(self, statuses: Dict[int, NodeStatus]) -> None:
+        """Normal regime: return flipped nodes to their home role.
+
+        Guarded against thrash — flipping idle nodes INTO the hot role
+        dilutes that role's mean score, which alone would read as "back to
+        normal". A node only reverts after (a) a sustained normal streak,
+        (b) its minimum residency in the borrowed role elapsed, and (c) it
+        is idle in the borrowed role (no longer absorbing the burst).
+        """
+        if self._normal_streak < self.role_switch_cycles:
+            return
+        for node in self.nodes.values():
+            if (node.alive and node.home_role is not None
+                    and node.role != node.home_role
+                    and self.cycle >= node.switched_until_cycle
+                    and node_score(statuses.get(node.node_id, NodeStatus()),
+                                   node.role) < self.thresholds.idle):
+                home = node.home_role
+                node.home_role = None
+                self.set_role(node.node_id, home)
 
     # -- extreme regime: elastic scaling (App. B.1) ----------------------------------------------
     def _scale_up(self, cp: float, cd: float) -> None:

@@ -104,12 +104,31 @@ class HybridScheduler:
         req.state = RequestState.SENDING
         self.prefill.sending.append(req)
 
-    def sending_done(self, req: Request) -> None:
+    def sending_done(self, req: Request, free: bool = True) -> None:
+        """Transfer left this node. ``free=False`` keeps the blocks (local
+        P->D handoff on a role-flexible node: same pool, nothing moved)."""
         try:
             self.prefill.sending.remove(req)
         except ValueError:
             pass
-        self.bm.free(req.request_id)   # P-side blocks are released after transfer
+        if free:
+            self.bm.free(req.request_id)   # P-side blocks are released after transfer
+
+    def remove_request(self, req: Request) -> bool:
+        """Expunge a request from every queue + free its blocks (cancel path)."""
+        removed = False
+        for sub in (self.prefill, self.decode):
+            for q in (sub.waiting, sub.running, sub.swapped, sub.sending):
+                try:
+                    q.remove(req)
+                    removed = True
+                except ValueError:
+                    pass
+        self._progress.pop(req.request_id, None)
+        if self.bm.owns(req.request_id):
+            self.bm.free(req.request_id)
+            removed = True
+        return removed
 
     # -- controller knobs ----------------------------------------------------------
     def set_priority(self, priority: str, cycles: int = 0) -> None:

@@ -17,11 +17,49 @@ cost model prices it for the benchmark tables.
 On real TPU hardware each :class:`TransferOp` lowers to one DMA descriptor
 (same-pod ICI) or one DCN send; on this CPU container execution is a faithful
 data-plane copy and the *latency* is priced by ``core.costmodel``.
+
+The TransferBackend protocol
+----------------------------
+
+Node-to-node request-state movement is dispatched through a small protocol so
+runtimes never branch on *how* a model family stores its cache:
+
+.. code-block:: python
+
+    class TransferBackend:
+        name: str
+        def plan(self, req, src, dst) -> TransferJob: ...
+        def execute(self, job, src, dst) -> None: ...
+        def price(self, job, profile: TransportProfile) -> float: ...
+
+``plan`` reserves destination capacity and returns a :class:`TransferJob`
+(exact call count + byte count, plus any backend-specific payload);
+``execute`` moves the data (a no-op for purely simulated backends); ``price``
+converts the job into seconds under a :class:`TransportProfile`. ``src`` /
+``dst`` are duck-typed *ports*: the real runtime passes
+``repro.serving.engine.NodeEngine`` (which exposes ``kv``, ``states``,
+``register_transfer_in`` …) and the simulator passes
+``repro.sim.cluster_sim.SimNode`` (``bm`` / ``kv_spec`` / ``planner``).
+
+Built-in backends, keyed in the module registry
+(:func:`register_backend` / :func:`get_backend`):
+
+* ``paged``  — :class:`PagedBackend`; block-granular plans for any of the
+  three schedules above, executed against the paged pools.
+* ``state``  — :class:`StateBackend`; whole-pytree movement for the
+  ssm / hybrid / encdec families (one logical segment).
+* ``sim``    — :class:`SimulatedBackend`; exact planning + pricing with a
+  no-op data plane, for the discrete-event simulator (models e.g. a DCN hop
+  without touching device memory).
+
+Third-party backends (RDMA, object-store staging, …) plug in with
+``register_backend("myname", MyBackend)`` and are selected per request via
+:func:`backend_for_engine` or an explicit ``get_backend`` call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Literal, Optional, Sequence
+from typing import Any, Callable, Dict, List, Literal, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -205,3 +243,164 @@ def transfer_request(src_spec: L.KVCacheSpec, src_cache: jax.Array, src_blocks: 
         dst_cache = engine.execute(plan, src_cache, dst_cache)
     latency = plan.latency(profile) if profile is not None else None
     return dst_cache, plan, latency
+
+
+# ---------------------------------------------------------------------------
+# TransferBackend protocol (see module docstring)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TransferJob:
+    """One request's planned transfer: exact costs + backend bookkeeping."""
+
+    request_id: int
+    backend: str                        # registry key that produced the job
+    schedule: str                       # "flowkv" | "blockwise" | "layerwise" | "state"
+    num_calls: int
+    num_bytes: int
+    num_blocks: int = 0
+    plan: Optional[TransferPlan] = None          # paged backends
+    src_blocks: Tuple[int, ...] = ()
+    dst_blocks: Tuple[int, ...] = ()
+
+
+class TransferBackend:
+    """Protocol base: plan / execute / price one request's state movement."""
+
+    name: str = "abstract"
+
+    def plan(self, req, src, dst) -> TransferJob:
+        raise NotImplementedError
+
+    def execute(self, job: TransferJob, src, dst) -> None:
+        raise NotImplementedError
+
+    def price(self, job: TransferJob, profile: TransportProfile) -> float:
+        if job.plan is not None:
+            return job.plan.latency(profile)
+        return profile.latency(num_calls=job.num_calls, num_bytes=job.num_bytes)
+
+
+def _plan_block_job(backend: str, schedule: Schedule, planner: TransferPlanner,
+                    spec: L.KVCacheSpec, req, src_bm, register_dst,
+                    dst_bm) -> TransferJob:
+    """Shared paged planning: get src blocks, register dst blocks (rolled
+    back if planning fails), and build the priced job."""
+    n = spec.blocks_for_tokens(req.prompt_len)
+    src_blocks = src_bm.get(req.request_id)[:n]
+    dst_blocks = register_dst(req)[:n]
+    try:
+        plan = planner.plan(schedule, src_blocks, dst_blocks)
+    except BaseException:
+        dst_bm.free(req.request_id)      # don't strand the registration
+        raise
+    return TransferJob(
+        request_id=req.request_id, backend=backend, schedule=schedule,
+        num_calls=plan.num_calls, num_bytes=plan.total_bytes,
+        num_blocks=plan.num_blocks, plan=plan,
+        src_blocks=tuple(int(b) for b in src_blocks),
+        dst_blocks=tuple(int(b) for b in dst_blocks))
+
+
+class PagedBackend(TransferBackend):
+    """Block-granular KV movement between two paged pools.
+
+    ``src`` / ``dst`` ports must expose ``kv`` (a pool with ``spec`` /
+    ``pool`` / ``bm``) and ``dst.register_transfer_in(req, num_tokens)``.
+    """
+
+    name = "paged"
+
+    def __init__(self, schedule: Schedule = "flowkv"):
+        self.schedule: Schedule = schedule
+
+    def plan(self, req, src, dst) -> TransferJob:
+        spec = src.kv.spec
+        return _plan_block_job(
+            self.name, self.schedule, TransferPlanner(spec), spec, req,
+            src.kv.bm, lambda r: dst.register_transfer_in(r, r.prompt_len + 1),
+            dst.kv.bm)
+
+    def execute(self, job: TransferJob, src, dst) -> None:
+        engine = TransferEngine(src.kv.spec, dst.kv.spec)
+        if self.schedule == "blockwise":
+            dst.kv.pool = engine.execute_blockwise(
+                list(job.src_blocks), list(job.dst_blocks), src.kv.pool, dst.kv.pool)
+        else:
+            dst.kv.pool = engine.execute(job.plan, src.kv.pool, dst.kv.pool)
+
+
+class StateBackend(TransferBackend):
+    """Whole-pytree movement for the state families (ssm / hybrid / encdec).
+
+    The cache ships as one logical segment per leaf; the destination still
+    reserves block-manager budget so admission control / KV_u accounting
+    stays uniform with the paged path.
+    """
+
+    name = "state"
+
+    def plan(self, req, src, dst) -> TransferJob:
+        state = src.states[req.request_id]
+        leaves = jax.tree.leaves(state)
+        nbytes = sum(int(x.size) * x.dtype.itemsize for x in leaves)
+        dst.register_transfer_in(req, req.prompt_len + 1)
+        return TransferJob(request_id=req.request_id, backend=self.name,
+                           schedule="state", num_calls=len(leaves),
+                           num_bytes=nbytes)
+
+    def execute(self, job: TransferJob, src, dst) -> None:
+        dst.import_state_by_id(job.request_id, src.export_state_by_id(job.request_id))
+
+
+class SimulatedBackend(TransferBackend):
+    """Exact planning + pricing with a no-op data plane (e.g. a modeled DCN
+    hop). Ports are ``SimNode``-shaped: ``bm`` / ``kv_spec`` / ``planner``.
+    """
+
+    name = "sim"
+
+    def __init__(self, schedule: Schedule = "flowkv"):
+        self.schedule: Schedule = schedule
+
+    def plan(self, req, src, dst) -> TransferJob:
+        return _plan_block_job(
+            self.name, self.schedule, src.planner, src.kv_spec, req,
+            src.bm, lambda r: dst.bm.register(r.request_id, r.prompt_len + 1),
+            dst.bm)
+
+    def execute(self, job: TransferJob, src, dst) -> None:
+        pass   # data plane is virtual in the simulator
+
+
+# -- registry ----------------------------------------------------------------
+_BACKENDS: Dict[str, Callable[..., TransferBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., TransferBackend]) -> None:
+    _BACKENDS[name] = factory
+
+
+def get_backend(name: str, **kwargs) -> TransferBackend:
+    try:
+        factory = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transfer backend {name!r}; "
+            f"registered: {sorted(_BACKENDS)}") from None
+    return factory(**kwargs)
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def backend_for_engine(engine, schedule: Schedule = "flowkv") -> TransferBackend:
+    """Pick the backend matching an engine port's cache transport."""
+    if getattr(engine, "paged", False):
+        return get_backend("paged", schedule=schedule)
+    return get_backend("state")
+
+
+register_backend("paged", PagedBackend)
+register_backend("state", StateBackend)
+register_backend("sim", SimulatedBackend)

@@ -4,7 +4,8 @@ primary launcher).
 Two modes:
 
 * ``--engine real``  — CPU-scale: real JAX compute through the PD cluster
-  (smoke-sized model), token-correct generation, real FlowKV page transfers.
+  (smoke-sized model) via the :class:`repro.serving.api.FlowKVClient`
+  streaming facade, token-correct generation, real FlowKV page transfers.
 * ``--engine sim``   — cluster-scale: discrete-event simulation driving the
   same control plane with calibrated hardware costs (A100/L20/H20/TPUv5e).
 
@@ -26,23 +27,26 @@ def run_real(args) -> dict:
 
     from repro.configs import get_smoke_config
     from repro.models.api import get_model
-    from repro.serving.cluster import PDCluster
-    from repro.serving.request import Request, SamplingParams
+    from repro.serving.api import FlowKVClient
+    from repro.serving.request import SamplingParams
 
     cfg = get_smoke_config(args.arch)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    cluster = PDCluster(cfg, params, num_prefill=args.num_prefill,
-                        num_decode=args.num_decode, num_blocks=args.blocks,
-                        transfer_schedule=args.schedule)
+    client = FlowKVClient(cfg, params, num_prefill=args.num_prefill,
+                          num_decode=args.num_decode, num_blocks=args.blocks,
+                          transfer_schedule=args.schedule,
+                          role_flip=args.role_flip)
     rng = np.random.RandomState(args.seed)
-    reqs = [Request(prompt_tokens=rng.randint(0, cfg.vocab_size,
-                                              size=rng.randint(8, 48)).tolist(),
-                    sampling=SamplingParams(max_new_tokens=args.max_new_tokens))
-            for _ in range(args.requests)]
-    done = cluster.run(reqs, max_cycles=500)
-    stats = cluster.stats()
-    stats["outputs"] = {r.request_id: r.output_tokens for r in done[:4]}
+    handles = [client.submit(rng.randint(0, cfg.vocab_size,
+                                         size=rng.randint(8, 48)).tolist(),
+                             SamplingParams(max_new_tokens=args.max_new_tokens))
+               for _ in range(args.requests)]
+    client.drain(max_cycles=500)
+    stats = client.stats()
+    stats["outputs"] = {h.request_id: h.request.output_tokens
+                        for h in handles[:4]}
+    stats["timing"] = {h.request_id: h.stats() for h in handles[:4]}
     return stats
 
 
@@ -76,6 +80,9 @@ def main() -> None:
     ap.add_argument("--num-prefill", type=int, default=1)
     ap.add_argument("--num-decode", type=int, default=1)
     ap.add_argument("--blocks", type=int, default=256)
+    ap.add_argument("--role-flip", action="store_true",
+                    help="let the load-aware scheduler reassign P<->D roles "
+                         "under imbalance (real engine)")
     ap.add_argument("--hw-prefill", default="a100")
     ap.add_argument("--hw-decode", default="a100")
     ap.add_argument("--tp", type=int, default=1)

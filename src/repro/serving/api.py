@@ -1,0 +1,197 @@
+"""FlowKV serving facade: streaming request handles over the PD cluster.
+
+This is the front door for the disaggregated runtime. Instead of the batch
+``PDCluster.run()`` loop (kept as a compatibility wrapper), callers submit
+requests one at a time and get back a :class:`RequestHandle`:
+
+.. code-block:: python
+
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1)
+    handle = client.submit(prompt_tokens, SamplingParams(max_new_tokens=16))
+    for tok in handle.tokens():        # streams per cluster cycle
+        print(tok)
+    print(handle.stats())              # queue/prefill/transfer/decode split
+
+Handles support incremental streaming (``tokens()``), blocking collection
+(``result()``), mid-flight ``cancel()`` (frees KV blocks on every node the
+request touched), and per-request timing stats. The client drives the
+cluster clock: each ``step()`` is one cluster cycle, and iterating a handle
+steps the cluster on demand, so several interleaved streams advance each
+other — continuous arrival works by just calling ``submit`` between
+iterations.
+
+Node lifecycle is exposed too: ``client.set_role(node_id, "decode")`` flips
+a node P<->D mid-run (see ``GlobalController.set_role``), and constructing
+with ``role_flip=True`` lets the load-aware scheduler do that flip itself
+under computational imbalance.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+from repro.models.common import ModelConfig
+from repro.serving.cluster import PDCluster
+from repro.serving.request import Request, RequestState, SamplingParams
+
+TERMINAL_STATES = (RequestState.FINISHED, RequestState.CANCELLED,
+                   RequestState.FAILED)
+
+
+class RequestHandle:
+    """One submitted request: stream, await, cancel, inspect."""
+
+    def __init__(self, client: "FlowKVClient", req: Request):
+        self._client = client
+        self._req = req
+
+    # -- identity / state ------------------------------------------------------
+    @property
+    def request_id(self) -> int:
+        return self._req.request_id
+
+    @property
+    def request(self) -> Request:
+        return self._req
+
+    @property
+    def state(self) -> RequestState:
+        return self._req.state
+
+    @property
+    def done(self) -> bool:
+        return self._req.state in TERMINAL_STATES
+
+    @property
+    def cancelled(self) -> bool:
+        return self._req.state is RequestState.CANCELLED
+
+    # -- streaming -------------------------------------------------------------
+    def tokens(self, max_cycles: int = 10_000) -> Iterator[int]:
+        """Incremental token stream, fed per cluster cycle.
+
+        Yields every output token exactly once, in order, stepping the
+        cluster whenever no new token is buffered yet. Ends when the request
+        finishes or is cancelled; raises TimeoutError after ``max_cycles``
+        cluster cycles without completion (stuck cluster).
+        """
+        emitted = 0
+        cycles = 0
+        while True:
+            out = self._req.output_tokens
+            while emitted < len(out):
+                yield out[emitted]
+                emitted += 1
+            if self.done:
+                return
+            if cycles >= max_cycles:
+                raise TimeoutError(
+                    f"request {self.request_id} incomplete after {max_cycles} cycles")
+            self._client.step()
+            cycles += 1
+
+    def result(self, max_cycles: int = 10_000) -> List[int]:
+        """Block (drive the cluster) until finished; return all output tokens."""
+        for _ in self.tokens(max_cycles=max_cycles):
+            pass
+        return list(self._req.output_tokens)
+
+    # -- control ----------------------------------------------------------------
+    def cancel(self) -> bool:
+        """Abort the request and free its KV blocks / state on every node."""
+        return self._client.cluster.cancel(self._req)
+
+    # -- observability ------------------------------------------------------------
+    def stats(self) -> Dict[str, Optional[float]]:
+        """Per-request timing breakdown in cluster cycles:
+        queue -> prefill -> transfer -> decode, plus ttft/e2e and raw marks."""
+        d = self._req.timing_breakdown()
+        d.update({
+            "state": self._req.state.value,
+            "num_output_tokens": self._req.num_output,
+            "prefill_node": self._req.prefill_node,
+            "decode_node": self._req.decode_node,
+            "retries": self._req.retries,
+        })
+        return d
+
+
+class FlowKVClient:
+    """Front-end facade over a :class:`PDCluster`.
+
+    Either construct a cluster in place (``FlowKVClient(cfg, params, ...)``,
+    extra kwargs forwarded to :class:`PDCluster`) or wrap an existing one
+    with :meth:`from_cluster`.
+    """
+
+    def __init__(self, cfg: Optional[ModelConfig] = None, params=None, *,
+                 cluster: Optional[PDCluster] = None, **cluster_kwargs):
+        if cluster is None:
+            if cfg is None or params is None:
+                raise ValueError("need (cfg, params) or an existing cluster=")
+            cluster = PDCluster(cfg, params, **cluster_kwargs)
+        elif cluster_kwargs or cfg is not None or params is not None:
+            raise ValueError(
+                "cluster= is mutually exclusive with cfg/params/cluster kwargs")
+        self.cluster = cluster
+        self.handles: Dict[int, RequestHandle] = {}
+
+    @classmethod
+    def from_cluster(cls, cluster: PDCluster) -> "FlowKVClient":
+        return cls(cluster=cluster)
+
+    # -- request entry -----------------------------------------------------------
+    def submit(self, prompt: Union[Sequence[int], Request],
+               sampling: Optional[SamplingParams] = None) -> RequestHandle:
+        """Submit a prompt (token ids) or a pre-built Request; route it now.
+
+        Arrival is stamped at submission (the cluster clock), so per-request
+        queue/ttft/e2e stats measure from when the system first saw it.
+        """
+        if isinstance(prompt, Request):
+            req = prompt
+            req.arrival_time = self.cluster.clock
+        else:
+            req = Request(prompt_tokens=list(prompt),
+                          sampling=sampling or SamplingParams(),
+                          arrival_time=self.cluster.clock)
+        self.cluster.submit(req)
+        handle = RequestHandle(self, req)
+        self._prune()   # long-lived clients: drop terminal handles we track
+        self.handles[req.request_id] = handle
+        return handle
+
+    # -- clock ----------------------------------------------------------------------
+    def step(self) -> None:
+        """Advance the cluster one cycle (all nodes + controller + transfers)."""
+        self.cluster.step()
+
+    def drain(self, max_cycles: int = 10_000) -> List[RequestHandle]:
+        """Step until every tracked request reaches a terminal state."""
+        tracked = list(self.handles.values())
+        pending = [h for h in tracked if not h.done]
+        for _ in range(max_cycles):
+            if not pending:
+                break
+            self.step()
+            pending = [h for h in pending if not h.done]
+        self._prune()
+        return tracked
+
+    def _prune(self) -> None:
+        """Stop tracking terminal requests (callers keep their own handles)."""
+        done = [rid for rid, h in self.handles.items() if h.done]
+        for rid in done:
+            del self.handles[rid]
+
+    # -- node lifecycle ---------------------------------------------------------------
+    def set_role(self, node_id: int, role: str) -> bool:
+        """Flip a node prefill<->decode mid-run."""
+        return self.cluster.set_role(node_id, role)
+
+    # -- observability -----------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return self.cluster.stats()
+
+    @property
+    def controller(self):
+        return self.cluster.controller

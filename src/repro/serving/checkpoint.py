@@ -95,6 +95,10 @@ def cluster_state(cluster) -> dict:
         node = {
             "role": cluster.controller.nodes[nid].role,
             "alive": cluster.controller.nodes[nid].alive,
+            # role-lifecycle state (set_role / role_flip policy)
+            "home_role": cluster.controller.nodes[nid].home_role,
+            "priority": sched.priority,
+            "priority_cycles_left": sched._priority_cycles_left,
             "queues": {
                 "prefill_waiting": [request_to_dict(r) for r in sched.prefill.waiting],
                 "prefill_running": [request_to_dict(r) for r in sched.prefill.running],
@@ -107,7 +111,8 @@ def cluster_state(cluster) -> dict:
         }
         nodes[str(nid)] = node
     return {"clock": cluster.clock, "nodes": nodes,
-            "finished": [request_to_dict(r) for r in cluster.finished]}
+            "finished": [request_to_dict(r) for r in cluster.finished],
+            "cancelled": [request_to_dict(r) for r in getattr(cluster, "cancelled", [])]}
 
 
 def save_cluster(cluster, path: str) -> None:
@@ -131,6 +136,18 @@ def load_cluster(cluster, path: str) -> dict:
     for nid_s, node in meta["nodes"].items():
         nid = int(nid_s)
         engine = cluster.engines[nid]
+        # roles are runtime state since set_role / the role-flip policy:
+        # restore them (plus scheduler priority) so routing and flip-back
+        # resume where the checkpoint left off
+        handle = cluster.controller.nodes[nid]
+        handle.role = node.get("role", handle.role)
+        handle.alive = bool(node.get("alive", handle.alive))
+        handle.home_role = node.get("home_role")
+        if node.get("priority"):
+            # re-arm the lease countdown too, else a temporary priority
+            # (imbalanced-regime lease) would become sticky across restore
+            engine.scheduler.set_priority(node["priority"],
+                                          cycles=node.get("priority_cycles_left", 0))
         if engine.paged and f"pool_{nid}" in pools:
             engine.kv.pool = jnp.asarray(pools[f"pool_{nid}"], engine.kv.spec.dtype)
         sched = engine.scheduler
@@ -161,6 +178,7 @@ def load_cluster(cluster, path: str) -> dict:
                 else:
                     target.append(req)
     cluster.finished = [request_from_dict(d) for d in meta["finished"]]
+    cluster.cancelled = [request_from_dict(d) for d in meta.get("cancelled", [])]
     return meta
 
 

@@ -1,8 +1,9 @@
 """PD-disaggregated cluster runtime (CPU-scale, real compute).
 
-Wires together: NodeEngines (P and D roles) + GlobalController (routing,
-regimes, failover) + TransferEngine (paged FlowKV transfer between node
-pools, or whole-state transfer for ssm/hybrid/encdec).
+Wires together: NodeEngines (role-flexible P/D nodes) + GlobalController
+(routing, regimes, role lifecycle, failover) + the TransferBackend registry
+(``core/transfer.py``: paged FlowKV transfer between node pools, whole-state
+transfer for ssm/hybrid/encdec, or any registered third-party transport).
 
 The runtime is the *correctness* half of the reproduction: disaggregated
 generation must be token-identical to monolithic generation on one engine.
@@ -15,13 +16,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.costmodel import select_route
 from repro.core.scheduler.global_controller import (GlobalController, ModelCost,
                                                     NodeHandle)
-from repro.core.transfer import TransferEngine
+from repro.core.transfer import backend_for_engine
 from repro.models.common import ModelConfig
 from repro.serving.engine import NodeEngine
 from repro.serving.request import Request, RequestState
@@ -42,7 +40,8 @@ class PDCluster:
                  num_decode: int = 1, num_blocks: int = 256,
                  allocator: str = "flowkv", transfer_schedule: str = "flowkv",
                  hardware: HardwareProfile = TPU_V5E, target: str = "tpu",
-                 max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None):
+                 max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
+                 role_flip: bool = False):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
@@ -52,12 +51,14 @@ class PDCluster:
             kv_bytes_per_token=float(cfg.kv_bytes_per_token() or 1024),
             weight_bytes=2.0 * cfg.num_params(),
         )
-        self.controller = GlobalController(model_cost, cfg.block_size, target=target)
+        self.controller = GlobalController(model_cost, cfg.block_size, target=target,
+                                           role_flip=role_flip)
         self.clock = 0.0
         self.submitted = 0
         self._dead: set = set()      # killed engines stop heartbeating/working
         self.transfers: List[TransferRecord] = []
         self.finished: List[Request] = []
+        self.cancelled: List[Request] = []
 
         for i in range(num_prefill + num_decode):
             role = "prefill" if i < num_prefill else "decode"
@@ -78,44 +79,34 @@ class PDCluster:
 
     # -- the FlowKV transfer (P pool -> D pool) -------------------------------------
     def _transfer(self, req: Request) -> None:
+        """Move one request's cache P->D via the TransferBackend registry.
+
+        The backend (paged vs state vs anything third-party) is resolved
+        from the source engine — this method never branches on the cache
+        transport itself.
+        """
         src = self.engines[req.prefill_node]
         dst = self.engines[req.decode_node]
+        req.transfer_start = self.clock
+        if src is dst:
+            # Role-flexible node serving both stages: the cache is already
+            # in this node's pool — hand off locally, keep the blocks.
+            req.transfer_end = self.clock
+            src.scheduler.sending_done(req, free=False)
+            dst.scheduler.enqueue_decode(req)
+            return
         profile = select_route(
             self.controller.nodes[src.node_id].host_id ==
             self.controller.nodes[dst.node_id].host_id, self.target)
-        req.transfer_start = self.clock
-        if src.paged:
-            spec = src.kv.spec
-            n = spec.blocks_for_tokens(req.prompt_len)
-            src_blocks = src.kv.bm.get(req.request_id)[:n]
-            dst_blocks = dst.register_transfer_in(req, req.prompt_len + 1)[:n]
-            engine = TransferEngine(spec, dst.kv.spec)
-            plan = engine.planner.plan(self.transfer_schedule, src_blocks, dst_blocks)
-            if self.transfer_schedule == "blockwise":
-                dst.kv.pool = engine.execute_blockwise(src_blocks, dst_blocks,
-                                                       src.kv.pool, dst.kv.pool)
-            else:
-                dst.kv.pool = engine.execute(plan, src.kv.pool, dst.kv.pool)
-            latency = plan.latency(profile)
-            self.transfers.append(TransferRecord(
-                req.request_id, self.transfer_schedule, plan.num_calls,
-                plan.total_bytes, latency))
-        else:
-            state = src.export_state(req)
-            dst.import_state(req, state)
-            # state path still reserves block-manager budget on the D node so
-            # admission control / KV_u accounting stays uniform across paths
-            dst.scheduler.bm.register(req.request_id, req.prompt_len + 1)
-            nbytes = sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(state))
-            latency = profile.latency(num_calls=len(jax.tree.leaves(state)),
-                                      num_bytes=nbytes)
-            self.transfers.append(TransferRecord(
-                req.request_id, "state", len(jax.tree.leaves(state)), nbytes, latency))
+        backend = backend_for_engine(src, self.transfer_schedule)
+        job = backend.plan(req, src, dst)
+        backend.execute(job, src, dst)
+        latency = backend.price(job, profile)
+        self.transfers.append(TransferRecord(
+            req.request_id, job.schedule, job.num_calls, job.num_bytes, latency))
         req.transfer_end = self.clock + latency
         src.scheduler.sending_done(req)
         dst.scheduler.enqueue_decode(req)
-        if req.first_token_time is None:
-            req.first_token_time = self.clock
 
     # -- main loop -------------------------------------------------------------------
     def step(self) -> None:
@@ -125,7 +116,9 @@ class PDCluster:
             if nid in self._dead or not self.controller.nodes[nid].alive:
                 continue
             self.controller.heartbeat(nid, self.clock)
-            pre_done, finished = engine.step()
+            # engine stamps prefill_start / first_token_time (the first token
+            # is emitted by prefill itself, not by the transfer)
+            pre_done, finished = engine.step(now=self.clock)
             for req in pre_done:
                 req.prefill_end = self.clock
                 engine.scheduler.mark_sending(req)
@@ -139,13 +132,37 @@ class PDCluster:
         self.controller.step(self.clock)
 
     def run(self, requests: List[Request], max_cycles: int = 1000) -> List[Request]:
+        """Batch compatibility wrapper over submit()/step().
+
+        New code should use :class:`repro.serving.api.FlowKVClient`, which
+        exposes the same loop through streaming per-request handles.
+        """
         for r in requests:
             self.submit(r)
         for _ in range(max_cycles):
             self.step()
-            if self.submitted and len(self.finished) >= self.submitted:
+            if self.submitted and \
+                    len(self.finished) + len(self.cancelled) >= self.submitted:
                 break
         return self.finished
+
+    # -- request lifecycle --------------------------------------------------------------
+    def cancel(self, req: Request) -> bool:
+        """Abort a request wherever it is; frees its blocks/state on EVERY
+        node (prefill, decode, or mid-transfer). Returns False if the
+        request already finished."""
+        if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
+            return False
+        for engine in self.engines.values():
+            engine.release(req)
+        req.state = RequestState.CANCELLED
+        req.finish_time = self.clock
+        self.cancelled.append(req)
+        return True
+
+    def set_role(self, node_id: int, role: str) -> bool:
+        """Reassign a node P<->D mid-run (delegates to the controller)."""
+        return self.controller.set_role(node_id, role)
 
     # -- fault tolerance ----------------------------------------------------------------
     def kill_node(self, node_id: int) -> None:
@@ -162,10 +179,13 @@ class PDCluster:
     def stats(self) -> Dict[str, float]:
         lat = [t.est_latency_s for t in self.transfers]
         calls = [t.num_calls for t in self.transfers]
+        ttfts = [t for t in (r.ttft() for r in self.finished) if t is not None]
         return {
             "finished": len(self.finished),
+            "cancelled": len(self.cancelled),
             "transfers": len(self.transfers),
             "mean_transfer_s": sum(lat) / len(lat) if lat else 0.0,
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,
+            "mean_ttft_cycles": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "events": len(self.controller.events),
         }

@@ -34,6 +34,16 @@ PAGED_FAMILIES = ("dense", "moe", "vlm", "audio")
 
 
 class NodeEngine:
+    """Role-flexible node: serves prefill AND decode from ONE block pool.
+
+    A node's *role* ("prefill"/"decode") lives in the controller's
+    ``NodeHandle`` and only biases routing and scheduler priority — the
+    engine itself runs whatever its ``HybridScheduler`` admits, which is
+    what lets ``GlobalController.set_role`` flip a node P<->D mid-run
+    without draining it: in-flight work of the old role finishes from the
+    same pool while new work of the new role is admitted.
+    """
+
     def __init__(self, node_id: int, cfg: ModelConfig, params,
                  num_blocks: int = 256, allocator: str = "flowkv",
                  max_batch_tokens: int = 2048, max_model_len: int = 512):
@@ -56,10 +66,18 @@ class NodeEngine:
                                          max_batch_tokens=max_batch_tokens)
 
     # -- prefill ------------------------------------------------------------------
-    def run_prefill(self, decision: ScheduleDecision) -> List[Request]:
-        """Execute the prefill batch; returns requests that finished prefill."""
+    def run_prefill(self, decision: ScheduleDecision,
+                    now: Optional[float] = None) -> List[Request]:
+        """Execute the prefill batch; returns requests that finished prefill.
+
+        The first output token is produced HERE (prefill's last forward
+        emits it), so this is also where TTFT is stamped when a clock is
+        supplied — not at transfer time.
+        """
         done: List[Request] = []
         for req in decision.prefill_batch:   # simple per-request prefill (no padding waste)
+            if now is not None and req.prefill_start is None:
+                req.prefill_start = now
             tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
             logits, cache = self.model.prefill(self.params, {"tokens": tokens})
             first = int(jnp.argmax(logits[0]))
@@ -71,6 +89,8 @@ class NodeEngine:
             else:
                 self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
             if self.scheduler.prefill_progressed(req, req.prompt_len):
+                if now is not None and req.first_token_time is None:
+                    req.first_token_time = now
                 done.append(req)
         self.scheduler.last_compute_util = 1.0 if decision.prefill_batch else 0.0
         return done
@@ -130,23 +150,42 @@ class NodeEngine:
             self.states[r.request_id] = cache
             r.output_tokens.append(int(jnp.argmax(logits[0])))
 
-    # -- transfer hooks (used by the cluster runtime) -----------------------------------
+    # -- transfer hooks (TransferBackend ports; see core/transfer.py) -------------------
     def export_state(self, req: Request):
         """State-path transfer payload (shipped whole, one segment)."""
-        return self.states.pop(req.request_id)
+        return self.export_state_by_id(req.request_id)
 
     def import_state(self, req: Request, state) -> None:
-        self.states[req.request_id] = state
+        self.import_state_by_id(req.request_id, state)
+
+    def export_state_by_id(self, request_id: int):
+        return self.states.pop(request_id)
+
+    def import_state_by_id(self, request_id: int, state) -> None:
+        self.states[request_id] = state
 
     def register_transfer_in(self, req: Request, num_tokens: int) -> List[int]:
         """Destination-side block registration ahead of a paged transfer."""
         return self.scheduler.bm.register(req.request_id, num_tokens)
 
+    # -- lifecycle -----------------------------------------------------------------------
+    def release(self, req: Request) -> bool:
+        """Drop every trace of a request from this node (cancel path).
+
+        Frees KV blocks, removes the request from all scheduler queues and
+        discards any state-path pytree. Safe to call on nodes that never saw
+        the request. Returns True if anything was released.
+        """
+        removed = self.scheduler.remove_request(req)
+        if self.states.pop(req.request_id, None) is not None:
+            removed = True
+        return removed
+
     # -- cycle -----------------------------------------------------------------------
-    def step(self) -> Tuple[List[Request], List[Request]]:
+    def step(self, now: Optional[float] = None) -> Tuple[List[Request], List[Request]]:
         """One scheduling cycle. Returns (prefill_done, decode_finished)."""
         decision = self.scheduler.schedule()
-        pre = self.run_prefill(decision) if decision.prefill_batch else []
+        pre = self.run_prefill(decision, now=now) if decision.prefill_batch else []
         fin = self.run_decode(decision) if decision.decode_batch else []
         if not decision.prefill_batch:
             self.scheduler.last_compute_util = 0.0

@@ -22,6 +22,7 @@ class RequestState(enum.Enum):
     DECODING = "decoding"        # running decode on a D-role scheduler
     SWAPPED = "swapped"          # preempted, KV swapped out
     FINISHED = "finished"
+    CANCELLED = "cancelled"      # client cancel; blocks freed on every node
     FAILED = "failed"            # node died; will be requeued by the controller
 
 # States that occupy KV blocks on some node.
@@ -93,7 +94,13 @@ class Request:
         return self.finish_time - self.arrival_time
 
     def tpot(self) -> Optional[float]:
-        """Time per output token, excluding the first (paper's TPOT)."""
+        """Time per output token, excluding the first (paper's TPOT).
+
+        ``first_token_time`` is stamped when prefill emits the first token,
+        so in disaggregated runs the first decode interval — and therefore
+        TPOT — includes the P->D transfer gap. That is the latency a client
+        actually observes between tokens 1 and 2.
+        """
         if self.finish_time is None or self.first_token_time is None or self.num_output < 2:
             return None
         return (self.finish_time - self.first_token_time) / (self.num_output - 1)
@@ -102,6 +109,20 @@ class Request:
         if self.transfer_start is None or self.transfer_end is None:
             return None
         return self.transfer_end - self.transfer_start
+
+    def timing_breakdown(self) -> dict:
+        """Per-stage wall-clock split (None where the stage hasn't happened):
+        queue -> prefill -> transfer -> decode, plus ttft / e2e."""
+        def span(a: Optional[float], b: Optional[float]) -> Optional[float]:
+            return None if a is None or b is None else b - a
+        return {
+            "queue_s": span(self.arrival_time, self.prefill_start),
+            "prefill_s": span(self.prefill_start, self.prefill_end),
+            "transfer_s": self.transfer_latency(),
+            "decode_s": span(self.transfer_end, self.finish_time),
+            "ttft_s": self.ttft(),
+            "e2e_s": self.e2e(),
+        }
 
     def reset_for_retry(self) -> None:
         """Return the request to WAITING after a node failure (fault path)."""

@@ -26,12 +26,12 @@ from typing import Dict, List, Optional
 from repro.core.scheduler.global_controller import (GlobalController, ModelCost,
                                                     NodeHandle)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
-from repro.core.block_manager import BlockManager
+from repro.core.block_manager import BlockManager, OutOfBlocksError
 from repro.core.costmodel import (MOONCAKE_RDMA, NCCL_ENI, IPC,
                                   VLLM_MERGE_ENI, VLLM_MERGE_INTRA,
                                   TransportProfile, select_route)
 from repro.core.layout import KVCacheSpec
-from repro.core.transfer import TransferPlanner
+from repro.core.transfer import TransferPlanner, get_backend
 from repro.models.common import ModelConfig
 from repro.serving.request import Request, RequestState
 from repro.sim.events import EventQueue
@@ -220,11 +220,13 @@ class ClusterSim:
             if node.scheduler.prefill_progressed(req, chunk):
                 req.prefill_end = now
                 req.output_tokens.append(0)   # first token (virtual)
+                # the first token is EMITTED here, by prefill — TTFT must not
+                # include the transfer (same fix as the real cluster)
+                if req.first_token_time is None:
+                    req.first_token_time = now
                 if self.spec.colocated:
                     node.scheduler.bm  # same pool: no transfer
                     node.scheduler.enqueue_decode(req)
-                    if req.first_token_time is None:
-                        req.first_token_time = now
                 else:
                     node.scheduler.mark_sending(req)
                     self._start_transfer(req, now)
@@ -252,21 +254,23 @@ class ClusterSim:
         dst = self.nodes[dst_id]
         if not src.bm.owns(req.request_id):
             return   # request was drained/requeued (failover) mid-transfer
-        n = src.kv_spec.blocks_for_tokens(req.prompt_len)
-        src_blocks = src.bm.get(req.request_id)[:n]
+        # Same TransferBackend registry as the real runtime: the "sim"
+        # backend plans/prices exactly but its data plane is a no-op.
+        backend = get_backend("sim", schedule=self.spec.schedule)
         try:
-            dst_blocks = dst.bm.register(req.request_id, req.prompt_len + 1)[:n]
-        except Exception:
-            # D pool full: requeue transfer shortly (backpressure)
+            job = backend.plan(req, src, dst)
+        except OutOfBlocksError:
+            # D pool full: requeue transfer shortly (backpressure). Anything
+            # else (bad schedule, double registration) must surface.
             self.eq.push(now + 0.01, lambda: self._start_transfer(req, self.eq.now))
             return
-        plan = src.planner.plan(self.spec.schedule, src_blocks, dst_blocks)
+        backend.execute(job, src, dst)
         profile = (self.spec.transfer_intra if self.same_host
                    else self.spec.transfer_inter)
-        latency = plan.latency(profile)
+        latency = backend.price(job, profile)
         req.transfer_start = now
         self.transfer_latencies.append(latency)
-        self.transfer_calls.append(plan.num_calls)
+        self.transfer_calls.append(job.num_calls)
         # sender-side compute blocked for a schedule-dependent share of the
         # transfer (per-call kernel contention)
         src.busy_until = max(src.busy_until, now) + \
@@ -274,8 +278,6 @@ class ClusterSim:
 
         def arrive():
             req.transfer_end = self.eq.now
-            if req.first_token_time is None:
-                req.first_token_time = self.eq.now
             src.scheduler.sending_done(req)
             dst.scheduler.enqueue_decode(req)
             self._poke(dst.node_id)

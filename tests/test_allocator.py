@@ -1,52 +1,27 @@
-"""Property tests: allocators + segments (hypothesis)."""
+"""Property tests: allocators + segments.
+
+``hypothesis`` is optional: without it the property tests skip (via
+``pytest.importorskip``) and a deterministic seeded-random workload still
+checks the allocator invariants.
+"""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.allocator import (BlockAllocator, OutOfBlocksError,
                                   SegmentAllocator)
 from repro.core.segments import (Segment, blocks_to_segments, fragmentation,
                                  segments_to_blocks, validate_disjoint)
 
-
-# ---------------------------------------------------------------------------
-# segments
-# ---------------------------------------------------------------------------
-@given(st.lists(st.integers(0, 500), max_size=200))
-@settings(max_examples=60, deadline=None)
-def test_blocks_segments_roundtrip(ids):
-    assert segments_to_blocks(blocks_to_segments(ids)) == ids
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-def test_segment_basics():
-    s = Segment(4, 3)
-    assert s.end == 7 and s.contains(6) and not s.contains(7)
-    assert s.merge(Segment(7, 2)) == Segment(4, 5)
-    taken, rest = s.split(2)
-    assert taken == Segment(4, 2) and rest == Segment(6, 1)
-    with pytest.raises(ValueError):
-        Segment(0, 0)
-    with pytest.raises(ValueError):
-        s.merge(Segment(9, 1))
-    assert fragmentation(blocks_to_segments([1, 2, 3])) == 0.0
-
-
-# ---------------------------------------------------------------------------
-# allocator invariants under random workloads
-# ---------------------------------------------------------------------------
-@st.composite
-def _ops(draw):
-    return draw(st.lists(
-        st.tuples(st.sampled_from(["alloc", "free", "extend"]),
-                  st.integers(1, 40)),
-        min_size=1, max_size=120))
-
-
-@pytest.mark.parametrize("cls", [BlockAllocator, SegmentAllocator])
-@given(ops=_ops(), seed=st.integers(0, 10_000))
-@settings(max_examples=40, deadline=None)
-def test_allocator_invariants(cls, ops, seed):
+def _apply_ops(cls, ops, seed):
+    """Shared invariant harness: random alloc/free/extend trace."""
     rng = random.Random(seed)
     alloc = cls(256)
     live = {}
@@ -73,6 +48,62 @@ def test_allocator_invariants(cls, ops, seed):
             assert len(bs) == len(blocks)
             assert not (bs & seen)
             seen |= bs
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(0, 500), max_size=200))
+    @settings(max_examples=60, deadline=None)
+    def test_blocks_segments_roundtrip(ids):
+        assert segments_to_blocks(blocks_to_segments(ids)) == ids
+
+    @st.composite
+    def _ops(draw):
+        return draw(st.lists(
+            st.tuples(st.sampled_from(["alloc", "free", "extend"]),
+                      st.integers(1, 40)),
+            min_size=1, max_size=120))
+
+    @pytest.mark.parametrize("cls", [BlockAllocator, SegmentAllocator])
+    @given(ops=_ops(), seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_allocator_invariants(cls, ops, seed):
+        _apply_ops(cls, ops, seed)
+else:
+    def test_hypothesis_property_suite():
+        pytest.importorskip("hypothesis")   # records the skip reason
+
+
+# -- deterministic fallbacks: same invariants, seeded random traces ------------
+def test_blocks_segments_roundtrip_deterministic():
+    rng = random.Random(1)
+    for trial in range(40):
+        ids = [rng.randint(0, 500) for _ in range(rng.randint(0, 200))]
+        assert segments_to_blocks(blocks_to_segments(ids)) == ids
+
+
+@pytest.mark.parametrize("cls", [BlockAllocator, SegmentAllocator])
+def test_allocator_invariants_deterministic(cls):
+    rng = random.Random(2)
+    for seed in range(12):
+        ops = [(rng.choice(["alloc", "free", "extend"]), rng.randint(1, 40))
+               for _ in range(rng.randint(1, 120))]
+        _apply_ops(cls, ops, seed)
+
+
+def test_segment_basics():
+    s = Segment(4, 3)
+    assert s.end == 7 and s.contains(6) and not s.contains(7)
+    assert s.merge(Segment(7, 2)) == Segment(4, 5)
+    taken, rest = s.split(2)
+    assert taken == Segment(4, 2) and rest == Segment(6, 1)
+    with pytest.raises(ValueError):
+        Segment(0, 0)
+    with pytest.raises(ValueError):
+        s.merge(Segment(9, 1))
+    assert fragmentation(blocks_to_segments([1, 2, 3])) == 0.0
 
 
 def test_segment_allocator_merges_on_free():

@@ -1,0 +1,270 @@
+"""FlowKVClient serving API: streaming handles, cancel, role lifecycle.
+
+Correctness bar (same as test_cluster): everything the streaming path emits
+must be token-identical to monolithic generation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.block_manager import BlockManager
+from repro.core.scheduler import (GlobalController, HybridScheduler, ModelCost,
+                                  NodeHandle)
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.serving.api import FlowKVClient
+from repro.serving.cluster import PDCluster
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.sim.hardware import A100
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n=4, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(0, cfg.vocab_size, size=rng.randint(5, 30)))
+            for _ in range(n)]
+
+
+def _reference(cfg, params, prompts, steps=6):
+    refs = {}
+    for p in prompts:
+        out = T.greedy_generate(params, cfg, jnp.asarray([p], jnp.int32), steps)
+        refs[tuple(p)] = [int(x) for x in out[0]]
+    return refs
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("schedule", ["flowkv", "layerwise", "blockwise"])
+def test_streaming_matches_monolithic(small_model, schedule):
+    """Interleaved token streams == monolithic generation, all 3 schedules."""
+    cfg, params = small_model
+    prompts = _prompts(cfg)
+    refs = _reference(cfg, params, prompts)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=128, transfer_schedule=schedule)
+    handles = [client.submit(p, SamplingParams(max_new_tokens=6))
+               for p in prompts]
+    streams = {h.request_id: [] for h in handles}
+    iters = {h.request_id: h.tokens() for h in handles}
+    saw_partial = False
+    while iters:   # round-robin: one token per live stream per pass
+        for rid, it in list(iters.items()):
+            try:
+                streams[rid].append(next(it))
+            except StopIteration:
+                del iters[rid]
+                continue
+            handle = next(h for h in handles if h.request_id == rid)
+            if not handle.done:
+                saw_partial = True   # token delivered BEFORE the request finished
+    assert saw_partial, "streaming never yielded a token mid-flight"
+    for h in handles:
+        assert streams[h.request_id] == refs[tuple(h.request.prompt_tokens)]
+        assert h.request.state is RequestState.FINISHED
+
+
+def test_result_and_stats_breakdown(small_model):
+    cfg, params = small_model
+    [prompt] = _prompts(cfg, n=1, seed=11)
+    ref = _reference(cfg, params, [prompt])[tuple(prompt)]
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1, num_blocks=64)
+    h = client.submit(prompt, SamplingParams(max_new_tokens=6))
+    assert h.result() == ref
+    s = h.stats()
+    # the full queue->prefill->transfer->decode split must be populated
+    for key in ("queue_s", "prefill_s", "transfer_s", "decode_s",
+                "ttft_s", "e2e_s"):
+        assert s[key] is not None, key
+        assert s[key] >= 0.0, (key, s[key])
+    # first token is emitted by PREFILL: TTFT ends at prefill_end, before decode
+    req = h.request
+    assert req.first_token_time == req.prefill_end
+    assert s["e2e_s"] >= s["ttft_s"]
+    assert client.stats()["mean_ttft_cycles"] > 0.0
+
+
+def test_run_wrapper_equals_streaming(small_model):
+    """PDCluster.run (compat wrapper) and the handle API agree token-for-token."""
+    cfg, params = small_model
+    prompts = _prompts(cfg, n=3, seed=21)
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1, num_blocks=128)
+    done = cluster.run([Request(prompt_tokens=list(p),
+                                sampling=SamplingParams(max_new_tokens=5))
+                        for p in prompts], max_cycles=80)
+    batch = {tuple(r.prompt_tokens): r.output_tokens for r in done}
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1, num_blocks=128)
+    for p in prompts:
+        h = client.submit(p, SamplingParams(max_new_tokens=5))
+        assert h.result() == batch[tuple(p)]
+
+
+# ---------------------------------------------------------------------------
+# cancel
+# ---------------------------------------------------------------------------
+def test_cancel_frees_blocks_on_decode_node(small_model):
+    cfg, params = small_model
+    [prompt] = _prompts(cfg, n=1, seed=31)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1, num_blocks=64)
+    h = client.submit(prompt, SamplingParams(max_new_tokens=200))
+    while h.request.state is not RequestState.DECODING:
+        client.step()
+    dnode = client.cluster.engines[h.request.decode_node]
+    assert dnode.scheduler.bm.owns(h.request_id)   # KV landed on D
+    assert h.cancel()
+    assert h.cancelled and h.done
+    for eng in client.cluster.engines.values():
+        assert not eng.scheduler.bm.owns(h.request_id)
+        eng.scheduler.bm.check_invariants()
+        assert eng.scheduler.bm.num_free == 64, "cancel leaked blocks"
+    assert not h.cancel()                          # idempotent: already terminal
+    # the stream ends cleanly instead of hanging
+    assert list(h.tokens()) == h.request.output_tokens
+
+
+def test_cancel_queued_request_before_prefill(small_model):
+    cfg, params = small_model
+    rng = np.random.RandomState(41)
+    long_prompt = rng.randint(0, cfg.vocab_size, size=40).tolist()
+    [other] = _prompts(cfg, n=1, seed=42)
+    ref = _reference(cfg, params, [other], steps=4)[tuple(other)]
+    # token budget 8: the first request's chunk exhausts it, so the second
+    # sits in the prefill WAITING queue across cycles — cancellable there
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=64, max_batch_tokens=8)
+    h1 = client.submit(long_prompt, SamplingParams(max_new_tokens=4))
+    h2 = client.submit(other, SamplingParams(max_new_tokens=4))
+    client.step()
+    assert h2.request.state is RequestState.WAITING
+    pnode = client.cluster.engines[h2.request.prefill_node]
+    assert h2.request in pnode.scheduler.prefill.waiting
+    assert h2.cancel()
+    assert h2.request not in pnode.scheduler.prefill.waiting
+    assert list(h2.tokens()) == []                  # never produced anything
+    # the cluster keeps serving the other request after the cancel
+    ref1 = _reference(cfg, params, [long_prompt], steps=4)[tuple(long_prompt)]
+    assert h1.result() == ref1
+    for eng in client.cluster.engines.values():
+        assert not eng.scheduler.bm.owns(h2.request_id)
+        assert eng.scheduler.bm.num_free == 64
+    # run() compat wrapper terminates even when some requests were cancelled
+    assert client.cluster.submitted == 2
+    assert len(client.cluster.finished) + len(client.cluster.cancelled) == 2
+
+
+# ---------------------------------------------------------------------------
+# node lifecycle: set_role
+# ---------------------------------------------------------------------------
+def test_set_role_flip_keeps_generation_token_correct(small_model):
+    cfg, params = small_model
+    prompts = _prompts(cfg, n=6, seed=51)
+    refs = _reference(cfg, params, prompts, steps=5)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=2,
+                          num_blocks=128)
+    first = [client.submit(p, SamplingParams(max_new_tokens=5))
+             for p in prompts[:3]]
+    for _ in range(2):
+        client.step()                       # some work lands on the old roles
+    # flip decode node 2 into a prefill node mid-run; in-flight decode on it
+    # (if any) must still finish from the same pool
+    assert client.set_role(2, "prefill")
+    assert client.controller.nodes[2].role == "prefill"
+    assert any(e.kind == "set_role" for e in client.controller.events)
+    second = [client.submit(p, SamplingParams(max_new_tokens=5))
+              for p in prompts[3:]]
+    client.drain(max_cycles=200)
+    for h in first + second:
+        assert h.request.state is RequestState.FINISHED
+        assert h.request.output_tokens == refs[tuple(h.request.prompt_tokens)]
+    # no leaks across the flip
+    for eng in client.cluster.engines.values():
+        eng.scheduler.bm.check_invariants()
+        assert eng.scheduler.bm.num_free == 128
+
+
+def test_checkpoint_restores_roles_and_cancelled(tmp_path, small_model):
+    from repro.serving.checkpoint import load_cluster, save_cluster
+    cfg, params = small_model
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=2, num_blocks=64)
+    client.set_role(2, "prefill")
+    client.controller.nodes[2].home_role = "decode"
+    h = client.submit(list(range(8)), SamplingParams(max_new_tokens=4))
+    assert h.cancel()
+    save_cluster(client.cluster, str(tmp_path / "ckpt"))
+
+    c2 = PDCluster(cfg, params, num_prefill=1, num_decode=2, num_blocks=64)
+    load_cluster(c2, str(tmp_path / "ckpt"))
+    assert c2.controller.nodes[2].role == "prefill"          # flip survives
+    assert c2.controller.nodes[2].home_role == "decode"      # flip-back armed
+    assert c2.engines[2].scheduler.priority == "prefill"
+    assert len(c2.cancelled) == 1
+    assert c2.cancelled[0].state is RequestState.CANCELLED
+
+
+def test_set_role_flip_back_and_validation(small_model):
+    cfg, params = small_model
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1, num_blocks=64)
+    assert client.set_role(1, "prefill")
+    assert not client.set_role(1, "prefill")      # no-op: already prefill
+    assert client.set_role(1, "decode")
+    with pytest.raises(ValueError):
+        client.set_role(1, "bogus")
+
+
+# ---------------------------------------------------------------------------
+# load-triggered flip policy (controller-level, no model needed)
+# ---------------------------------------------------------------------------
+def _controller(num_p, num_d, **kw):
+    mc = ModelCost(flops_per_token=2 * 8e9, kv_bytes_per_token=131072.0,
+                   weight_bytes=16e9)
+    gc = GlobalController(mc, block_size=32, **kw)
+    for i in range(num_p + num_d):
+        role = "prefill" if i < num_p else "decode"
+        sched = HybridScheduler(i, BlockManager(512, 32), max_batch_tokens=4096)
+        gc.register_node(NodeHandle(i, role, host_id=i // 2, hardware=A100,
+                                    scheduler=sched))
+    return gc
+
+
+def test_role_flip_policy_reassigns_and_reverts():
+    gc = _controller(1, 3, role_flip=True)
+    for _ in range(40):                       # P flooded, D idle -> imbalance
+        gc.nodes[0].scheduler.enqueue_prefill(
+            Request(prompt_tokens=list(range(2000)),
+                    sampling=SamplingParams(max_new_tokens=8)))
+    gc.nodes[0].scheduler.last_token_budget_used = 1.0
+    gc.nodes[0].scheduler.last_compute_util = 1.0
+    for _ in range(30):
+        gc.step()
+        if len(gc.prefill_nodes()) > 1:
+            break
+    assert len(gc.prefill_nodes()) > 1, "flip policy never reassigned a decode node"
+    assert any(e.kind == "set_role" for e in gc.events)
+    assert len(gc.decode_nodes()) >= 1, "flip policy stranded the decode role"
+    # residency: the flip must hold for the anti-thrash window even though the
+    # diluted hot-role score reads "normal" right after the flip
+    flipped = [n for n in gc.prefill_nodes() if n.home_role == "decode"]
+    for _ in range(gc.role_switch_cycles - 1):
+        gc.step()
+        for n in flipped:
+            assert n.role == "prefill", "flip reverted before its residency"
+    # load clears -> flipped nodes return to their home role
+    gc.nodes[0].scheduler.prefill.waiting.clear()
+    gc.nodes[0].scheduler.last_token_budget_used = 0.0
+    gc.nodes[0].scheduler.last_compute_util = 0.0
+    for _ in range(40):
+        gc.step()
+        if len(gc.decode_nodes()) == 3:
+            break
+    assert len(gc.decode_nodes()) == 3, "flipped nodes never reverted"
+    assert all(n.home_role is None for n in gc.nodes.values())

@@ -49,6 +49,9 @@ def main() -> None:
         from benchmarks import transfer_latency
         for r in transfer_latency.rows():
             print(r)
+        # fused data plane: transport calls vs kernel dispatches per schedule
+        for r in transfer_latency.dispatch_rows():
+            print(r)
     if want("fig1"):
         from benchmarks import time_breakdown
         for r in time_breakdown.rows():

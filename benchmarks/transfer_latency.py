@@ -4,18 +4,36 @@ Exact call counts come from the real ``TransferPlanner`` over the real
 allocators; latency from the Table-3-calibrated transport profiles.
 Also reports the TPU-target (ICI/DCN) columns — the port's predicted
 transfer latencies — and wall-clock µs/call of the planner itself.
+
+The dispatch section executes the REAL fused data plane (one Pallas
+descriptor-table dispatch per plan) on a small pool and reports, per
+schedule, the planner's transport-call count next to the executor's
+dispatch count and wall-clock — the paper's call-count collapse made
+observable: layerwise/blockwise/flowkv differ in ``num_calls`` only,
+every one of them runs as a single dispatch.
+
+CLI: ``python -m benchmarks.transfer_latency [--json] [--check]``
+(``--check`` asserts flowkv <= blockwise <= layerwise on calls and
+dispatches; used by CI as the smoke gate).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.costmodel import (IPC, MOONCAKE_RDMA, NCCL_ENI, NCCL_INTRA,
                                   TPU_DCN, TPU_ICI, VLLM_MERGE_ENI,
                                   VLLM_MERGE_INTRA)
-from repro.core.layout import KVCacheSpec
-from repro.core.transfer import TransferPlanner
+from repro.core.layout import KVCacheSpec, alloc_cache
+from repro.core.transfer import TransferEngine, TransferPlanner
+
+SCHEDULES = ("layerwise", "blockwise", "flowkv")
 
 PAPER_SINGLE = {  # input_tokens -> (mooncake, vllm_disagg, flowkv_layerwise, flowkv)
     500: (0.3010, 0.1179, 0.0678, 0.0044),
@@ -83,6 +101,78 @@ def rows(arch: str = "llama31-8b") -> List[str]:
     return out
 
 
-if __name__ == "__main__":
+def dispatch_stats() -> Dict[str, Dict[str, float]]:
+    """Execute the fused data plane per schedule; report calls vs dispatches.
+
+    Runs on a small pool (interpret-mode Pallas on CPU) so the wall-clock
+    measures the one-dispatch-per-plan execution path itself, not staging an
+    8k-block pool through the interpreter.
+    """
+    spec = KVCacheSpec(num_layers=4, num_blocks=96, block_size=4,
+                       num_kv_heads=2, head_dim=8, dtype=jnp.float32)
+    src_pool = jnp.arange(
+        int(jnp.prod(jnp.asarray(spec.shape))), dtype=jnp.float32
+    ).reshape(spec.shape)
+    n = 12
+    src_ids = list(range(2, 2 + n))
+    dst_ids = list(range(30, 30 + n))      # aligned placement: flowkv -> 1 call
+    stats: Dict[str, Dict[str, float]] = {}
+    for schedule in SCHEDULES:
+        engine = TransferEngine(spec)
+        plan = engine.planner.plan(schedule, src_ids, dst_ids)
+        engine.execute(plan, src_pool, alloc_cache(spec))   # warm the jit cache
+        dst_pool = jax.block_until_ready(alloc_cache(spec))
+        t0 = time.perf_counter()
+        out_pool = engine.execute(plan, src_pool, dst_pool)
+        jax.block_until_ready(out_pool)
+        wall_s = time.perf_counter() - t0
+        stats[schedule] = {
+            "num_calls": plan.num_calls,
+            "num_dispatches": plan.num_dispatches,
+            "num_descriptors": len(plan.to_descriptors()),
+            "wall_s": wall_s,
+        }
+    return stats
+
+
+def dispatch_rows() -> List[str]:
+    out = []
+    for schedule, s in dispatch_stats().items():
+        out.append(
+            f"table3/dispatch/{schedule},{s['wall_s']*1e6:.1f},"
+            f"calls={s['num_calls']} dispatches={s['num_dispatches']} "
+            f"descriptors={s['num_descriptors']}")
+    return out
+
+
+def check(stats: Dict[str, Dict[str, float]]) -> None:
+    """CI smoke gate: the paper's call-count ordering must hold, and every
+    schedule must execute as a single dispatch."""
+    calls = {s: stats[s]["num_calls"] for s in SCHEDULES}
+    disp = {s: stats[s]["num_dispatches"] for s in SCHEDULES}
+    assert disp["flowkv"] <= disp["blockwise"] <= disp["layerwise"], disp
+    assert calls["flowkv"] <= calls["blockwise"] <= calls["layerwise"], calls
+    assert all(d == 1 for d in disp.values()), disp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="print per-schedule dispatch stats as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert flowkv <= blockwise <= layerwise ordering")
+    args = ap.parse_args()
+    stats = dispatch_stats()
+    if args.check:
+        check(stats)
+    if args.json:
+        print(json.dumps(stats, indent=2, sort_keys=True))
+        return
     for r in rows():
         print(r)
+    for r in dispatch_rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

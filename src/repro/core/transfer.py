@@ -10,13 +10,18 @@ Three transfer *schedules*, matching the paper's comparison set:
   aligned run (ideally 1).
 
 The planner produces an exact :class:`TransferPlan` (call count, bytes,
-per-run descriptors). The engine executes a plan against real JAX arrays
-(gather from the source pool, scatter into the destination pool) and the
-cost model prices it for the benchmark tables.
+per-run descriptors). Execution is schedule-INDEPENDENT: every plan lowers to
+a :class:`DescriptorTable` — int32 arrays of (src block, dst block, layer,
+k/v) page descriptors — and the engine runs the whole table as ONE fused,
+jit-compiled Pallas gather–scatter dispatch (``kernels/kv_gather/kv_transfer``)
+with the destination pool donated. Schedules therefore differ only in how
+many *transport calls* the cost model prices (``num_calls``), never in Python
+loop structure; the dispatch count is 1 per non-empty plan by construction.
 
-On real TPU hardware each :class:`TransferOp` lowers to one DMA descriptor
-(same-pod ICI) or one DCN send; on this CPU container execution is a faithful
-data-plane copy and the *latency* is priced by ``core.costmodel``.
+On real TPU hardware each descriptor row lowers to one page DMA inside the
+single dispatch (same-pod ICI) or one DCN send; on this CPU container the
+kernel runs in interpret mode as a faithful data-plane copy and the *latency*
+is priced by ``core.costmodel``.
 
 The TransferBackend protocol
 ----------------------------
@@ -50,7 +55,8 @@ Built-in backends, keyed in the module registry
   ssm / hybrid / encdec families (one logical segment).
 * ``sim``    — :class:`SimulatedBackend`; exact planning + pricing with a
   no-op data plane, for the discrete-event simulator (models e.g. a DCN hop
-  without touching device memory).
+  without touching device memory). Its call AND dispatch counts come from the
+  same descriptor tables the real executor runs.
 
 Third-party backends (RDMA, object-store staging, …) plug in with
 ``register_backend("myname", MyBackend)`` and are selected per request via
@@ -59,22 +65,31 @@ Third-party backends (RDMA, object-store staging, …) plug in with
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Literal, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import layout as L
 from repro.core.alignment import AlignmentResult, align
 from repro.core.costmodel import TransportProfile
 from repro.core.segments import Segment, blocks_to_segments
+from repro.kernels.kv_gather import kv_transfer
 
 Schedule = Literal["layerwise", "blockwise", "flowkv"]
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except real TPU backends, where the
+    kernel compiles to Mosaic (mirrors the donation check in _get_executor)."""
+    return jax.default_backend() != "tpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class TransferOp:
-    """One contiguous-range transfer call."""
+    """One contiguous-range transfer call (pricing/bookkeeping granularity)."""
 
     src: Segment              # block-id range on the sender
     dst: Segment              # block-id range on the receiver
@@ -84,15 +99,112 @@ class TransferOp:
 
 
 @dataclasses.dataclass(frozen=True)
+class DescriptorTable:
+    """Page-granular lowering of a plan: one row per (block, layer, k/v) page.
+
+    The four row arrays are parallel int32 columns; ``src_block_seq`` /
+    ``dst_block_seq`` keep the request's block-pair sequence (one entry per
+    block, in plan order) so transport-call counts can be re-derived from the
+    very table the executor runs.
+    """
+
+    src_block: np.ndarray     # (d,) int32 — sender block id per descriptor
+    dst_block: np.ndarray     # (d,) int32
+    layer: np.ndarray         # (d,) int32
+    kv: np.ndarray            # (d,) int32
+    src_block_seq: np.ndarray  # (n,) int32 — block-pair sequence, plan order
+    dst_block_seq: np.ndarray  # (n,) int32
+    num_layers: int
+
+    def __len__(self) -> int:
+        return int(self.src_block.shape[0])
+
+    def page_ids(self, spec: L.KVCacheSpec, side: str) -> np.ndarray:
+        """Flattened page ids for one side, honouring that side's layout.
+
+        FLOWKV pools (B, L, 2, H) flatten to page ``block*L*2 + layer*2 + kv``;
+        VLLM pools (L, 2, B, H) to ``(layer*2 + kv)*B + block``.
+        """
+        blocks = self.src_block if side == "src" else self.dst_block
+        if spec.layout is L.KVLayout.FLOWKV:
+            return (blocks * spec.num_layers + self.layer) * 2 + self.kv
+        return (self.layer * 2 + self.kv) * np.int32(spec.num_blocks) + blocks
+
+    def num_calls(self, schedule: Schedule) -> int:
+        """Transport calls this table costs under a schedule (paper Table 3)."""
+        n = int(self.src_block_seq.shape[0])
+        if n == 0:
+            return 0
+        if schedule == "layerwise":
+            return 2 * self.num_layers * n
+        if schedule == "blockwise":
+            return 2 * self.num_layers
+        # flowkv: one call per bidirectionally-aligned run of block pairs —
+        # delegated to align() so run detection has a single source of truth
+        # shared with the planner's per-run ops/pricing.
+        return align(self.src_block_seq.tolist(),
+                     self.dst_block_seq.tolist()).num_calls
+
+
+def _lower_descriptors(schedule: Schedule, num_layers: int,
+                       src_blocks: Sequence[int],
+                       dst_blocks: Sequence[int]) -> DescriptorTable:
+    """Expand a plan's block lists into its page-descriptor table.
+
+    Row order is schedule-faithful (layerwise/flowkv are block-major, blockwise
+    is (layer, k/v)-major) but execution is order-independent: destination
+    pages within a plan are disjoint.
+    """
+    s = np.asarray(list(src_blocks), np.int32)
+    d = np.asarray(list(dst_blocks), np.int32)
+    n = s.shape[0]
+    Lr = num_layers
+    lay_inner = np.repeat(np.arange(Lr, dtype=np.int32), 2)   # (2L,) per block
+    kv_inner = np.tile(np.arange(2, dtype=np.int32), Lr)
+    if schedule == "blockwise":
+        src_block = np.tile(s, 2 * Lr)
+        dst_block = np.tile(d, 2 * Lr)
+        layer = np.repeat(np.arange(Lr, dtype=np.int32), 2 * n)
+        kv = np.tile(np.repeat(np.arange(2, dtype=np.int32), n), Lr)
+    else:
+        src_block = np.repeat(s, 2 * Lr)
+        dst_block = np.repeat(d, 2 * Lr)
+        layer = np.tile(lay_inner, n)
+        kv = np.tile(kv_inner, n)
+    return DescriptorTable(src_block=src_block, dst_block=dst_block,
+                           layer=layer, kv=kv, src_block_seq=s,
+                           dst_block_seq=d, num_layers=Lr)
+
+
+@dataclasses.dataclass(frozen=True)
 class TransferPlan:
     schedule: Schedule
     ops: List[TransferOp]
     total_bytes: int
     num_blocks: int
+    num_layers: int
+    src_blocks: Tuple[int, ...]
+    dst_blocks: Tuple[int, ...]
+
+    @functools.cached_property
+    def _descriptors(self) -> DescriptorTable:
+        return _lower_descriptors(self.schedule, self.num_layers,
+                                  self.src_blocks, self.dst_blocks)
+
+    def to_descriptors(self) -> DescriptorTable:
+        """Lower to the page-descriptor table the fused executor consumes."""
+        return self._descriptors
 
     @property
     def num_calls(self) -> int:
-        return len(self.ops)
+        """Transport calls priced by the cost model — derived from the SAME
+        descriptor table the executor dispatches (not from ``ops``)."""
+        return self.to_descriptors().num_calls(self.schedule)
+
+    @property
+    def num_dispatches(self) -> int:
+        """Kernel dispatches to execute this plan: 1, or 0 if empty."""
+        return 1 if len(self.to_descriptors()) else 0
 
     def latency(self, profile: TransportProfile) -> float:
         return profile.latency(self.num_calls, self.total_bytes)
@@ -115,9 +227,18 @@ class TransferPlanner:
             return self.plan_flowkv(src_blocks, dst_blocks)
         raise ValueError(f"unknown schedule {schedule!r}")
 
+    def _finish(self, schedule: Schedule, ops: List[TransferOp], total: int,
+                num_blocks: int, src_blocks: Sequence[int],
+                dst_blocks: Sequence[int]) -> TransferPlan:
+        return TransferPlan(schedule, ops, total, num_blocks,
+                            self.spec.num_layers,
+                            tuple(int(b) for b in src_blocks),
+                            tuple(int(b) for b in dst_blocks))
+
     def plan_layerwise(self, src_blocks: Sequence[int], dst_blocks: Sequence[int]) -> TransferPlan:
         """2 * L calls per block: the per-(layer, k/v, block) baseline."""
         spec = self.spec
+        src_blocks, dst_blocks = list(src_blocks), list(dst_blocks)
         per_call = spec.payload * jnp.dtype(spec.dtype).itemsize
         ops: List[TransferOp] = []
         for s, d in zip(src_blocks, dst_blocks):
@@ -126,28 +247,33 @@ class TransferPlanner:
                     ops.append(TransferOp(Segment(int(s), 1), Segment(int(d), 1),
                                           layer=layer, kv=kv, num_bytes=per_call))
         total = per_call * len(ops)
-        return TransferPlan("layerwise", ops, total, len(list(src_blocks)))
+        return self._finish("layerwise", ops, total, len(src_blocks),
+                            src_blocks, dst_blocks)
 
     def plan_blockwise(self, src_blocks: Sequence[int], dst_blocks: Sequence[int]) -> TransferPlan:
         """2 * L calls total: per-layer buffers merged then sent (vLLM-disagg).
 
         The merge memcpy cost is priced by the ``vllm_merge`` transport
-        profile, not counted as calls.
+        profile, not counted as calls. An empty block list yields an empty
+        plan (no calls, no bytes) — nothing was allocated, nothing moves.
         """
         spec = self.spec
-        n = len(list(src_blocks))
+        src_blocks, dst_blocks = list(src_blocks), list(dst_blocks)
+        n = len(src_blocks)
+        if n == 0:
+            return self._finish("blockwise", [], 0, 0, [], [])
         layer_bytes = n * spec.payload * jnp.dtype(spec.dtype).itemsize
         ops: List[TransferOp] = []
-        src_segs = blocks_to_segments(list(src_blocks))
-        dst_segs = blocks_to_segments(list(dst_blocks))
+        src_segs = blocks_to_segments(src_blocks)
+        dst_segs = blocks_to_segments(dst_blocks)
         # One merged buffer per (layer, k/v); src/dst ranges recorded as the
-        # covering span for bookkeeping (the buffer itself is staged).
+        # first run for bookkeeping (the buffer itself is staged).
         for layer in range(spec.num_layers):
             for kv in (0, 1):
-                ops.append(TransferOp(src_segs[0] if src_segs else Segment(0, 1),
-                                      dst_segs[0] if dst_segs else Segment(0, 1),
+                ops.append(TransferOp(src_segs[0], dst_segs[0],
                                       layer=layer, kv=kv, num_bytes=layer_bytes))
-        return TransferPlan("blockwise", ops, layer_bytes * len(ops), n)
+        return self._finish("blockwise", ops, layer_bytes * len(ops), n,
+                            src_blocks, dst_blocks)
 
     def plan_flowkv(self, src_blocks: Sequence[int], dst_blocks: Sequence[int]) -> TransferPlan:
         """Bidirectional segment alignment over the FlowKV layout."""
@@ -156,75 +282,100 @@ class TransferPlanner:
                 "flowkv schedule requires the FLOWKV (B, L, 2, H) layout; "
                 f"got {self.spec.layout}"
             )
-        result: AlignmentResult = align(list(src_blocks), list(dst_blocks))
+        src_blocks, dst_blocks = list(src_blocks), list(dst_blocks)
+        result: AlignmentResult = align(src_blocks, dst_blocks)
         ops = [
             TransferOp(run.src, run.dst, layer=None, kv=None,
                        num_bytes=run.length * self.spec.bytes_per_block)
             for run in result.runs
         ]
         total = sum(op.num_bytes for op in ops)
-        return TransferPlan("flowkv", ops, total, result.num_blocks)
+        return self._finish("flowkv", ops, total, result.num_blocks,
+                            src_blocks, dst_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Fused executor: one jitted Pallas dispatch per plan
+# ---------------------------------------------------------------------------
+_EXECUTOR_CACHE: Dict[Tuple, Callable] = {}
+
+# Module-wide dispatch counter: every fused-kernel invocation anywhere in the
+# process increments this exactly once (tests and benchmarks read it).
+_TOTAL_DISPATCHES = 0
+
+
+def total_dispatches() -> int:
+    return _TOTAL_DISPATCHES
+
+
+def reset_dispatch_counter() -> None:
+    global _TOTAL_DISPATCHES
+    _TOTAL_DISPATCHES = 0
+
+
+def _get_executor(src_spec: L.KVCacheSpec, dst_spec: L.KVCacheSpec,
+                  schedule: Schedule, interpret: bool) -> Callable:
+    """One compiled executor per (src_spec, dst_spec, schedule).
+
+    The executor body is schedule-independent by design — the cache key keeps
+    schedule so per-schedule jit caches (and their donation bookkeeping) stay
+    disjoint and countable. The destination pool is donated on accelerator
+    backends; on CPU donation is skipped (XLA:CPU cannot honour it and would
+    warn on every transfer).
+    """
+    key = (src_spec, dst_spec, schedule, interpret)
+    fn = _EXECUTOR_CACHE.get(key)
+    if fn is None:
+        donate = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def fn(src_pool, dst_pool, src_pages, dst_pages):
+            return kv_transfer(src_pool, dst_pool, src_pages, dst_pages,
+                               interpret=interpret)
+
+        _EXECUTOR_CACHE[key] = fn
+    return fn
 
 
 class TransferEngine:
     """Executes transfer plans against real device arrays.
 
-    ``execute`` is layout-aware and schedule-faithful: FlowKV plans move whole
-    block ranges; layerwise plans move per-(layer, kv) pages. The destination
-    pool may use a different block placement (and on heterogeneous clusters a
-    different total block count) — only the request's blocks move.
+    Every plan — any schedule, any src/dst layout pairing, any (possibly
+    heterogeneous) pool sizes — executes as ONE fused descriptor-table
+    dispatch: the plan lowers to flattened page ids on each side and the
+    jitted Pallas ``kv_transfer`` kernel moves all pages in a single call,
+    returning the updated destination pool (donated where the backend allows).
+    ``num_dispatches`` counts the engine's kernel invocations.
     """
 
-    def __init__(self, src_spec: L.KVCacheSpec, dst_spec: Optional[L.KVCacheSpec] = None):
+    def __init__(self, src_spec: L.KVCacheSpec, dst_spec: Optional[L.KVCacheSpec] = None,
+                 *, interpret: Optional[bool] = None):
         self.src_spec = src_spec
         self.dst_spec = dst_spec or src_spec
         if self.src_spec.bytes_per_block != self.dst_spec.bytes_per_block:
             raise ValueError("src/dst pools must agree on per-block payload")
+        if self.src_spec.num_layers != self.dst_spec.num_layers:
+            raise ValueError("src/dst pools must agree on layer count")
+        if self.src_spec.payload != self.dst_spec.payload:
+            raise ValueError("src/dst pools must agree on page payload")
+        self.interpret = default_interpret() if interpret is None else interpret
         self.planner = TransferPlanner(src_spec)
+        self.num_dispatches = 0
 
     def execute(self, plan: TransferPlan, src_cache: jax.Array,
                 dst_cache: jax.Array) -> jax.Array:
-        """Apply a plan: returns the updated destination pool."""
-        for op in plan.ops:
-            dst_cache = self._execute_op(op, plan.schedule, src_cache, dst_cache)
-        return dst_cache
-
-    def _execute_op(self, op: TransferOp, schedule: Schedule,
-                    src_cache: jax.Array, dst_cache: jax.Array) -> jax.Array:
-        src_ids = list(op.src.blocks())
-        dst_ids = list(op.dst.blocks())
-        if schedule == "flowkv":
-            payload = L.gather_blocks(src_cache, self.src_spec, src_ids)
-            return L.scatter_blocks(dst_cache, self.dst_spec, dst_ids, payload)
-        # layerwise / blockwise: per-(layer, kv) page moves
-        assert op.layer is not None and op.kv is not None
-        for s, d in zip(src_ids, dst_ids):
-            if self.src_spec.layout is L.KVLayout.FLOWKV:
-                page = src_cache[s, op.layer, op.kv]
-            else:
-                page = src_cache[op.layer, op.kv, s]
-            if self.dst_spec.layout is L.KVLayout.FLOWKV:
-                dst_cache = dst_cache.at[d, op.layer, op.kv].set(page.astype(dst_cache.dtype))
-            else:
-                dst_cache = dst_cache.at[op.layer, op.kv, d].set(page.astype(dst_cache.dtype))
-        return dst_cache
-
-    # Blockwise plans replicate full-list moves per (layer, kv); execute them
-    # faithfully by moving every block of the request for that layer slice.
-    def execute_blockwise(self, src_blocks: Sequence[int], dst_blocks: Sequence[int],
-                          src_cache: jax.Array, dst_cache: jax.Array) -> jax.Array:
-        for layer in range(self.src_spec.num_layers):
-            for kv in (0, 1):
-                for s, d in zip(src_blocks, dst_blocks):
-                    if self.src_spec.layout is L.KVLayout.FLOWKV:
-                        page = src_cache[s, layer, kv]
-                    else:
-                        page = src_cache[layer, kv, s]
-                    if self.dst_spec.layout is L.KVLayout.FLOWKV:
-                        dst_cache = dst_cache.at[d, layer, kv].set(page.astype(dst_cache.dtype))
-                    else:
-                        dst_cache = dst_cache.at[layer, kv, d].set(page.astype(dst_cache.dtype))
-        return dst_cache
+        """Apply a plan in one dispatch; returns the updated destination pool."""
+        global _TOTAL_DISPATCHES
+        table = plan.to_descriptors()
+        if len(table) == 0:
+            return dst_cache
+        src_pages = jnp.asarray(table.page_ids(self.src_spec, "src"))
+        dst_pages = jnp.asarray(table.page_ids(self.dst_spec, "dst"))
+        executor = _get_executor(self.src_spec, self.dst_spec, plan.schedule,
+                                 self.interpret)
+        self.num_dispatches += 1
+        _TOTAL_DISPATCHES += 1
+        return executor(src_cache, dst_cache, src_pages, dst_pages)
 
 
 def transfer_request(src_spec: L.KVCacheSpec, src_cache: jax.Array, src_blocks: Sequence[int],
@@ -237,10 +388,7 @@ def transfer_request(src_spec: L.KVCacheSpec, src_cache: jax.Array, src_blocks: 
     """
     engine = TransferEngine(src_spec, dst_spec)
     plan = engine.planner.plan(schedule, src_blocks, dst_blocks)
-    if schedule == "blockwise":
-        dst_cache = engine.execute_blockwise(src_blocks, dst_blocks, src_cache, dst_cache)
-    else:
-        dst_cache = engine.execute(plan, src_cache, dst_cache)
+    dst_cache = engine.execute(plan, src_cache, dst_cache)
     latency = plan.latency(profile) if profile is not None else None
     return dst_cache, plan, latency
 
@@ -258,6 +406,7 @@ class TransferJob:
     num_calls: int
     num_bytes: int
     num_blocks: int = 0
+    num_dispatches: int = 0             # fused kernel dispatches (paged: 0/1)
     plan: Optional[TransferPlan] = None          # paged backends
     src_blocks: Tuple[int, ...] = ()
     dst_blocks: Tuple[int, ...] = ()
@@ -296,7 +445,8 @@ def _plan_block_job(backend: str, schedule: Schedule, planner: TransferPlanner,
     return TransferJob(
         request_id=req.request_id, backend=backend, schedule=schedule,
         num_calls=plan.num_calls, num_bytes=plan.total_bytes,
-        num_blocks=plan.num_blocks, plan=plan,
+        num_blocks=plan.num_blocks, num_dispatches=plan.num_dispatches,
+        plan=plan,
         src_blocks=tuple(int(b) for b in src_blocks),
         dst_blocks=tuple(int(b) for b in dst_blocks))
 
@@ -305,7 +455,8 @@ class PagedBackend(TransferBackend):
     """Block-granular KV movement between two paged pools.
 
     ``src`` / ``dst`` ports must expose ``kv`` (a pool with ``spec`` /
-    ``pool`` / ``bm``) and ``dst.register_transfer_in(req, num_tokens)``.
+    ``pool`` / ``bm`` / ``import_plan``) and
+    ``dst.register_transfer_in(req, num_tokens)``.
     """
 
     name = "paged"
@@ -322,11 +473,8 @@ class PagedBackend(TransferBackend):
 
     def execute(self, job: TransferJob, src, dst) -> None:
         engine = TransferEngine(src.kv.spec, dst.kv.spec)
-        if self.schedule == "blockwise":
-            dst.kv.pool = engine.execute_blockwise(
-                list(job.src_blocks), list(job.dst_blocks), src.kv.pool, dst.kv.pool)
-        else:
-            dst.kv.pool = engine.execute(job.plan, src.kv.pool, dst.kv.pool)
+        dst.kv.import_plan(engine, job.plan, src.kv.pool)
+        job.num_dispatches = engine.num_dispatches
 
 
 class StateBackend(TransferBackend):
@@ -346,7 +494,7 @@ class StateBackend(TransferBackend):
         dst.register_transfer_in(req, req.prompt_len + 1)
         return TransferJob(request_id=req.request_id, backend=self.name,
                            schedule="state", num_calls=len(leaves),
-                           num_bytes=nbytes)
+                           num_bytes=nbytes, num_dispatches=1)
 
     def execute(self, job: TransferJob, src, dst) -> None:
         dst.import_state_by_id(job.request_id, src.export_state_by_id(job.request_id))
@@ -355,6 +503,8 @@ class StateBackend(TransferBackend):
 class SimulatedBackend(TransferBackend):
     """Exact planning + pricing with a no-op data plane (e.g. a modeled DCN
     hop). Ports are ``SimNode``-shaped: ``bm`` / ``kv_spec`` / ``planner``.
+    Call and dispatch counts come from the same descriptor tables the real
+    executor runs, so simulated tables match hardware tables exactly.
     """
 
     name = "sim"

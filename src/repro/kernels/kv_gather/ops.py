@@ -1,22 +1,41 @@
-"""Jitted wrapper for the KV gather kernel + the scatter inverse."""
+"""Jitted wrappers for the KV gather / scatter / fused-transfer kernels."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.kv_gather.kv_gather import kv_gather
+from repro.kernels.kv_gather.kv_scatter import kv_scatter
+from repro.kernels.kv_gather.kv_transfer import kv_transfer
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    # interpret everywhere except real TPU backends (compiled Mosaic there)
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def kv_gather_op(pool: jax.Array, block_ids: jax.Array, *,
-                 interpret: bool = True) -> jax.Array:
-    return kv_gather(pool, block_ids.astype(jnp.int32), interpret=interpret)
+                 interpret: Optional[bool] = None) -> jax.Array:
+    return kv_gather(pool, block_ids.astype(jnp.int32),
+                     interpret=_resolve(interpret))
 
 
-@jax.jit
-def kv_scatter_op(pool: jax.Array, block_ids: jax.Array,
-                  staging: jax.Array) -> jax.Array:
-    """Receiver side: place staged pages into local blocks."""
-    return pool.at[block_ids.astype(jnp.int32)].set(staging.astype(pool.dtype))
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_scatter_op(pool: jax.Array, block_ids: jax.Array, staging: jax.Array, *,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Receiver side: place staged pages into local blocks (one dispatch)."""
+    return kv_scatter(pool, block_ids.astype(jnp.int32), staging,
+                      interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_transfer_op(src_pool: jax.Array, dst_pool: jax.Array,
+                   src_pages: jax.Array, dst_pages: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """One fused descriptor-table dispatch (see ``kv_transfer``)."""
+    return kv_transfer(src_pool, dst_pool, src_pages.astype(jnp.int32),
+                       dst_pages.astype(jnp.int32), interpret=_resolve(interpret))

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the KV block-gather staging kernel."""
+"""Pure-jnp oracles for the KV staging/transfer kernels."""
 from __future__ import annotations
 
 import jax
@@ -8,3 +8,20 @@ import jax.numpy as jnp
 def kv_gather_ref(pool: jax.Array, block_ids: jax.Array) -> jax.Array:
     """pool (nb, L, 2, payload); block_ids (n,) -> staging (n, L, 2, payload)."""
     return jnp.take(pool, block_ids, axis=0)
+
+
+def kv_scatter_ref(pool: jax.Array, block_ids: jax.Array,
+                   staging: jax.Array) -> jax.Array:
+    """Inverse of :func:`kv_gather_ref`: place staged blocks into the pool."""
+    return pool.at[block_ids].set(staging.astype(pool.dtype))
+
+
+def kv_transfer_ref(src_pool: jax.Array, dst_pool: jax.Array,
+                    src_pages: jax.Array, dst_pages: jax.Array) -> jax.Array:
+    """Descriptor-table oracle over flat (num_pages, payload) page views."""
+    payload = src_pool.shape[-1]
+    src_flat = src_pool.reshape(-1, payload)
+    dst_flat = dst_pool.reshape(-1, payload)
+    out = dst_flat.at[dst_pages].set(
+        jnp.take(src_flat, src_pages, axis=0).astype(dst_flat.dtype))
+    return out.reshape(dst_pool.shape)

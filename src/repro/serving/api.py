@@ -103,7 +103,10 @@ class RequestHandle:
     # -- observability ------------------------------------------------------------
     def stats(self) -> Dict[str, Optional[float]]:
         """Per-request timing breakdown in cluster cycles:
-        queue -> prefill -> transfer -> decode, plus ttft/e2e and raw marks."""
+        queue -> prefill -> transfer -> decode, plus ttft/e2e and the transfer
+        data-plane counters — ``num_calls`` (transport calls priced) and
+        ``num_dispatches`` (fused kernel dispatches; 1 per plan, the metric
+        the paper's call-collapse optimizes)."""
         d = self._req.timing_breakdown()
         d.update({
             "state": self._req.state.value,

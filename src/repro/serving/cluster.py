@@ -33,6 +33,7 @@ class TransferRecord:
     num_calls: int
     num_bytes: int
     est_latency_s: float
+    num_dispatches: int = 0
 
 
 class PDCluster:
@@ -92,6 +93,7 @@ class PDCluster:
             # Role-flexible node serving both stages: the cache is already
             # in this node's pool — hand off locally, keep the blocks.
             req.transfer_end = self.clock
+            req.transfer_calls = req.transfer_dispatches = 0
             src.scheduler.sending_done(req, free=False)
             dst.scheduler.enqueue_decode(req)
             return
@@ -103,8 +105,11 @@ class PDCluster:
         backend.execute(job, src, dst)
         latency = backend.price(job, profile)
         self.transfers.append(TransferRecord(
-            req.request_id, job.schedule, job.num_calls, job.num_bytes, latency))
+            req.request_id, job.schedule, job.num_calls, job.num_bytes, latency,
+            job.num_dispatches))
         req.transfer_end = self.clock + latency
+        req.transfer_calls = job.num_calls
+        req.transfer_dispatches = job.num_dispatches
         src.scheduler.sending_done(req)
         dst.scheduler.enqueue_decode(req)
 
@@ -179,6 +184,7 @@ class PDCluster:
     def stats(self) -> Dict[str, float]:
         lat = [t.est_latency_s for t in self.transfers]
         calls = [t.num_calls for t in self.transfers]
+        disp = [t.num_dispatches for t in self.transfers]
         ttfts = [t for t in (r.ttft() for r in self.finished) if t is not None]
         return {
             "finished": len(self.finished),
@@ -186,6 +192,7 @@ class PDCluster:
             "transfers": len(self.transfers),
             "mean_transfer_s": sum(lat) / len(lat) if lat else 0.0,
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,
+            "mean_transfer_dispatches": sum(disp) / len(disp) if disp else 0.0,
             "mean_ttft_cycles": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "events": len(self.controller.events),
         }

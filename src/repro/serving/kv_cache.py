@@ -104,6 +104,16 @@ class PagedKVCache:
             v = jnp.pad(v, ((0, 0), (0, max_len - cur), (0, 0), (0, 0)))
         return k[:, :max_len], v[:, :max_len]
 
+    # -- transfer path -----------------------------------------------------------
+    def import_plan(self, engine, plan, src_pool: jax.Array) -> None:
+        """Land one transfer plan in this pool as ONE fused dispatch.
+
+        Replaces per-page copies: the engine lowers the plan to its descriptor
+        table and the whole table executes in a single jitted Pallas call,
+        updating the pool in place (donated where the backend allows).
+        """
+        self.pool = engine.execute(plan, src_pool, self.pool)
+
     # -- capacity / bookkeeping -----------------------------------------------------
     @property
     def utilization(self) -> float:

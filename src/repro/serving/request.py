@@ -62,6 +62,10 @@ class Request:
     finish_time: Optional[float] = None
     retries: int = 0
 
+    # --- transfer data-plane counters (set when the KV transfer runs) ----------
+    transfer_calls: Optional[int] = None        # transport calls priced
+    transfer_dispatches: Optional[int] = None   # fused kernel dispatches
+
     # -- derived ----------------------------------------------------------------
     @property
     def prompt_len(self) -> int:
@@ -122,6 +126,8 @@ class Request:
             "decode_s": span(self.transfer_end, self.finish_time),
             "ttft_s": self.ttft(),
             "e2e_s": self.e2e(),
+            "num_calls": self.transfer_calls,
+            "num_dispatches": self.transfer_dispatches,
         }
 
     def reset_for_retry(self) -> None:
@@ -133,6 +139,7 @@ class Request:
         self.decode_node = None
         self.prefill_start = self.prefill_end = None
         self.transfer_start = self.transfer_end = None
+        self.transfer_calls = self.transfer_dispatches = None
         self.first_token_time = None
         self.retries += 1
 

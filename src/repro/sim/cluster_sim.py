@@ -161,6 +161,7 @@ class ClusterSim:
         self.finished: List[Request] = []
         self.transfer_latencies: List[float] = []
         self.transfer_calls: List[int] = []
+        self.transfer_dispatches: List[int] = []
         self._poll_scheduled: Dict[int, bool] = {i: False for i in self.nodes}
 
     # -- routing ------------------------------------------------------------------
@@ -269,8 +270,11 @@ class ClusterSim:
                    else self.spec.transfer_inter)
         latency = backend.price(job, profile)
         req.transfer_start = now
+        req.transfer_calls = job.num_calls
+        req.transfer_dispatches = job.num_dispatches
         self.transfer_latencies.append(latency)
         self.transfer_calls.append(job.num_calls)
+        self.transfer_dispatches.append(job.num_dispatches)
         # sender-side compute blocked for a schedule-dependent share of the
         # transfer (per-call kernel contention)
         src.busy_until = max(src.busy_until, now) + \
@@ -303,5 +307,8 @@ class ClusterSim:
                                 if self.transfer_latencies else 0.0),
             "mean_transfer_calls": (sum(self.transfer_calls) / len(self.transfer_calls)
                                     if self.transfer_calls else 0.0),
+            "mean_transfer_dispatches": (
+                sum(self.transfer_dispatches) / len(self.transfer_dispatches)
+                if self.transfer_dispatches else 0.0),
             "events": len(self.controller.events),
         }

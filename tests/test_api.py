@@ -268,3 +268,19 @@ def test_role_flip_policy_reassigns_and_reverts():
             break
     assert len(gc.decode_nodes()) == 3, "flipped nodes never reverted"
     assert all(n.home_role is None for n in gc.nodes.values())
+
+
+def test_stats_expose_transfer_dispatch_counts(small_model):
+    """The serving API surfaces the metric the paper optimizes: transport
+    calls AND fused-kernel dispatches (always 1 per plan) per request."""
+    cfg, params = small_model
+    [prompt] = _prompts(cfg, n=1, seed=61)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=64, transfer_schedule="layerwise")
+    h = client.submit(prompt, SamplingParams(max_new_tokens=3))
+    h.result()
+    s = h.stats()
+    assert s["num_dispatches"] == 1          # one fused dispatch per plan
+    assert s["num_calls"] >= 2 * 2           # layerwise: 2*L per block
+    assert s["num_calls"] == client.cluster.transfers[-1].num_calls
+    assert client.stats()["mean_transfer_dispatches"] == 1.0

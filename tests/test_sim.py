@@ -67,3 +67,11 @@ def test_role_switch_fires_under_imbalance(cfg8b):
     stats = sim.run(generate(SIMULATED["10k"], rps=2.0, seed=0), t_max=50_000)
     kinds = {e.kind for e in sim.controller.events}
     assert "role_switch" in kinds or "regime" in kinds
+
+
+def test_sim_dispatch_counts_from_descriptor_tables(cfg8b):
+    """The simulator's dispatch metric comes from the same descriptor tables
+    the real executor runs: one dispatch per transfer, every system."""
+    for kind in ("flowkv", "vllm_disagg"):
+        stats = _run(cfg8b, kind)
+        assert stats["mean_transfer_dispatches"] == 1.0, kind

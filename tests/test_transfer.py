@@ -115,3 +115,122 @@ def test_calls_per_request_headline():
     lw = planner.plan_layerwise(ids, ids).num_calls
     assert abs(lw - 23469) / 23469 < 0.01
     assert planner.plan_flowkv(ids, ids).num_calls == 1
+
+
+# ---------------------------------------------------------------------------
+# Fused descriptor-table data plane
+# ---------------------------------------------------------------------------
+def _per_op_oracle(src_spec, dst_spec, src, dst, src_blocks, dst_blocks):
+    """The OLD per-(layer, kv, block) Python-loop path, kept as the oracle the
+    fused single-dispatch executor must match bit-exactly."""
+    out = np.array(dst)
+    s = np.asarray(src)
+    for bs, bd in zip(src_blocks, dst_blocks):
+        for layer in range(src_spec.num_layers):
+            for kv in (0, 1):
+                if src_spec.layout is L.KVLayout.FLOWKV:
+                    page = s[bs, layer, kv]
+                else:
+                    page = s[layer, kv, bs]
+                if dst_spec.layout is L.KVLayout.FLOWKV:
+                    out[bd, layer, kv] = page.astype(out.dtype)
+                else:
+                    out[layer, kv, bd] = page.astype(out.dtype)
+    return out
+
+
+@pytest.mark.parametrize("schedule", ["flowkv", "layerwise", "blockwise"])
+@pytest.mark.parametrize("src_layout,dst_layout", [
+    (L.KVLayout.FLOWKV, L.KVLayout.FLOWKV),
+    (L.KVLayout.FLOWKV, L.KVLayout.VLLM),
+    (L.KVLayout.VLLM, L.KVLayout.FLOWKV),
+])
+def test_fused_executor_matches_per_op_path(schedule, src_layout, dst_layout):
+    """One fused dispatch == the old per-op loop, for every schedule, across
+    heterogeneous pool sizes and non-identity scattered dst placements."""
+    if schedule == "flowkv" and src_layout is not L.KVLayout.FLOWKV:
+        pytest.skip("flowkv schedule requires the FLOWKV planner layout")
+    src_spec = _spec(src_layout)
+    dst_spec = L.KVCacheSpec(num_layers=3, num_blocks=40, block_size=4,
+                             num_kv_heads=2, head_dim=8, dtype=jnp.float32,
+                             layout=dst_layout)   # heterogeneous block count
+    rng = np.random.RandomState(7)
+    src = jnp.asarray(rng.randn(*src_spec.shape), jnp.float32)
+    dst0 = jnp.asarray(rng.randn(*dst_spec.shape), jnp.float32)
+    sb = [3, 4, 5, 11, 12]
+    db = [31, 2, 17, 8, 9]                         # non-identity, scattered
+    out, plan, _ = transfer_request(src_spec, src, sb, dst_spec, dst0, db, schedule)
+    expect = _per_op_oracle(src_spec, dst_spec, src, dst0, sb, db)
+    np.testing.assert_array_equal(np.asarray(out), expect)
+    assert plan.num_dispatches == 1
+
+
+def test_every_schedule_is_one_dispatch():
+    """The acceptance invariant: no per-block Python loop survives — each
+    schedule executes its whole plan as exactly ONE executor invocation."""
+    from repro.core import transfer as TR
+    spec = _spec()
+    rng = np.random.RandomState(3)
+    src = jnp.asarray(rng.randn(*spec.shape), jnp.float32)
+    sb, db = [1, 2, 3, 9, 15], [20, 21, 22, 4, 10]
+    for schedule in ("layerwise", "blockwise", "flowkv"):
+        engine = TR.TransferEngine(spec)
+        plan = engine.planner.plan(schedule, sb, db)
+        before = TR.total_dispatches()
+        engine.execute(plan, src, jnp.zeros(spec.shape, jnp.float32))
+        assert TR.total_dispatches() - before == 1, schedule
+        assert engine.num_dispatches == 1, schedule
+        assert plan.num_dispatches == 1
+
+
+def test_plan_blockwise_empty_returns_empty_plan():
+    """No fabricated Segment(0, 1) bookkeeping for ranges never allocated."""
+    planner = TransferPlanner(_spec())
+    plan = planner.plan_blockwise([], [])
+    assert plan.ops == []
+    assert plan.num_calls == 0
+    assert plan.total_bytes == 0
+    assert plan.num_blocks == 0
+    assert plan.num_dispatches == 0
+    # executing an empty plan is a data-plane no-op (zero dispatches)
+    from repro.core.transfer import TransferEngine
+    spec = _spec()
+    engine = TransferEngine(spec)
+    dst = jnp.ones(spec.shape, jnp.float32)
+    out = engine.execute(plan, jnp.zeros(spec.shape, jnp.float32), dst)
+    assert engine.num_dispatches == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dst))
+
+
+def test_descriptor_table_lowering():
+    """Descriptor counts/pages are exact and num_calls is derived from the
+    same table the executor runs."""
+    spec = _spec(layers=3)
+    planner = TransferPlanner(spec)
+    sb, db = [5, 6, 9], [2, 3, 7]
+    for schedule, calls in (("layerwise", 2 * 3 * 3), ("blockwise", 2 * 3),
+                            ("flowkv", 2)):
+        plan = planner.plan(schedule, sb, db)
+        table = plan.to_descriptors()
+        assert len(table) == 3 * 2 * 3            # n * 2 * L pages, always
+        assert table.num_calls(schedule) == calls
+        assert plan.num_calls == calls
+        # page ids must be in range and dst pages unique within a plan
+        src_pages = table.page_ids(spec, "src")
+        dst_pages = table.page_ids(spec, "dst")
+        assert src_pages.min() >= 0
+        assert src_pages.max() < spec.num_blocks * spec.num_layers * 2
+        assert len(np.unique(dst_pages)) == len(table)
+
+
+def test_fused_executor_untouched_blocks_preserved():
+    """Pages outside the descriptor table keep their previous contents."""
+    spec = _spec()
+    rng = np.random.RandomState(5)
+    src = jnp.asarray(rng.randn(*spec.shape), jnp.float32)
+    dst0 = jnp.asarray(rng.randn(*spec.shape), jnp.float32)
+    sb, db = [0, 1], [5, 6]
+    out, _, _ = transfer_request(spec, src, sb, spec, dst0, db, "flowkv")
+    untouched = [i for i in range(spec.num_blocks) if i not in db]
+    np.testing.assert_array_equal(np.asarray(out)[untouched],
+                                  np.asarray(dst0)[untouched])

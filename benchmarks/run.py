@@ -7,6 +7,7 @@
     fig4    benchmarks/heterogeneous.py      L20/H20 placement E2E
     fig1    benchmarks/time_breakdown.py     single-request time split
     fig5    benchmarks/allocator_bench.py    allocator contiguity/alignment
+    decode  benchmarks/decode_throughput.py  zero-gather decode dispatches/step
     roof    benchmarks/roofline.py           dry-run roofline table
 
 ``python -m benchmarks.run [--full] [--only table3,fig4,...]``
@@ -35,7 +36,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full RPS grids (paper-complete, slower)")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,roof")
+                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,decode,roof")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -71,6 +72,10 @@ def main() -> None:
     if want("fig4"):
         from benchmarks import heterogeneous
         for r in heterogeneous.rows():
+            print(r)
+    if want("decode"):
+        from benchmarks import decode_throughput
+        for r in decode_throughput.rows():
             print(r)
     if want("roof"):
         from benchmarks import roofline

@@ -64,6 +64,18 @@ class BlockManager:
         if blocks:
             self.allocator.free(blocks)
 
+    def release_all(self) -> List[int]:
+        """Free every request's blocks (node death / pool teardown).
+
+        Returns the request ids that held blocks. Safe to run before or
+        after the controller's failure drain — ``free`` tolerates both
+        orders.
+        """
+        rids = list(self._table)
+        for rid in rids:
+            self.free(rid)
+        return rids
+
     def get(self, request_id: int) -> List[int]:
         return list(self._table[request_id])
 

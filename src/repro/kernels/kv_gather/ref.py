@@ -25,3 +25,25 @@ def kv_transfer_ref(src_pool: jax.Array, dst_pool: jax.Array,
     out = dst_flat.at[dst_pages].set(
         jnp.take(src_flat, src_pages, axis=0).astype(dst_flat.dtype))
     return out.reshape(dst_pool.shape)
+
+
+def kv_append_ref(pool: jax.Array, block_tables: jax.Array,
+                  positions: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                  block_size: int) -> jax.Array:
+    """Batched token-append oracle: per-request slot writes, plain indexing.
+
+    pool (nb, L, 2, payload); block_tables (B, W); positions (B,);
+    k_new / v_new (L, B, KV, hd).
+    """
+    nb, L, two, payload = pool.shape
+    tok = payload // block_size
+    pv = pool.reshape(nb, L, 2, block_size, tok)
+    B = int(positions.shape[0])
+    for b in range(B):
+        blk = int(block_tables[b, int(positions[b]) // block_size])
+        slot = int(positions[b]) % block_size
+        pv = pv.at[blk, :, 0, slot].set(
+            k_new[:, b].reshape(L, tok).astype(pool.dtype))
+        pv = pv.at[blk, :, 1, slot].set(
+            v_new[:, b].reshape(L, tok).astype(pool.dtype))
+    return pv.reshape(pool.shape)

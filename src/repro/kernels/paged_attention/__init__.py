@@ -1,6 +1,7 @@
 from repro.kernels.paged_attention.ops import paged_decode_attention_op
 from repro.kernels.paged_attention.paged_attention import paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_attention.ref import (paged_decode_attention_ref,
+                                               paged_decode_attention_stats_ref)
 
 __all__ = ["paged_decode_attention", "paged_decode_attention_op",
-           "paged_decode_attention_ref"]
+           "paged_decode_attention_ref", "paged_decode_attention_stats_ref"]

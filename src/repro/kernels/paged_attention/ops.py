@@ -5,6 +5,10 @@ slices that layer's contiguous page plane, and runs the kernel. On TPU the
 call compiles to a Mosaic kernel; on this CPU container ``interpret=True``
 executes the same kernel body for correctness (tests sweep shapes/dtypes
 against ``ref.py``).
+
+The batched zero-gather decode step (``models/transformer.decode_step_paged``)
+calls the unjitted kernel directly inside its own jit — one compiled artifact
+covers the whole layer stack plus the fused KV append.
 """
 from __future__ import annotations
 
@@ -16,11 +20,14 @@ import jax.numpy as jnp
 from repro.kernels.paged_attention.paged_attention import paged_decode_attention
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret",
+                                             "return_stats"))
 def paged_decode_attention_op(q: jax.Array, pool: jax.Array, layer,
                               block_tables: jax.Array, lengths: jax.Array,
-                              *, block_size: int, interpret: bool = True) -> jax.Array:
+                              *, block_size: int, interpret: bool = True,
+                              return_stats: bool = False):
     """q (B,H,hd); pool (nb, L, 2, payload) FlowKV layout; layer scalar."""
     pages = jax.lax.dynamic_index_in_dim(pool, layer, axis=1, keepdims=False)
     return paged_decode_attention(q, pages, block_tables, lengths,
-                                  block_size=block_size, interpret=interpret)
+                                  block_size=block_size, interpret=interpret,
+                                  return_stats=return_stats)

@@ -17,6 +17,11 @@ with compute).
 Tiling: payload = block_size * KV * hd. With the default 32-token blocks and
 128-wide head_dim every MXU operand is lane-aligned (hd multiple of 128 for
 most archs; 64/160/256 variants still vector-friendly).
+
+``return_stats=True`` additionally emits the per-(kv-head, group) online
+softmax state ``(m, l)`` so callers can merge EXTRA keys exactly — the
+zero-gather decode step uses this to fold in the in-flight token (whose K/V
+is not in the pool yet) without densifying any cached page.
 """
 from __future__ import annotations
 
@@ -32,9 +37,12 @@ NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 def _kernel(block_tables_ref, lengths_ref,     # scalar prefetch
             q_ref, pages_ref,                  # VMEM inputs
-            o_ref,                             # VMEM output
-            m_ref, l_ref, acc_ref,             # VMEM scratch
-            *, block_size: int, num_kv: int, head_dim: int):
+            *refs,                             # VMEM outputs + scratch
+            block_size: int, num_kv: int, head_dim: int, return_stats: bool):
+    if return_stats:
+        o_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -87,17 +95,34 @@ def _kernel(block_tables_ref, lengths_ref,     # scalar prefetch
         denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
         out = (acc_ref[...] / denom).reshape(h, head_dim)
         o_ref[0] = out.astype(o_ref.dtype)
+        if return_stats:
+            m_out_ref[0] = m_ref[...]
+            l_out_ref[0] = l_ref[...]
 
 
 def paged_decode_attention(q: jax.Array, pages: jax.Array,
                            block_tables: jax.Array, lengths: jax.Array,
-                           *, block_size: int, interpret: bool = True) -> jax.Array:
-    """q (B,H,hd); pages (nb,2,payload); block_tables (B,maxb); lengths (B,)."""
+                           *, block_size: int, interpret: bool = True,
+                           return_stats: bool = False):
+    """q (B,H,hd); pages (nb,2,payload); block_tables (B,maxb); lengths (B,).
+
+    Returns ``out (B,H,hd)``; with ``return_stats=True`` returns
+    ``(out, m, l)`` where ``m``/``l`` are the fp32 online-softmax max and
+    normalizer per (B, KV, G) — ``out * l`` recovers the unnormalized
+    accumulator for exact merging with additional keys.
+    """
     b, h, hd = q.shape
     maxb = block_tables.shape[1]
     payload = pages.shape[-1]
     num_kv = payload // (block_size * hd)
     g = h // num_kv
+
+    out_specs = [pl.BlockSpec((1, h, hd), lambda bb, i, bt, ln: (bb, 0, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((b, h, hd), q.dtype)]
+    if return_stats:
+        out_specs += [pl.BlockSpec((1, num_kv, g),
+                                   lambda bb, i, bt, ln: (bb, 0, 0))] * 2
+        out_shapes += [jax.ShapeDtypeStruct((b, num_kv, g), jnp.float32)] * 2
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -107,7 +132,7 @@ def paged_decode_attention(q: jax.Array, pages: jax.Array,
             pl.BlockSpec((1, 2, payload),
                          lambda bb, i, bt, ln: (bt[bb, i], 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, hd), lambda bb, i, bt, ln: (bb, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((num_kv, g), jnp.float32),
             pltpu.VMEM((num_kv, g), jnp.float32),
@@ -115,10 +140,14 @@ def paged_decode_attention(q: jax.Array, pages: jax.Array,
         ],
     )
     kernel = functools.partial(_kernel, block_size=block_size,
-                               num_kv=num_kv, head_dim=hd)
-    return pl.pallas_call(
+                               num_kv=num_kv, head_dim=hd,
+                               return_stats=return_stats)
+    outs = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        out_shape=out_shapes,
         interpret=interpret,
     )(block_tables, lengths, q, pages)
+    if return_stats:
+        return outs[0], outs[1], outs[2]
+    return outs[0]

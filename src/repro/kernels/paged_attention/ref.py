@@ -38,3 +38,40 @@ def paged_decode_attention_ref(q: jax.Array, pages: jax.Array,
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", w.astype(v.dtype), v)
     return out.reshape(b, h, hd)
+
+
+def paged_decode_attention_stats_ref(q: jax.Array, pages: jax.Array,
+                                     block_tables: jax.Array, lengths: jax.Array,
+                                     block_size: int):
+    """Oracle for ``return_stats=True``: (out, m, l) with fp32 softmax state.
+
+    ``m`` is the running max score, ``l`` the normalizer, per (B, KV, G) —
+    the same quantities the kernel keeps in VMEM scratch.
+    """
+    b, h, hd = q.shape
+    payload = pages.shape[-1]
+    kv = payload // (block_size * hd)
+    g = h // kv
+    maxb = block_tables.shape[1]
+
+    gathered = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    gathered = gathered.reshape(b, maxb, 2, block_size, kv, hd)
+    k = gathered[:, :, 0].reshape(b, maxb * block_size, kv, hd)
+    v = gathered[:, :, 1].reshape(b, maxb * block_size, kv, hd)
+
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    t = maxb * block_size
+    valid = jnp.arange(t)[None, :] < lengths[:, None]
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(valid[:, None, None, :], scores, neg)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(scores - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    # masked weights (not a raw softmax) so a fully-masked row (length 0)
+    # yields out = 0, matching the kernel's init state
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    m = jnp.where(lengths[:, None, None] > 0, m, neg)
+    return out.reshape(b, h, hd).astype(q.dtype), m, l

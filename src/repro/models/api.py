@@ -38,6 +38,10 @@ class Model:
     decode: Callable[[Params, jax.Array, Dict[str, jax.Array]], Tuple[jax.Array, Dict[str, jax.Array]]]
     init_cache: Callable[..., Dict[str, jax.Array]]
     cache_axes: Callable[[], Dict[str, Tuple[Optional[str], ...]]]
+    # Zero-gather decode: (params, token (B,), pool, block_tables, lengths)
+    # -> (logits, updated pool). Only the paged transformer families have one;
+    # None means the engine must use the dense ``decode`` bridge.
+    decode_paged: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
 
 
 def get_model(cfg: ModelConfig) -> Model:
@@ -66,6 +70,11 @@ def _transformer_model(cfg: ModelConfig) -> Model:
         decode=lambda p, tok, cache: transformer.decode_step(p, cfg, tok, cache),
         init_cache=lambda batch, max_len, **kw: transformer.init_cache(cfg, batch, max_len, **kw),
         cache_axes=transformer.cache_axes,
+        # the paged kernel has no local-window mask: windowed configs get no
+        # zero-gather step rather than a silently-unwindowed one
+        decode_paged=None if cfg.attn_window > 0 else (
+            lambda p, tok, pool, bt, lens: transformer.decode_step_paged(
+                p, cfg, tok, pool, bt, lens)),
     )
 
 

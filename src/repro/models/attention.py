@@ -157,6 +157,49 @@ def decode_self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfi
     return out_project(p, out), (cache_k, cache_v)
 
 
+def decode_paged_self_attention(p: Dict[str, jax.Array], x: jax.Array,
+                                cfg: ModelConfig, pages: jax.Array,
+                                block_tables: jax.Array, position: jax.Array,
+                                *, interpret: bool = True
+                                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token decode directly against one layer's FlowKV page plane.
+
+    x (B, 1, D); pages (nb, 2, payload) — ``pool[:, layer]``; block_tables
+    (B, W) int32; position (B,) int32 = tokens already cached (the in-flight
+    token's absolute index). The cached keys are read IN PLACE by the paged
+    kernel; the in-flight token — whose K/V is not in the pool yet — is
+    folded in exactly via the kernel's online-softmax state (m, l), so no
+    dense (B, T) cache is ever materialized. Returns
+    (out (B, 1, D), (k_new (B, KV, hd), v_new (B, KV, hd))); the caller
+    appends the new K/V for the whole layer stack in one fused scatter.
+    """
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    pos = jnp.broadcast_to(jnp.asarray(position), (x.shape[0],))
+    q, k_new, v_new = qkv_project(p, x, cfg, pos[:, None])
+    q1, k1, v1 = q[:, 0], k_new[:, 0], v_new[:, 0]
+    out_old, m_old, l_old = paged_decode_attention(
+        q1, pages, block_tables, pos, block_size=cfg.block_size,
+        interpret=interpret, return_stats=True)
+    b, h, hd = q1.shape
+    kvh = k1.shape[1]
+    g = h // kvh
+    # merge the in-flight token as one extra key (exact online-softmax step)
+    qg = q1.reshape(b, kvh, g, hd).astype(jnp.float32)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qg, k1.astype(jnp.float32))
+    s_self = s_self / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    m_new = jnp.maximum(m_old, s_self)
+    alpha = jnp.exp(m_old - m_new)
+    p_self = jnp.exp(s_self - m_new)
+    l_new = l_old * alpha + p_self
+    acc = (out_old.reshape(b, kvh, g, hd).astype(jnp.float32)
+           * (l_old * alpha)[..., None]
+           + p_self[..., None] * v1.astype(jnp.float32)[:, :, None, :])
+    out = acc / jnp.maximum(l_new, 1e-30)[..., None]
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    return out_project(p, out), (k1, v1)
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (encoder-decoder)
 # ---------------------------------------------------------------------------

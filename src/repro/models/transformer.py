@@ -230,6 +230,52 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     return logits, new_cache
 
 
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jax.Array,
+                      pool: jax.Array, block_tables: jax.Array,
+                      lengths: jax.Array, *, interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """One batched decode step directly on the FlowKV pool (zero-gather).
+
+    token (B,) int32; pool (nb, L, 2, payload); block_tables (B, W) int32;
+    lengths (B,) int32 = tokens already cached per request — the new token's
+    write position. Returns (logits (B, V) fp32, updated pool).
+
+    Unlike :func:`decode_step`, no dense (L, B, T, KV, hd) cache is ever
+    built: every layer's attention reads pages in place through the Pallas
+    paged kernel (the in-flight token is merged via the kernel's softmax
+    state), and the batch's new K/V for ALL layers lands in one fused
+    descriptor-table scatter after the layer stack. Under ``jax.jit`` with
+    the pool donated this is one device dispatch per decode cycle,
+    independent of batch size and context length.
+    """
+    from repro.kernels.kv_gather import kv_append_tokens
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x = embed(token[:, None], params["embed"], scale=cfg.embed_scale)
+    position = lengths
+    L = pool.shape[1]
+
+    def body(h, inputs):
+        lp, layer = inputs
+        hn = rms_norm(h, lp["norm_attn"], cfg.norm_eps)
+        pages = jax.lax.dynamic_index_in_dim(pool, layer, axis=1, keepdims=False)
+        attn_out, (k_new, v_new) = A.decode_paged_self_attention(
+            lp, hn, cfg, pages, block_tables, position, interpret=interpret)
+        h = h + attn_out
+        hn = rms_norm(h, lp["norm_mlp"], cfg.norm_eps)
+        ffn_out, _ = _ffn(lp, hn, cfg)
+        return h + ffn_out, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    pool = kv_append_tokens(pool, block_tables, position, ks, vs,
+                            block_size=cfg.block_size, interpret=interpret)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed", params["embed"]))[:, 0]
+    return logits, pool
+
+
 # ---------------------------------------------------------------------------
 # Convenience
 # ---------------------------------------------------------------------------

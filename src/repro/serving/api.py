@@ -103,16 +103,20 @@ class RequestHandle:
     # -- observability ------------------------------------------------------------
     def stats(self) -> Dict[str, Optional[float]]:
         """Per-request timing breakdown in cluster cycles:
-        queue -> prefill -> transfer -> decode, plus ttft/e2e and the transfer
-        data-plane counters — ``num_calls`` (transport calls priced) and
-        ``num_dispatches`` (fused kernel dispatches; 1 per plan, the metric
-        the paper's call-collapse optimizes)."""
+        queue -> prefill -> transfer -> decode, plus ttft/e2e and the
+        data-plane counters — transfer ``num_calls`` (transport calls
+        priced) and ``num_dispatches`` (fused kernel dispatches; 1 per
+        plan), and decode ``decode_steps`` / ``decode_dispatches`` (device
+        dispatches issued by the decode cycles this request rode in; equal
+        on the zero-gather path, O(batch) apart on the dense oracle)."""
         d = self._req.timing_breakdown()
         d.update({
             "state": self._req.state.value,
             "num_output_tokens": self._req.num_output,
             "prefill_node": self._req.prefill_node,
             "decode_node": self._req.decode_node,
+            "decode_steps": self._req.decode_steps,
+            "decode_dispatches": self._req.decode_dispatches,
             "retries": self._req.retries,
         })
         return d

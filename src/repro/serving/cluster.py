@@ -42,7 +42,7 @@ class PDCluster:
                  allocator: str = "flowkv", transfer_schedule: str = "flowkv",
                  hardware: HardwareProfile = TPU_V5E, target: str = "tpu",
                  max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
-                 role_flip: bool = False):
+                 role_flip: bool = False, paged_decode: str = "auto"):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
@@ -64,7 +64,8 @@ class PDCluster:
         for i in range(num_prefill + num_decode):
             role = "prefill" if i < num_prefill else "decode"
             engine = NodeEngine(i, cfg, params, num_blocks=num_blocks,
-                                allocator=allocator, max_batch_tokens=max_batch_tokens)
+                                allocator=allocator, max_batch_tokens=max_batch_tokens,
+                                paged_decode=paged_decode)
             self.engines[i] = engine
             host = (hosts or {}).get(i, i)
             self.controller.register_node(NodeHandle(
@@ -172,10 +173,17 @@ class PDCluster:
     # -- fault tolerance ----------------------------------------------------------------
     def kill_node(self, node_id: int) -> None:
         """Simulate node death: it stops heartbeating and doing work; the
-        controller's next heartbeat scan drains and re-routes its requests."""
+        controller's next heartbeat scan drains and re-routes its requests.
+
+        Every paged-KV allocation on the dead node is released immediately —
+        the controller's drain only frees requests still sitting in the
+        scheduler queues, so without this the dead pool reports phantom
+        utilization after checkpoint/restore or pool reuse."""
         self._dead.add(node_id)
         self.controller.nodes[node_id].last_heartbeat = -1e9
-        self.engines[node_id].states.clear()
+        engine = self.engines[node_id]
+        engine.scheduler.bm.release_all()
+        engine.states.clear()
 
     def checkpoint(self) -> dict:
         from repro.serving.checkpoint import cluster_state
@@ -186,6 +194,8 @@ class PDCluster:
         calls = [t.num_calls for t in self.transfers]
         disp = [t.num_dispatches for t in self.transfers]
         ttfts = [t for t in (r.ttft() for r in self.finished) if t is not None]
+        d_steps = sum(e.decode_steps for e in self.engines.values())
+        d_disp = sum(e.decode_dispatches for e in self.engines.values())
         return {
             "finished": len(self.finished),
             "cancelled": len(self.cancelled),
@@ -194,5 +204,14 @@ class PDCluster:
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,
             "mean_transfer_dispatches": sum(disp) / len(disp) if disp else 0.0,
             "mean_ttft_cycles": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            # decode data plane: dispatches per cycle is the zero-gather
+            # invariant (1.0 on the paged-kernel path, O(batch) on the oracle)
+            "decode_steps": d_steps,
+            "decode_dispatches": d_disp,
+            "mean_decode_dispatches_per_step": d_disp / d_steps if d_steps else 0.0,
+            # union, not sum: same-config engines share one jitted step, so a
+            # bucket two nodes both hit compiled once
+            "decode_compile_variants": len(set().union(
+                *(e._decode_cache_keys for e in self.engines.values()))),
             "events": len(self.controller.events),
         }

@@ -3,11 +3,23 @@ real JAX compute against the paged pool.
 
 Two request-state transports, per DESIGN.md §4:
 
-* paged KV path (transformer families) — prefill writes pages, decode
-  gathers pages into the dense cache format (reference path for the Pallas
-  paged-attention kernel) and appends the new token's K/V back to pages.
+* paged KV path (transformer families) — prefill writes pages; decode runs
+  the ZERO-GATHER step: one jitted ``Model.decode_paged`` call per cycle
+  that reads pages in place through the Pallas paged-attention kernel and
+  appends the batch's new K/V with one fused descriptor-table scatter, the
+  pool donated. No dense cache is materialized; device dispatches per
+  decode cycle are O(1) regardless of batch size or context length. The
+  old gather-dense bridge survives as the test/benchmark oracle
+  (``paged_decode="dense"``) and as the fallback for windowed attention.
 * state path (ssm / hybrid / encdec) — the request's cache pytree is held
   whole and shipped whole (one logical segment).
+
+Ragged batches are padded to power-of-two buckets in BOTH batch size and
+block-table width (pad lanes replicate lane 0, so their duplicate append
+descriptors are idempotent), keeping the jit cache bounded at
+``O(log2(max_batch) * log2(max_blocks))`` variants. ``decode_dispatches`` /
+``decode_steps`` / ``decode_compile_variants`` surface through
+``RequestHandle.stats()`` and ``PDCluster.stats()``.
 
 The engine is deliberately synchronous and single-host-scale: the paper's
 *timing* claims are reproduced by ``sim/cluster_sim.py`` with calibrated
@@ -18,10 +30,11 @@ tests/test_cluster.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.block_manager import BlockManager
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler, ScheduleDecision
@@ -31,6 +44,27 @@ from repro.serving.kv_cache import PagedKVCache, spec_for_model
 from repro.serving.request import Request, RequestState
 
 PAGED_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+# One jitted zero-gather step per (config, donation) — engines of the same
+# config share it, so a cluster of N nodes compiles each (batch, table-width)
+# bucket once, not N times.
+_PAGED_STEP_CACHE: Dict[Tuple[ModelConfig, bool], Any] = {}
+
+
+def _paged_step_for(model: Model, cfg: ModelConfig):
+    donate = jax.default_backend() in ("tpu", "gpu")
+    key = (cfg, donate)
+    fn = _PAGED_STEP_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(model.decode_paged,
+                     donate_argnums=(2,) if donate else ())
+        _PAGED_STEP_CACHE[key] = fn
+    return fn
 
 
 class NodeEngine:
@@ -46,7 +80,8 @@ class NodeEngine:
 
     def __init__(self, node_id: int, cfg: ModelConfig, params,
                  num_blocks: int = 256, allocator: str = "flowkv",
-                 max_batch_tokens: int = 2048, max_model_len: int = 512):
+                 max_batch_tokens: int = 2048, max_model_len: int = 512,
+                 paged_decode: str = "auto"):
         self.node_id = node_id
         self.cfg = cfg
         self.model: Model = get_model(cfg)
@@ -64,6 +99,28 @@ class NodeEngine:
         self.states: Dict[int, Any] = {}        # request_id -> cache pytree (state path)
         self.scheduler = HybridScheduler(node_id, bm,
                                          max_batch_tokens=max_batch_tokens)
+        # -- zero-gather decode plane ------------------------------------------------
+        # paged_decode: "auto" (kernel when supported), "kernel", "dense" (oracle).
+        if paged_decode not in ("auto", "kernel", "dense"):
+            raise ValueError(f"paged_decode must be auto|kernel|dense, got {paged_decode!r}")
+        # decode_paged is None for both state families and windowed-attention
+        # configs (the kernel has no window mask) — see models/api.py
+        kernel_ok = self.paged and self.model.decode_paged is not None
+        if paged_decode == "kernel" and not kernel_ok:
+            raise ValueError("paged_decode='kernel' unsupported for this config "
+                             "(state family or windowed attention)")
+        self.use_paged_decode = kernel_ok and paged_decode != "dense"
+        self._paged_step = None
+        if self.use_paged_decode:
+            self._paged_step = _paged_step_for(self.model, cfg)
+        self.decode_steps = 0          # decode cycles executed
+        self.decode_dispatches = 0     # device dispatches those cycles issued
+        self._decode_cache_keys: Set[Tuple[int, int]] = set()   # jit buckets seen
+
+    @property
+    def decode_compile_variants(self) -> int:
+        """Distinct (batch, block-table-width) buckets the step compiled."""
+        return len(self._decode_cache_keys)
 
     # -- prefill ------------------------------------------------------------------
     def run_prefill(self, decision: ScheduleDecision,
@@ -103,9 +160,9 @@ class NodeEngine:
             return []
         finished: List[Request] = []
         if self.paged:
-            self._decode_paged(batch)
+            decoded = self._decode_paged(batch)
         else:
-            self._decode_state(batch)
+            decoded = self._decode_state(batch)
         for req in batch:
             last = req.output_tokens[-1]
             eos = req.sampling.eos_token_id
@@ -114,17 +171,73 @@ class NodeEngine:
                 if not self.paged:
                     self.states.pop(req.request_id, None)
                 self.scheduler.decode_finished(req)
-        self.scheduler.last_bandwidth_util = 1.0
+        # bandwidth pressure = fraction of the admitted batch that actually
+        # decoded a token this cycle (was: pinned 1.0 before checking whether
+        # the batch progressed). A fully-progressing batch still reads 1.0 —
+        # decode streams the full weights regardless of batch size — but any
+        # future path where requests stall mid-cycle now shows up in the load
+        # scorer instead of being masked.
+        self.scheduler.last_bandwidth_util = decoded / max(1, len(batch))
         return finished
 
-    def _decode_paged(self, batch: List[Request]) -> None:
+    def _decode_paged(self, batch: List[Request]) -> int:
+        if self.use_paged_decode:
+            return self._decode_paged_kernel(batch)
+        return self._decode_paged_dense(batch)
+
+    def _decode_paged_kernel(self, batch: List[Request]) -> int:
+        """Zero-gather step: ONE jitted dispatch for the whole batch.
+
+        Batch and block-table width are padded to power-of-two buckets; pad
+        lanes replicate lane 0 (same token / length / block-table row), so
+        their append descriptors duplicate lane 0's writes bit-identically
+        instead of aiming at block 0.
+        """
+        b = len(batch)
+        # KV cached so far = prompt + all outputs except the newest token,
+        # whose KV is written by THIS step at position total-1.
+        lens = [r.total_len - 1 for r in batch]
+        toks = [r.output_tokens[-1] for r in batch]
+        rids = [r.request_id for r in batch]
+        tables = self.kv.export_block_tables(rids)
+        bp = _next_pow2(b)
+        wp = _next_pow2(tables.shape[1])
+        bt = np.zeros((bp, wp), np.int32)
+        bt[:b, :tables.shape[1]] = tables
+        bt[b:] = bt[0]
+        tok_arr = np.full((bp,), toks[0], np.int32)
+        tok_arr[:b] = toks
+        len_arr = np.full((bp,), lens[0], np.int32)
+        len_arr[:b] = lens
+        self._decode_cache_keys.add((bp, wp))
+        # decode_dispatches counts host-issued device computations, by
+        # construction: this branch launches exactly ONE (the jitted step —
+        # paged attention + fused append inside a single artifact; the argmax
+        # below is a host read, not a launch). Anyone adding a second device
+        # call to this path must bump the increment or the O(1) claim that
+        # benchmarks/decode_throughput.py --check enforces becomes a lie.
+        logits, self.kv.pool = self._paged_step(
+            self.params, jnp.asarray(tok_arr), self.kv.pool,
+            jnp.asarray(bt), jnp.asarray(len_arr))
+        self.kv.num_pool_dispatches += 1
+        self.decode_steps += 1
+        self.decode_dispatches += 1
+        nxt = np.argmax(np.asarray(logits, np.float32)[:b], axis=-1)
+        for i, r in enumerate(batch):
+            r.output_tokens.append(int(nxt[i]))
+            r.decode_steps += 1
+            r.decode_dispatches += 1
+        return b
+
+    def _decode_paged_dense(self, batch: List[Request]) -> int:
+        """Gather-dense oracle: densify pages per request, decode, write back
+        per request — O(batch) dispatches per step. Kept as the reference
+        the zero-gather step must match token-for-token."""
         max_len = max(r.total_len for r in batch) + 1
         ks, vs, lens, toks = [], [], [], []
         for r in batch:
             k, v = self.kv.gather_dense(r.request_id, max_len)
             ks.append(k); vs.append(v)
-            # KV stored so far = prompt + all outputs except the newest token,
-            # whose KV is written by THIS decode step at position total-1.
             lens.append(r.total_len - 1)
             toks.append(r.output_tokens[-1])
         cache = {
@@ -135,20 +248,35 @@ class NodeEngine:
         logits, new_cache = self.model.decode(
             self.params, jnp.asarray(toks, jnp.int32), cache)
         nxt = jnp.argmax(logits, axis=-1)
+        step_dispatches = 2 * len(batch) + 1   # B gathers + decode + B appends
         for i, r in enumerate(batch):
             pos = lens[i]
             k_new = new_cache["k"][:, i, pos]
             v_new = new_cache["v"][:, i, pos]
             self.kv.append_token(r.request_id, k_new, v_new, pos)
             r.output_tokens.append(int(nxt[i]))
+            r.decode_steps += 1
+            r.decode_dispatches += step_dispatches
+        self.decode_steps += 1
+        self.decode_dispatches += step_dispatches
+        return len(batch)
 
-    def _decode_state(self, batch: List[Request]) -> None:
+    def _decode_state(self, batch: List[Request]) -> int:
+        n = len(batch)
         for r in batch:   # state caches are per-request pytrees
             cache = self.states[r.request_id]
             logits, cache = self.model.decode(
                 self.params, jnp.asarray([r.output_tokens[-1]], jnp.int32), cache)
             self.states[r.request_id] = cache
             r.output_tokens.append(int(jnp.argmax(logits[0])))
+            r.decode_steps += 1
+            # per-request semantics match serving/api.py: dispatches issued
+            # by the cycles this request rode in — the state path runs one
+            # decode per request, so every rider is charged the whole cycle
+            r.decode_dispatches += n
+        self.decode_steps += 1
+        self.decode_dispatches += n
+        return n
 
     # -- transfer hooks (TransferBackend ports; see core/transfer.py) -------------------
     def export_state(self, req: Request):

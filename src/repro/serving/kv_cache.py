@@ -6,17 +6,24 @@ engine moves whole block ranges with single calls. The control plane
 (which blocks belong to whom) is ``core.block_manager.BlockManager``.
 
 ``write_prefill`` / ``gather_dense`` / ``append_token`` bridge between the
-model's dense cache format (L, S, KV, hd) and pages. On TPU the decode-time
-gather is replaced by ``kernels/paged_attention`` reading pages in place;
-the dense bridge here is the reference data path (and the oracle the kernel
-is tested against).
+model's dense cache format (L, S, KV, hd) and pages. At serving time the
+decode plane does NOT use the bridge: ``models/transformer.decode_step_paged``
+reads pages in place through ``kernels/paged_attention`` and appends the
+batch's new K/V with one fused scatter (``export_block_tables`` /
+``append_tokens`` are its host-side ports). The dense bridge here is the
+reference data path — the oracle the paged step is tested against.
+
+``num_pool_dispatches`` counts host-issued device ops against the pool
+(dense bridge calls + fused imports/appends); the decode benchmark reads it
+to show the O(batch) -> O(1) collapse.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.block_manager import BlockManager
 from repro.core.layout import KVCacheSpec, KVLayout, alloc_cache
@@ -43,6 +50,7 @@ class PagedKVCache:
         self.spec = spec
         self.pool = alloc_cache(spec)
         self.bm = BlockManager(spec.num_blocks, spec.block_size, allocator)
+        self.num_pool_dispatches = 0     # host-issued device ops on the pool
 
     # -- write path -------------------------------------------------------------
     def write_prefill(self, request_id: int, k: jax.Array, v: jax.Array,
@@ -50,6 +58,8 @@ class PagedKVCache:
         """Store a request's prefill KV. k/v: (L, S, KV, hd), S >= length.
 
         Blocks must already be allocated (scheduler does it at admission).
+        K and V land in ONE pool update (whole blocks, all layers), not one
+        per cache half.
         """
         spec = self.spec
         blocks = self.bm.get(request_id)
@@ -66,13 +76,19 @@ class PagedKVCache:
         kp = k.reshape(L, nb, spec.block_size, -1).transpose(1, 0, 2, 3).reshape(nb, L, -1)
         vp = v.reshape(L, nb, spec.block_size, -1).transpose(1, 0, 2, 3).reshape(nb, L, -1)
         idx = jnp.asarray(blocks[:nb], jnp.int32)
-        self.pool = self.pool.at[idx, :, 0].set(kp.astype(spec.dtype))
-        self.pool = self.pool.at[idx, :, 1].set(vp.astype(spec.dtype))
+        kv = jnp.stack([kp, vp], axis=2).astype(spec.dtype)   # (nb, L, 2, payload)
+        self.pool = self.pool.at[idx].set(kv)
+        self.num_pool_dispatches += 1
         return blocks[:nb]
 
     def append_token(self, request_id: int, k_new: jax.Array, v_new: jax.Array,
                      position: int) -> None:
-        """Write one token's K/V (L, KV, hd) at absolute position."""
+        """Write one token's K/V (L, KV, hd) at absolute position.
+
+        Reference path only — one pool rewrite PER REQUEST per step. The
+        serving decode plane appends the whole batch in one fused dispatch
+        (:meth:`append_tokens` / ``kv_append_tokens``).
+        """
         spec = self.spec
         blocks = self.bm.get(request_id)
         block = blocks[position // spec.block_size]
@@ -82,8 +98,36 @@ class PagedKVCache:
         pv = pv.at[:, 0, slot].set(k_new.reshape(L, -1).astype(spec.dtype))
         pv = pv.at[:, 1, slot].set(v_new.reshape(L, -1).astype(spec.dtype))
         self.pool = self.pool.at[block].set(pv.reshape(L, 2, -1))
+        self.num_pool_dispatches += 1
+
+    def append_tokens(self, request_ids: Sequence[int], k_new: jax.Array,
+                      v_new: jax.Array, positions: Sequence[int]) -> None:
+        """Fused batch append: every request's token in ONE dispatch.
+
+        k_new / v_new (L, B, KV, hd); positions are absolute token indices.
+        """
+        from repro.kernels.kv_gather import kv_append_tokens
+
+        tables = self.export_block_tables(request_ids)
+        pos = jnp.asarray(list(positions), jnp.int32)
+        self.pool = kv_append_tokens(self.pool, jnp.asarray(tables), pos,
+                                     k_new, v_new,
+                                     block_size=self.spec.block_size)
+        self.num_pool_dispatches += 1
 
     # -- read path ---------------------------------------------------------------
+    def export_block_tables(self, request_ids: Sequence[int]) -> np.ndarray:
+        """Padded (B, W) int32 block table for a batch of requests, W = the
+        longest table. Rows shorter than W are zero-padded; the paged kernel
+        masks them by length, and the fused append never addresses them.
+        """
+        tables = [self.bm.get(rid) for rid in request_ids]
+        w = max((len(t) for t in tables), default=1)
+        out = np.zeros((len(tables), max(1, w)), np.int32)
+        for i, t in enumerate(tables):
+            out[i, :len(t)] = t
+        return out
+
     def gather_dense(self, request_id: int, max_len: int
                      ) -> Tuple[jax.Array, jax.Array]:
         """Rebuild (L, max_len, KV, hd) dense K/V from pages (reference path)."""
@@ -91,6 +135,7 @@ class PagedKVCache:
         blocks = self.bm.get(request_id)
         idx = jnp.asarray(blocks, jnp.int32)
         pages = jnp.take(self.pool, idx, axis=0)          # (nb, L, 2, payload)
+        self.num_pool_dispatches += 1
         nb = pages.shape[0]
         L = spec.num_layers
         pages = pages.reshape(nb, L, 2, spec.block_size, spec.num_kv_heads, spec.head_dim)
@@ -113,6 +158,7 @@ class PagedKVCache:
         updating the pool in place (donated where the backend allows).
         """
         self.pool = engine.execute(plan, src_pool, self.pool)
+        self.num_pool_dispatches += 1
 
     # -- capacity / bookkeeping -----------------------------------------------------
     @property

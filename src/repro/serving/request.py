@@ -66,6 +66,11 @@ class Request:
     transfer_calls: Optional[int] = None        # transport calls priced
     transfer_dispatches: Optional[int] = None   # fused kernel dispatches
 
+    # --- decode data-plane counters (accumulated per decode cycle) --------------
+    decode_steps: int = 0          # decode cycles this request participated in
+    decode_dispatches: int = 0     # device dispatches those cycles issued
+    #                                (1/step zero-gather; O(batch)/step oracle)
+
     # -- derived ----------------------------------------------------------------
     @property
     def prompt_len(self) -> int:
@@ -140,6 +145,7 @@ class Request:
         self.prefill_start = self.prefill_end = None
         self.transfer_start = self.transfer_end = None
         self.transfer_calls = self.transfer_dispatches = None
+        self.decode_steps = self.decode_dispatches = 0
         self.first_token_time = None
         self.retries += 1
 

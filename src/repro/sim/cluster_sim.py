@@ -203,6 +203,9 @@ class ClusterSim:
             node.scheduler.last_compute_util = 1.0
         if decision.decode_batch:
             duration += node.decode_duration(decision.decode_batch)
+            # same signal as NodeEngine.run_decode: the admitted batch's
+            # progress fraction — identically 1.0 here because every
+            # simulated decode request progresses each cycle.
             node.scheduler.last_bandwidth_util = 1.0
         if not decision.prefill_batch and not decision.decode_batch:
             node.scheduler.last_compute_util = 0.0

@@ -1,0 +1,122 @@
+"""Scheduling scenario suite — load-aware vs naive routing across the
+paper's stress regimes (§3.3–§3.4: normal / imbalanced / overload, plus the
+heterogeneous fleet).
+
+Every scenario in ``repro.sim.scenarios`` runs under three routing
+policies over the SAME request trace (fixed seed, deterministic
+discrete-event simulation — wall-clock independent, CI-safe):
+
+* ``load_aware``  — the full FlowKV control plane: smoothed capability-
+  normalized scores, regime actions (role flip under imbalance) and the
+  overload admission gate.
+* ``round_robin`` — blind rotation, passive controller.
+* ``static_pd``   — fixed roles, round-robin P, least-loaded D, passive
+  controller (the classic disaggregated baseline).
+
+Reported per (scenario, policy): goodput (fraction of OFFERED requests —
+rejections included — finishing within the scenario's TTFT SLO), p95 TTFT,
+rejections, starved nodes, throughput.
+
+CLI: ``python -m benchmarks.scenarios [--json] [--check] [--only a,b]``
+
+``--check`` is the CI gate for the paper's scheduling claim:
+
+* imbalance & overload: load-aware >= both baselines on goodput AND
+  <= both baselines on p95 TTFT;
+* overload: the admission gate actually fired (rejections > 0);
+* heterogeneous: every offered request completes (finished + rejected ==
+  offered) with ZERO starved nodes;
+* normal: load-aware completes everything (no regression where there is
+  nothing to exploit).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.sim.cluster_sim import ROUTING_POLICIES
+from repro.sim.scenarios import SCENARIOS, get_scenario
+
+GATED = ("imbalance", "overload")
+
+
+def bench(names: Optional[Sequence[str]] = None
+          ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """{scenario: {policy: stats}} for the selected scenarios."""
+    out: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for name in (names or list(SCENARIOS)):
+        sc = get_scenario(name)
+        out[name] = {}
+        for pol in ROUTING_POLICIES:
+            t0 = time.perf_counter()
+            stats = sc.run(pol)
+            stats["wall_us"] = (time.perf_counter() - t0) * 1e6
+            out[name][pol] = stats
+    return out
+
+
+def rows(stats=None) -> List[str]:
+    stats = stats or bench()
+    out = []
+    for name, by_policy in stats.items():
+        for pol, s in by_policy.items():
+            out.append(
+                f"scenario/{name}/{pol},{s['wall_us']:.0f},"
+                f"goodput={s['goodput']:.3f};p95_ttft_s={s['p95_ttft_s']:.2f}"
+                f";finished={s['finished']};rejected={s['rejected']}"
+                f";starved={s['starved_nodes']}"
+                f";thr={s['throughput_tok_s']:.1f}")
+    return out
+
+
+def check(stats: Dict[str, Dict[str, Dict[str, float]]]) -> None:
+    """CI gate: the load-aware control plane must EARN its complexity."""
+    for name, by_policy in stats.items():
+        la = by_policy["load_aware"]
+        if name in GATED:
+            for base in ("round_robin", "static_pd"):
+                b = by_policy[base]
+                assert la["goodput"] >= b["goodput"], (
+                    f"{name}: load_aware goodput {la['goodput']:.3f} < "
+                    f"{base} {b['goodput']:.3f}")
+                assert la["p95_ttft_s"] <= b["p95_ttft_s"], (
+                    f"{name}: load_aware p95 TTFT {la['p95_ttft_s']:.2f}s > "
+                    f"{base} {b['p95_ttft_s']:.2f}s")
+        if name == "overload":
+            assert la["rejected"] > 0, \
+                "overload: the admission gate never fired"
+        if name == "heterogeneous":
+            assert la["starved_nodes"] == 0, \
+                f"heterogeneous: {la['starved_nodes']} starved node(s)"
+            assert la["finished"] + la["rejected"] == la["offered"], (
+                f"heterogeneous: {la['finished']}+{la['rejected']} of "
+                f"{la['offered']} accounted for")
+        if name == "normal":
+            assert la["finished"] == la["offered"], \
+                f"normal: only {la['finished']}/{la['offered']} finished"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="print {scenario: {policy: stats}} as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the load-aware-wins gates (CI smoke)")
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {sorted(SCENARIOS)}")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or None
+    stats = bench(names)
+    if args.check:
+        check(stats)
+    if args.json:
+        print(json.dumps(stats, indent=2, sort_keys=True))
+        return
+    for r in rows(stats):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

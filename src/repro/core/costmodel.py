@@ -130,6 +130,24 @@ def get_profile(name: str) -> TransportProfile:
         raise ValueError(f"unknown transport profile {name!r}; have {sorted(PROFILES)}") from e
 
 
+def predicted_ttft_s(queued_flops: float, new_flops: float,
+                     effective_flops: float,
+                     overhead_s: float = 0.0) -> float:
+    """Admission-time TTFT prediction (Mooncake-style, arXiv:2407.00079 §5).
+
+    Prefill is compute-bound, so time-to-first-token on a node is the queued
+    prefill work plus this request's own compute over the node's *effective*
+    throughput (peak FLOPs x achievable MFU). The global controller uses
+    this both to pick the min-TTFT prefill node (Alg. 1 routing) and to gate
+    admission: a predicted TTFT beyond the SLO means the request is doomed
+    before it runs, and rejecting it NOW is cheaper than serving it late.
+    ``HardwareProfile.prefill_time`` delegates here (queued_flops=0), so the
+    simulator's step-time model and the controller's estimates are one
+    formula.
+    """
+    return overhead_s + (queued_flops + new_flops) / max(effective_flops, 1.0)
+
+
 def select_route(same_host: bool, target: str = "gpu") -> TransportProfile:
     """FlowKV §3.2: 'selects the best transfer pipeline based on hardware'.
 

@@ -1,16 +1,20 @@
-from repro.core.scheduler.global_controller import (ControllerEvent,
+from repro.core.scheduler.global_controller import (AdmissionDecision,
+                                                    AdmissionPolicy,
+                                                    ControllerEvent,
                                                     GlobalController,
                                                     ModelCost, NodeHandle)
 from repro.core.scheduler.hybrid_scheduler import (HybridScheduler,
                                                    ScheduleDecision)
 from repro.core.scheduler.load_score import (DECODE_WEIGHTS, PREFILL_WEIGHTS,
-                                             Thresholds, classify_regime,
-                                             cluster_scores, node_score)
+                                             ScoreWeights, Thresholds,
+                                             classify_regime, cluster_scores,
+                                             node_score)
 from repro.core.scheduler.metrics import NodeStatus, SlidingWindow, normalize
 
 __all__ = [
-    "ControllerEvent", "GlobalController", "ModelCost", "NodeHandle",
-    "HybridScheduler", "ScheduleDecision", "Thresholds", "classify_regime",
-    "cluster_scores", "node_score", "NodeStatus", "SlidingWindow",
-    "normalize", "PREFILL_WEIGHTS", "DECODE_WEIGHTS",
+    "AdmissionDecision", "AdmissionPolicy", "ControllerEvent",
+    "GlobalController", "ModelCost", "NodeHandle",
+    "HybridScheduler", "ScheduleDecision", "ScoreWeights", "Thresholds",
+    "classify_regime", "cluster_scores", "node_score", "NodeStatus",
+    "SlidingWindow", "normalize", "PREFILL_WEIGHTS", "DECODE_WEIGHTS",
 ]

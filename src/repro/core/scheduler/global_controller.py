@@ -12,13 +12,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.costmodel import TransportProfile, select_route
+from repro.core.costmodel import (TransportProfile, predicted_ttft_s,
+                                  select_route)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.scheduler.load_score import (Thresholds, classify_regime,
                                              cluster_scores, node_score)
 from repro.core.scheduler.metrics import NodeStatus, normalize
 from repro.serving.prefix_cache import PrefixCacheIndex
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestState
 from repro.sim.hardware import HardwareProfile
 
 
@@ -50,8 +51,45 @@ class ModelCost:
 @dataclasses.dataclass
 class ControllerEvent:
     cycle: int
-    kind: str                       # "role_switch" | "scale_up" | "scale_down" | "failover" | "regime"
+    kind: str                       # "role_switch" | "scale_up" | "scale_down" | "failover" | "regime" | "admission"
     detail: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Overload admission gate (Mooncake-style early rejection + P/D-Serve
+    SLO gating). Disabled unless passed to :class:`GlobalController` — with
+    no policy the controller admits everything, exactly as before.
+
+    A request is ADMITTED when some prefill-capable node can still honor it:
+    predicted TTFT (queued prefill work + own compute, capability-aware)
+    within ``ttft_slo_s``, waiting depth below ``max_queue_depth``, and not
+    every node's prefill score beyond ``Thresholds.overload`` (ε_overload).
+    Otherwise it is DEFERRED (parked controller-side, re-evaluated every
+    cycle — admitted as soon as load drains) unless the overload is deep
+    (predicted TTFT beyond ``reject_factor`` x SLO) or the request has waited
+    ``max_defer_cycles``, in which case it is REJECTED with a retry-after
+    hint so the client backs off instead of piling on.
+    """
+
+    ttft_slo_s: float = 30.0        # predicted-TTFT admission budget
+    max_queue_depth: int = 128      # per-node waiting+running prefill cap
+    max_defer_cycles: int = 8       # deferred longer than this -> rejected
+    reject_factor: float = 2.0      # predicted TTFT > factor*slo -> reject now
+    retry_after_floor_s: float = 1.0
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    verdict: str                          # "admitted" | "deferred" | "rejected"
+    predicted_ttft_s: float = 0.0
+    retry_after_s: Optional[float] = None
+    reason: str = ""
+    route: Optional[Tuple[int, int]] = None   # (prefill, decode) when admitted
+
+    @property
+    def admitted(self) -> bool:
+        return self.verdict == "admitted"
 
 
 class GlobalController:
@@ -61,7 +99,9 @@ class GlobalController:
                  heartbeat_timeout: float = 10.0,
                  role_switch_cycles: int = 4,
                  role_flip: bool = False,
-                 node_factory: Optional[Callable[[str], NodeHandle]] = None):
+                 node_factory: Optional[Callable[[str], NodeHandle]] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 actions_enabled: bool = True):
         self.model_cost = model_cost
         self.thresholds = thresholds or Thresholds()
         self.target = target
@@ -72,6 +112,14 @@ class GlobalController:
         # reverted automatically once the cluster re-balances.
         self.role_flip = role_flip
         self.node_factory = node_factory   # elastic scale-up hook
+        # Overload admission gate; None admits everything (legacy behavior).
+        self.admission = admission
+        # actions_enabled=False makes the controller PASSIVE: it still
+        # samples, scores, classifies and detects failures, but takes no
+        # regime actions (role switch / flip / scale / admission). This is
+        # how the scenario suite runs its round-robin / static-PD baselines
+        # through the same code without load-aware behavior leaking in.
+        self.actions_enabled = actions_enabled
         self.nodes: Dict[int, NodeHandle] = {}
         self.prefix_index = PrefixCacheIndex(block_size)
         self.cycle = 0
@@ -81,6 +129,14 @@ class GlobalController:
         self._normal_streak = 0   # flip-back hysteresis (see _flip_back)
         self.events: List[ControllerEvent] = []
         self.retry_queue: List[Request] = []
+        # admission gate state: parked (deferred) requests and the rejected
+        # outbox the runtime drains for bookkeeping (PDCluster / ClusterSim).
+        self.deferred: List[Request] = []
+        self.rejected_outbox: List[Request] = []
+        # hook for event-driven runtimes: called with each request admitted
+        # OUTSIDE submit (deferred admissions, failover reroutes) so the
+        # simulator can poke the target node's scheduling loop.
+        self.on_admit: Optional[Callable[[Request], None]] = None
 
     # -- membership ---------------------------------------------------------------
     def register_node(self, node: NodeHandle) -> None:
@@ -91,6 +147,38 @@ class GlobalController:
 
     def decode_nodes(self) -> List[NodeHandle]:
         return [n for n in self.nodes.values() if n.alive and n.role == "decode"]
+
+    # -- heterogeneous capability profiles -----------------------------------------
+    def _capabilities(self) -> Dict[int, Tuple[float, float, float]]:
+        """Per-node (compute, bandwidth, capacity) relative to the fleet max.
+
+        Derived from each :class:`NodeHandle`'s hardware profile, so a mixed
+        L20/H20/A100 fleet scores on a common scale: the strongest card in
+        each dimension is 1.0 and weaker cards saturate proportionally
+        earlier (see ``load_score.node_score``). Homogeneous fleets collapse
+        to all-ones, i.e. the paper's original un-normalized formula.
+        """
+        alive = [n for n in self.nodes.values() if n.alive]
+        if not alive:
+            return {}
+        max_f = max(n.hardware.peak_flops for n in alive)
+        max_b = max(n.hardware.hbm_bandwidth for n in alive)
+        max_m = max(n.hardware.hbm_bytes for n in alive)
+        return {
+            n.node_id: (n.hardware.peak_flops / max_f,
+                        n.hardware.hbm_bandwidth / max_b,
+                        n.hardware.hbm_bytes / max_m)
+            for n in alive
+        }
+
+    def _scored_status(self, node: NodeHandle,
+                       caps: Optional[Dict[int, Tuple[float, float, float]]] = None
+                       ) -> NodeStatus:
+        """A node's smoothed status with its capability profile stamped on."""
+        caps = caps if caps is not None else self._capabilities()
+        status = node.scheduler.smoothed_status()
+        c = caps.get(node.node_id)
+        return status.with_capability(*c) if c else status
 
     # -- node lifecycle -------------------------------------------------------------
     def set_role(self, node_id: int, role: str) -> bool:
@@ -141,6 +229,100 @@ class GlobalController:
                 n += 1
         return n
 
+    # -- overload admission gate ---------------------------------------------------------
+    def submit_request(self, req: Request) -> AdmissionDecision:
+        """Front door: admission gate, then routing.
+
+        With no :class:`AdmissionPolicy` this is exactly ``route_request``.
+        With one, the request is admitted / deferred / early-rejected based
+        on predicted TTFT, queue depth and ε_overload — overload never piles
+        more work onto a cluster that cannot meet the SLO anyway.
+        """
+        decision = self._admission_check(req)
+        if decision.verdict == "admitted":
+            decision.route = self.route_request(req)
+        elif decision.verdict == "deferred":
+            self.deferred.append(req)
+            req.retry_after = decision.retry_after_s
+            self._log("admission",
+                      f"deferred request {req.request_id}: {decision.reason}")
+        else:
+            self._reject(req, decision)
+        return decision
+
+    def _admission_check(self, req: Request) -> AdmissionDecision:
+        if self.admission is None or not self.actions_enabled:
+            return AdmissionDecision("admitted")
+        pol = self.admission
+        pnodes = self.prefill_nodes() or \
+            [n for n in self.nodes.values() if n.alive]
+        if not pnodes:
+            # no alive nodes: let route_request surface the hard failure
+            return AdmissionDecision("admitted")
+        best_ttft = min(self._ttft_estimate(n, req) for n in pnodes)
+        depth_ok = any(
+            len(n.scheduler.prefill.waiting) + len(n.scheduler.prefill.running)
+            < pol.max_queue_depth for n in pnodes)
+        # ε_overload compares on the SAME scale step() classifies on: queue
+        # counts normalized across the fleet to [0, 1] (raw counts would
+        # blow past the threshold at a handful of queued requests), then
+        # capability-stamped.
+        caps = self._capabilities()
+        norm = normalize([n.scheduler.smoothed_status() for n in pnodes])
+        min_score = min(
+            node_score(s.with_capability(*caps.get(n.node_id, (1.0,) * 3)),
+                       "prefill")
+            for n, s in zip(pnodes, norm))
+        overloaded = min_score > self.thresholds.overload
+        if best_ttft <= pol.ttft_slo_s and depth_ok and not overloaded:
+            return AdmissionDecision("admitted", predicted_ttft_s=best_ttft)
+        if best_ttft > pol.ttft_slo_s:
+            reason = f"predicted_ttft {best_ttft:.2f}s > slo {pol.ttft_slo_s:.2f}s"
+        elif not depth_ok:
+            reason = f"every node at queue depth >= {pol.max_queue_depth}"
+        else:
+            reason = (f"every node's C^p {min_score:.2f} > "
+                      f"eps_overload {self.thresholds.overload:.2f}")
+        retry = max(pol.retry_after_floor_s, best_ttft - pol.ttft_slo_s)
+        deep = best_ttft > pol.reject_factor * pol.ttft_slo_s
+        if deep or req.admission_defers >= pol.max_defer_cycles:
+            return AdmissionDecision("rejected", best_ttft, retry, reason)
+        return AdmissionDecision("deferred", best_ttft, retry, reason)
+
+    def _reject(self, req: Request, decision: AdmissionDecision) -> None:
+        req.state = RequestState.REJECTED
+        req.retry_after = decision.retry_after_s
+        req.reject_reason = decision.reason
+        self.rejected_outbox.append(req)
+        self._log("admission",
+                  f"rejected request {req.request_id}: {decision.reason}")
+
+    def take_rejected(self) -> List[Request]:
+        """Drain the rejected outbox (runtime bookkeeping hook)."""
+        out, self.rejected_outbox = self.rejected_outbox, []
+        return out
+
+    def _drain_deferred(self) -> None:
+        """Re-evaluate parked requests; admit as load drains, reject stale."""
+        if not self.deferred:
+            return
+        still: List[Request] = []
+        for req in self.deferred:
+            req.admission_defers += 1
+            decision = self._admission_check(req)
+            if decision.verdict == "admitted" and self.route_request(req) is not None:
+                req.retry_after = None
+                self._log("admission",
+                          f"admitted deferred request {req.request_id} "
+                          f"after {req.admission_defers} cycles")
+                if self.on_admit is not None:
+                    self.on_admit(req)
+            elif decision.verdict == "rejected":
+                self._reject(req, decision)
+            else:
+                still.append(req)
+        self.deferred = still
+
     # -- normal-regime routing (Alg. 1 lines 18-23) --------------------------------------
     def route_request(self, req: Request) -> Optional[Tuple[int, int]]:
         """Pick (prefill_node, decode_node); enqueue prefill; return ids."""
@@ -164,15 +346,23 @@ class GlobalController:
         return p_best.node_id, d_best.node_id
 
     def _ttft_estimate(self, node: NodeHandle, req: Request) -> float:
-        """Queued prefill work + this request's compute, on this node."""
+        """Queued prefill work + this request's compute, on this node.
+
+        Shared between routing (min-TTFT node pick) and the admission gate
+        (predicted TTFT vs SLO) — both price the same queueing model from
+        ``core.costmodel.predicted_ttft_s`` over the node's own hardware, so
+        a weak card reports longer predicted TTFT for the same backlog.
+        """
         hit = min(self.prefix_index.match(node.node_id, req.prompt_tokens),
                   max(0, req.prompt_len - 1))
         sched = node.scheduler
         backlog_tokens = sum(r.prompt_len for r in sched.prefill.waiting)
         backlog_tokens += sum(r.prompt_len for r in sched.prefill.running)
-        my_tokens = req.prompt_len - hit
-        return node.hardware.prefill_time(
-            (backlog_tokens + my_tokens) * self.model_cost.flops_per_token)
+        hw = node.hardware
+        fpt = self.model_cost.flops_per_token
+        return predicted_ttft_s(
+            backlog_tokens * fpt, (req.prompt_len - hit) * fpt,
+            hw.peak_flops * hw.mfu_prefill, hw.step_overhead_s)
 
     def _transfer_estimate(self, p: NodeHandle, d: NodeHandle, req: Request) -> float:
         """Expected KV transfer latency P->D + a decode-load tiebreak."""
@@ -180,7 +370,7 @@ class GlobalController:
         nbytes = self.model_cost.kv_bytes_per_token * (req.prompt_len + 1)
         # FlowKV's segment allocator keeps requests ~1 segment => 1 call.
         latency = profile.latency(num_calls=1, num_bytes=int(nbytes))
-        load_penalty = node_score(d.scheduler.smoothed_status(), "decode")
+        load_penalty = node_score(self._scored_status(d), "decode")
         return latency * (1.0 + load_penalty)
 
     # -- the controller loop ---------------------------------------------------------------
@@ -196,6 +386,11 @@ class GlobalController:
         norm_list = normalize(list(smoothed.values()))
         statuses = dict(zip(smoothed.keys(), norm_list))
         del raw
+        # stamp per-node hardware capability so heterogeneous fleets score
+        # on one scale (load_score divides pending-work terms by capability)
+        caps = self._capabilities()
+        statuses = {nid: (s.with_capability(*caps[nid]) if nid in caps else s)
+                    for nid, s in statuses.items()}
         cp, cd = cluster_scores(
             statuses,
             [n.node_id for n in self.prefill_nodes()],
@@ -205,9 +400,11 @@ class GlobalController:
         if regime != self.regime:
             self._log("regime", f"{self.regime} -> {regime} (C^p={cp:.3f}, C^d={cd:.3f})")
         self.regime = regime
+        act = self.actions_enabled   # passive controllers observe, never act
 
         if regime == "imbalanced":
-            self._handle_imbalance(statuses, cp, cd)
+            if act:
+                self._handle_imbalance(statuses, cp, cd)
             self._extreme_streak = 0
             self._low_streak = 0
             self._normal_streak = 0
@@ -216,19 +413,23 @@ class GlobalController:
             self._low_streak = 0
             self._normal_streak = 0
             if self._extreme_streak >= self.thresholds.scale_patience:
-                self._scale_up(cp, cd)
+                if act:
+                    self._scale_up(cp, cd)
                 self._extreme_streak = 0
         else:
             self._normal_streak += 1
-            self._flip_back(statuses)
+            if act:
+                self._flip_back(statuses)
             self._extreme_streak = 0
             if cp < 0.05 and cd < 0.05:
                 self._low_streak += 1
                 if self._low_streak >= 4 * self.thresholds.scale_patience:
-                    self._scale_down()
+                    if act:
+                        self._scale_down()
                     self._low_streak = 0
             else:
                 self._low_streak = 0
+        self._drain_deferred()
         self.reroute_retries()
         return regime
 
@@ -241,6 +442,17 @@ class GlobalController:
             if n.alive and n.role == cold_role
             and node_score(statuses[n.node_id], cold_role) < self.thresholds.idle
         ]
+        # Capability-weighted skew: on a heterogeneous fleet, borrow the
+        # candidate best SUITED to the hot role first — compute-rich cards
+        # for a prefill burst, bandwidth/memory-rich cards for a decode
+        # burst — so a flip adds the most capacity per node moved.
+        caps = self._capabilities()
+
+        def suitability(n: NodeHandle) -> float:
+            c, m, kv = caps.get(n.node_id, (1.0, 1.0, 1.0))
+            return c if hot_role == "prefill" else 0.5 * (m + kv)
+
+        idle.sort(key=suitability, reverse=True)
         hot_score, cold_score = (cp, cd) if hot_role == "prefill" else (cd, cp)
         for node in idle:
             if self.role_flip:
@@ -282,6 +494,13 @@ class GlobalController:
                     and self.cycle >= node.switched_until_cycle
                     and node_score(statuses.get(node.node_id, NodeStatus()),
                                    node.role) < self.thresholds.idle):
+                # same stranding guard as the flip itself: never revert the
+                # last node of its CURRENT role (a sequence of flips can
+                # otherwise leave the cluster 100% one role)
+                peers = [m for m in self.nodes.values()
+                         if m.alive and m.role == node.role]
+                if len(peers) <= 1:
+                    continue
                 home = node.home_role
                 node.home_role = None
                 self.set_role(node.node_id, home)
@@ -301,7 +520,7 @@ class GlobalController:
         for role_nodes in (self.prefill_nodes(), self.decode_nodes()):
             if len(role_nodes) > 1:
                 victim = min(role_nodes,
-                             key=lambda n: node_score(n.scheduler.smoothed_status(), n.role))
+                             key=lambda n: node_score(self._scored_status(n), n.role))
                 sched = victim.scheduler
                 busy = (sched.prefill.running or sched.decode.running
                         or sched.prefill.sending)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.block_manager import BlockManager
 from repro.core.scheduler.metrics import NodeStatus, SlidingWindow
@@ -87,6 +87,17 @@ class HybridScheduler:
         self.last_compute_util = 0.0
         self.last_bandwidth_util = 0.0
         self.last_token_budget_used = 0.0
+        # -- spill hooks (decode memory pressure) ---------------------------------
+        # The swapped queue is a REAL spill path: before a preempted request's
+        # blocks are freed the engine saves its KV (on_spill), and when the
+        # request is re-admitted with fresh blocks the engine restores it
+        # (on_resume) — generation continues token-identically. on_discard
+        # fires when a request leaves the node for good (cancel / failover)
+        # so saved spills never leak. Engines that keep request state outside
+        # the pool (state-path pytrees, the simulator) leave these as None.
+        self.on_spill: Optional[Callable[[Request], None]] = None
+        self.on_resume: Optional[Callable[[Request], None]] = None
+        self.on_discard: Optional[Callable[[Request], None]] = None
 
     # -- queue entry points (called by the controller / engine) -----------------
     def enqueue_prefill(self, req: Request) -> None:
@@ -128,6 +139,8 @@ class HybridScheduler:
         if self.bm.owns(req.request_id):
             self.bm.free(req.request_id)
             removed = True
+        if self.on_discard is not None:
+            self.on_discard(req)        # drop any saved spill (no leaks)
         return removed
 
     # -- controller knobs ----------------------------------------------------------
@@ -181,6 +194,14 @@ class HybridScheduler:
             chunk = min(need, budget) if self.chunked_prefill else need
             if chunk < need and not self.chunked_prefill:
                 break
+            # a spilled prefill holds no blocks — re-allocate before admission
+            # (was: admitted without blocks, so a resumed spill would crash)
+            if not self.bm.owns(req.request_id):
+                if not self.bm.can_allocate(req.prompt_len + 1):
+                    break
+                req.block_ids = self.bm.allocate(req.request_id, req.prompt_len + 1)
+                if self.on_resume is not None:
+                    self.on_resume(req)
             self.prefill.swapped.popleft()
             self._admit_prefill(req, chunk, decision)
             budget -= chunk
@@ -216,6 +237,8 @@ class HybridScheduler:
                 break
             self.decode.swapped.popleft()
             req.block_ids = self.bm.allocate(req.request_id, req.total_len + 1)
+            if self.on_resume is not None:
+                self.on_resume(req)     # restore spilled KV into fresh blocks
             req.state = RequestState.DECODING
             self.decode.running.append(req)
         if not self.decode.running:
@@ -234,8 +257,14 @@ class HybridScheduler:
             decision.kind = "decode" if decision.kind == "idle" else "mixed"
 
     def _preempt(self, req: Request, decision: ScheduleDecision) -> None:
-        """Swap out the youngest decode request under KV pressure."""
+        """Swap out the youngest decode request under KV pressure.
+
+        on_spill runs BEFORE the blocks are freed so the engine can save the
+        request's KV off-pool; _schedule_decode's resume loop restores it
+        after re-allocation (on_resume)."""
         self.decode.running.remove(req)
+        if self.on_spill is not None:
+            self.on_spill(req)
         self.bm.free(req.request_id)
         req.state = RequestState.SWAPPED
         req.block_ids = []
@@ -285,6 +314,8 @@ class HybridScheduler:
         for r in reqs:
             if self.bm.owns(r.request_id):
                 self.bm.free(r.request_id)
+            if self.on_discard is not None:
+                self.on_discard(r)      # spilled KV dies with the node
             r.reset_for_retry()
         self._progress.clear()
         return reqs

@@ -23,7 +23,14 @@ STATUS_FIELDS = (
 
 @dataclasses.dataclass(frozen=True)
 class NodeStatus:
-    """One instantaneous sample of a node's load vector S_i."""
+    """One instantaneous sample of a node's load vector S_i.
+
+    The ``capability_*`` fields are NOT part of the sampled load vector
+    (they are hardware constants, not signals): the global controller stamps
+    them onto every smoothed status before scoring, so a heterogeneous fleet
+    scores comparably — see :func:`repro.core.scheduler.load_score.node_score`.
+    They are relative to the fleet maximum, in (0, 1].
+    """
 
     running_prefill: float = 0.0
     waiting_prefill: float = 0.0
@@ -37,9 +44,20 @@ class NodeStatus:
     kv_utilization: float = 0.0
     compute_utilization: float = 0.0
     bandwidth_utilization: float = 0.0
+    # hardware capability relative to fleet max (stamped by the controller)
+    capability_compute: float = 1.0     # peak FLOPs / fleet-max FLOPs
+    capability_memory: float = 1.0      # HBM bandwidth / fleet-max bandwidth
+    capability_kv: float = 1.0          # HBM capacity / fleet-max capacity
 
     def as_dict(self) -> Dict[str, float]:
         return {f: getattr(self, f) for f in STATUS_FIELDS}
+
+    def with_capability(self, compute: float, memory: float,
+                        kv: float) -> "NodeStatus":
+        """Stamp relative hardware capability onto a (smoothed) sample."""
+        return dataclasses.replace(
+            self, capability_compute=compute, capability_memory=memory,
+            capability_kv=kv)
 
 
 class SlidingWindow:

@@ -24,6 +24,13 @@ Node lifecycle is exposed too: ``client.set_role(node_id, "decode")`` flips
 a node P<->D mid-run (see ``GlobalController.set_role``), and constructing
 with ``role_flip=True`` lets the load-aware scheduler do that flip itself
 under computational imbalance.
+
+Overload: constructing with ``admission=AdmissionPolicy(...)`` arms the
+controller's admission gate — under sustained overload a submit may come
+back DEFERRED (parked controller-side, admitted as load drains) or
+terminal REJECTED, with ``handle.rejected`` / ``handle.retry_after``
+telling the client when to back off and resubmit (``examples/overload.py``,
+``docs/scheduling.md``).
 """
 from __future__ import annotations
 
@@ -34,7 +41,7 @@ from repro.serving.cluster import PDCluster
 from repro.serving.request import Request, RequestState, SamplingParams
 
 TERMINAL_STATES = (RequestState.FINISHED, RequestState.CANCELLED,
-                   RequestState.FAILED)
+                   RequestState.FAILED, RequestState.REJECTED)
 
 
 class RequestHandle:
@@ -64,6 +71,20 @@ class RequestHandle:
     @property
     def cancelled(self) -> bool:
         return self._req.state is RequestState.CANCELLED
+
+    @property
+    def rejected(self) -> bool:
+        """True when the admission gate early-rejected this request (overload).
+
+        Check :attr:`retry_after` for the controller's back-off hint and
+        resubmit the prompt later — see ``examples/overload.py``.
+        """
+        return self._req.state is RequestState.REJECTED
+
+    @property
+    def retry_after(self) -> Optional[float]:
+        """Back-off hint (seconds) set when deferred or rejected."""
+        return self._req.retry_after
 
     # -- streaming -------------------------------------------------------------
     def tokens(self, max_cycles: int = 10_000) -> Iterator[int]:
@@ -118,6 +139,8 @@ class RequestHandle:
             "decode_steps": self._req.decode_steps,
             "decode_dispatches": self._req.decode_dispatches,
             "retries": self._req.retries,
+            "retry_after_s": self._req.retry_after,
+            "reject_reason": self._req.reject_reason,
         })
         return d
 

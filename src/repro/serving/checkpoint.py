@@ -69,6 +69,8 @@ def request_to_dict(r: Request) -> dict:
         "arrival_time": r.arrival_time,
         "max_new_tokens": r.sampling.max_new_tokens,
         "retries": r.retries,
+        "retry_after": r.retry_after,
+        "reject_reason": r.reject_reason,
     }
 
 
@@ -82,6 +84,8 @@ def request_from_dict(d: dict) -> Request:
     r.decode_node = d["decode_node"]
     r.block_ids = list(d["block_ids"])
     r.retries = d["retries"]
+    r.retry_after = d.get("retry_after")
+    r.reject_reason = d.get("reject_reason")
     return r
 
 
@@ -108,11 +112,16 @@ def cluster_state(cluster) -> dict:
             },
             "block_table": {str(rid): [int(b) for b in engine.scheduler.bm.get(rid)]
                             for rid in list(engine.scheduler.bm._table)},
+            # spill-path bookkeeping: lengths here, arrays in pools.npz —
+            # a checkpoint taken mid-swap must not lose the saved KV
+            "spilled": {str(rid): int(length)
+                        for rid, (_, _, length) in engine.spilled.items()},
         }
         nodes[str(nid)] = node
     return {"clock": cluster.clock, "nodes": nodes,
             "finished": [request_to_dict(r) for r in cluster.finished],
-            "cancelled": [request_to_dict(r) for r in getattr(cluster, "cancelled", [])]}
+            "cancelled": [request_to_dict(r) for r in getattr(cluster, "cancelled", [])],
+            "rejected": [request_to_dict(r) for r in getattr(cluster, "rejected", [])]}
 
 
 def save_cluster(cluster, path: str) -> None:
@@ -124,6 +133,9 @@ def save_cluster(cluster, path: str) -> None:
     for nid, engine in cluster.engines.items():
         if engine.paged:
             arrays[f"pool_{nid}"] = np.asarray(engine.kv.pool.astype(jnp.float32))
+        for rid, (k, v, _) in engine.spilled.items():
+            arrays[f"spill_k_{nid}_{rid}"] = np.asarray(k, np.float32)
+            arrays[f"spill_v_{nid}_{rid}"] = np.asarray(v, np.float32)
     _atomic_savez(path / "pools.npz", arrays)
 
 
@@ -150,9 +162,14 @@ def load_cluster(cluster, path: str) -> dict:
                                           cycles=node.get("priority_cycles_left", 0))
         if engine.paged and f"pool_{nid}" in pools:
             engine.kv.pool = jnp.asarray(pools[f"pool_{nid}"], engine.kv.spec.dtype)
+        engine.spilled = {
+            int(rid_s): (pools[f"spill_k_{nid}_{rid_s}"],
+                         pools[f"spill_v_{nid}_{rid_s}"], length)
+            for rid_s, length in node.get("spilled", {}).items()}
         sched = engine.scheduler
         sched.prefill.waiting.clear(); sched.prefill.running.clear()
-        sched.prefill.sending.clear(); sched.decode.running.clear()
+        sched.prefill.sending.clear(); sched.prefill.swapped.clear()
+        sched.decode.running.clear(); sched.decode.swapped.clear()
         bm = sched.bm
         # rebuild the block table exactly (allocate the recorded ids)
         for rid_s, blocks in node["block_table"].items():
@@ -179,6 +196,7 @@ def load_cluster(cluster, path: str) -> dict:
                     target.append(req)
     cluster.finished = [request_from_dict(d) for d in meta["finished"]]
     cluster.cancelled = [request_from_dict(d) for d in meta.get("cancelled", [])]
+    cluster.rejected = [request_from_dict(d) for d in meta.get("rejected", [])]
     return meta
 
 

@@ -14,10 +14,12 @@ controller's heartbeat scan drains and re-routes its requests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.costmodel import select_route
-from repro.core.scheduler.global_controller import (GlobalController, ModelCost,
+from repro.core.scheduler.global_controller import (AdmissionDecision,
+                                                    AdmissionPolicy,
+                                                    GlobalController, ModelCost,
                                                     NodeHandle)
 from repro.core.transfer import backend_for_engine
 from repro.models.common import ModelConfig
@@ -40,9 +42,12 @@ class PDCluster:
     def __init__(self, cfg: ModelConfig, params, *, num_prefill: int = 1,
                  num_decode: int = 1, num_blocks: int = 256,
                  allocator: str = "flowkv", transfer_schedule: str = "flowkv",
-                 hardware: HardwareProfile = TPU_V5E, target: str = "tpu",
+                 hardware: Union[HardwareProfile,
+                                 Dict[int, HardwareProfile]] = TPU_V5E,
+                 target: str = "tpu",
                  max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
-                 role_flip: bool = False, paged_decode: str = "auto"):
+                 role_flip: bool = False, paged_decode: str = "auto",
+                 admission: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
@@ -53,13 +58,15 @@ class PDCluster:
             weight_bytes=2.0 * cfg.num_params(),
         )
         self.controller = GlobalController(model_cost, cfg.block_size, target=target,
-                                           role_flip=role_flip)
+                                           role_flip=role_flip,
+                                           admission=admission)
         self.clock = 0.0
         self.submitted = 0
         self._dead: set = set()      # killed engines stop heartbeating/working
         self.transfers: List[TransferRecord] = []
         self.finished: List[Request] = []
         self.cancelled: List[Request] = []
+        self.rejected: List[Request] = []
 
         for i in range(num_prefill + num_decode):
             role = "prefill" if i < num_prefill else "decode"
@@ -68,16 +75,31 @@ class PDCluster:
                                 paged_decode=paged_decode)
             self.engines[i] = engine
             host = (hosts or {}).get(i, i)
+            # heterogeneous fleets: hardware may be one profile for every
+            # node or a {node_id: profile} map (missing ids get TPU_V5E)
+            hw = hardware.get(i, TPU_V5E) if isinstance(hardware, dict) \
+                else hardware
             self.controller.register_node(NodeHandle(
-                node_id=i, role=role, host_id=host, hardware=hardware,
+                node_id=i, role=role, host_id=host, hardware=hw,
                 scheduler=engine.scheduler))
 
     # -- request entry ------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        routed = self.controller.route_request(req)
-        if routed is None:
+    def submit(self, req: Request) -> AdmissionDecision:
+        """Admission gate + routing. With no AdmissionPolicy every request
+        is admitted (legacy behavior); with one, the decision may be
+        "deferred" (parked controller-side, admitted as load drains) or
+        "rejected" (terminal REJECTED state + retry-after hint)."""
+        decision = self.controller.submit_request(req)
+        if decision.admitted and decision.route is None:
             raise RuntimeError("no alive nodes to route to")
         self.submitted += 1
+        self._collect_rejected()
+        return decision
+
+    def _collect_rejected(self) -> None:
+        for req in self.controller.take_rejected():
+            req.finish_time = self.clock
+            self.rejected.append(req)
 
     # -- the FlowKV transfer (P pool -> D pool) -------------------------------------
     def _transfer(self, req: Request) -> None:
@@ -136,6 +158,7 @@ class PDCluster:
                 req.finish_time = self.clock
                 self.finished.append(req)
         self.controller.step(self.clock)
+        self._collect_rejected()   # deferred requests the gate gave up on
 
     def run(self, requests: List[Request], max_cycles: int = 1000) -> List[Request]:
         """Batch compatibility wrapper over submit()/step().
@@ -148,7 +171,8 @@ class PDCluster:
         for _ in range(max_cycles):
             self.step()
             if self.submitted and \
-                    len(self.finished) + len(self.cancelled) >= self.submitted:
+                    len(self.finished) + len(self.cancelled) + \
+                    len(self.rejected) >= self.submitted:
                 break
         return self.finished
 
@@ -157,7 +181,8 @@ class PDCluster:
         """Abort a request wherever it is; frees its blocks/state on EVERY
         node (prefill, decode, or mid-transfer). Returns False if the
         request already finished."""
-        if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
+        if req.state in (RequestState.FINISHED, RequestState.CANCELLED,
+                         RequestState.REJECTED):
             return False
         for engine in self.engines.values():
             engine.release(req)
@@ -184,6 +209,7 @@ class PDCluster:
         engine = self.engines[node_id]
         engine.scheduler.bm.release_all()
         engine.states.clear()
+        engine.spilled.clear()
 
     def checkpoint(self) -> dict:
         from repro.serving.checkpoint import cluster_state
@@ -199,6 +225,8 @@ class PDCluster:
         return {
             "finished": len(self.finished),
             "cancelled": len(self.cancelled),
+            "rejected": len(self.rejected),
+            "deferred": len(self.controller.deferred),
             "transfers": len(self.transfers),
             "mean_transfer_s": sum(lat) / len(lat) if lat else 0.0,
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,

@@ -99,6 +99,17 @@ class NodeEngine:
         self.states: Dict[int, Any] = {}        # request_id -> cache pytree (state path)
         self.scheduler = HybridScheduler(node_id, bm,
                                          max_batch_tokens=max_batch_tokens)
+        # -- spill path (decode memory pressure) --------------------------------------
+        # request_id -> (k, v, length) saved host-side when the scheduler
+        # preempts a decode request; restored into fresh blocks on resume so
+        # generation continues token-identically. Paged engines only — the
+        # state path keeps its pytree in ``self.states`` across a swap.
+        self.spilled: Dict[int, Tuple[np.ndarray, np.ndarray, int]] = {}
+        if self.paged:
+            self.scheduler.on_spill = self._spill_kv
+            self.scheduler.on_resume = self._restore_kv
+            self.scheduler.on_discard = \
+                lambda req: self.spilled.pop(req.request_id, None)
         # -- zero-gather decode plane ------------------------------------------------
         # paged_decode: "auto" (kernel when supported), "kernel", "dense" (oracle).
         if paged_decode not in ("auto", "kernel", "dense"):
@@ -277,6 +288,27 @@ class NodeEngine:
         self.decode_steps += 1
         self.decode_dispatches += n
         return n
+
+    # -- spill path (scheduler hooks) ------------------------------------------------
+    def _spill_kv(self, req: Request) -> None:
+        """Save a preempted request's KV off-pool before its blocks free.
+
+        KV cached at preemption time covers positions [0, total_len-1): the
+        newest output token's KV would have been written by the decode step
+        that could not run (same accounting as ``_decode_paged_kernel``).
+        """
+        length = req.total_len - 1
+        k, v = self.kv.gather_dense(req.request_id, length)
+        self.spilled[req.request_id] = (np.asarray(k), np.asarray(v), length)
+
+    def _restore_kv(self, req: Request) -> None:
+        """Refill fresh blocks with the saved KV when a swap resumes."""
+        entry = self.spilled.pop(req.request_id, None)
+        if entry is None:
+            return   # nothing was spilled (e.g. prefill-side swap, no KV yet)
+        k, v, length = entry
+        self.kv.write_prefill(req.request_id, jnp.asarray(k), jnp.asarray(v),
+                              length)
 
     # -- transfer hooks (TransferBackend ports; see core/transfer.py) -------------------
     def export_state(self, req: Request):

@@ -24,6 +24,8 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
     CANCELLED = "cancelled"      # client cancel; blocks freed on every node
     FAILED = "failed"            # node died; will be requeued by the controller
+    REJECTED = "rejected"        # admission gate: overload early-rejection
+    #                              (terminal; retry_after hints when to resubmit)
 
 # States that occupy KV blocks on some node.
 LIVE_STATES = (RequestState.PREFILLING, RequestState.SENDING,
@@ -61,6 +63,11 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     retries: int = 0
+
+    # --- admission gate (set when the controller defers/rejects) ---------------
+    retry_after: Optional[float] = None   # hint: resubmit after this many seconds
+    reject_reason: Optional[str] = None   # e.g. "predicted_ttft 42.1s > slo 30.0s"
+    admission_defers: int = 0             # cycles spent in the deferred queue
 
     # --- transfer data-plane counters (set when the KV transfer runs) ----------
     transfer_calls: Optional[int] = None        # transport calls priced
@@ -147,6 +154,8 @@ class Request:
         self.transfer_calls = self.transfer_dispatches = None
         self.decode_steps = self.decode_dispatches = 0
         self.first_token_time = None
+        self.retry_after = None
+        self.reject_reason = None
         self.retries += 1
 
 

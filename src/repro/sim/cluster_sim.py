@@ -21,9 +21,10 @@ code the CPU-scale runtime runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
-from repro.core.scheduler.global_controller import (GlobalController, ModelCost,
+from repro.core.scheduler.global_controller import (AdmissionPolicy,
+                                                    GlobalController, ModelCost,
                                                     NodeHandle)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.block_manager import BlockManager, OutOfBlocksError
@@ -38,6 +39,20 @@ from repro.sim.events import EventQueue
 from repro.sim.hardware import A100, HardwareProfile
 
 SYSTEMS = ("flowkv", "vllm_disagg", "mooncake", "distserve", "vllm_colocated")
+
+# Routing policies for the scenario suite (benchmarks/scenarios.py):
+#   load_aware  — the full FlowKV control plane: smoothed-score routing,
+#                 regime actions (role switch / flip / scale) and, when an
+#                 AdmissionPolicy is set, the overload admission gate.
+#   round_robin — blind rotation over P and D nodes; controller PASSIVE
+#                 (observes and classifies but never acts).
+#   static_pd   — fixed role partition, round-robin P, least-instantaneous-
+#                 queue D (the classic disaggregated baseline); controller
+#                 PASSIVE.
+# Constructing with routing=None keeps the legacy behavior: the system
+# spec's load_aware bit picks between the controller path and static_pd
+# routing with the controller left ACTIVE (exactly the pre-scenario code).
+ROUTING_POLICIES = ("load_aware", "round_robin", "static_pd")
 
 
 @dataclasses.dataclass
@@ -106,6 +121,10 @@ class SimNode:
             self.scheduler.set_priority("both")
         self.busy_until = 0.0
         self.planner = TransferPlanner(kv_spec)
+        # scenario bookkeeping: work this node actually executed (a node with
+        # both at 0 at the end of a run was STARVED by the routing policy)
+        self.served_prefill = 0     # requests that ran a prefill chunk here
+        self.served_decode = 0      # request-cycles decoded here
 
     # -- cost model ----------------------------------------------------------
     def prefill_duration(self, num_tokens: int) -> float:
@@ -120,13 +139,26 @@ class ClusterSim:
     def __init__(self, cfg: ModelConfig, kind: str, *, num_prefill: int = 1,
                  num_decode: int = 1, hw_prefill: HardwareProfile = A100,
                  hw_decode: Optional[HardwareProfile] = None,
+                 hw_nodes: Optional[Sequence[HardwareProfile]] = None,
                  same_host: bool = True, blocks_per_node: int = 8192,
-                 max_batch_tokens: int = 8192, tp: int = 1):
+                 max_batch_tokens: int = 8192, tp: int = 1,
+                 routing: Optional[str] = None,
+                 role_flip: bool = False,
+                 admission: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.spec = system_spec(kind)
         self.kind = kind
         self.same_host = same_host
         hw_decode = hw_decode or hw_prefill
+        if routing is not None and routing not in ROUTING_POLICIES:
+            raise ValueError(
+                f"routing must be one of {ROUTING_POLICIES}, got {routing!r}")
+        # legacy construction (routing=None): spec.load_aware picks the path
+        # and the controller stays active, exactly as before the scenario
+        # suite existed; explicit baselines get a passive controller.
+        self.routing = routing or \
+            ("load_aware" if self.spec.load_aware else "static_pd")
+        passive = routing is not None and routing != "load_aware"
         n_attn = cfg.num_attention_layers() or cfg.num_layers
         self.kv_spec = KVCacheSpec(
             num_layers=n_attn, num_blocks=blocks_per_node,
@@ -139,7 +171,13 @@ class ClusterSim:
         )
         self.cost = cost
         self.controller = GlobalController(cost, cfg.block_size,
-                                           target="gpu")
+                                           target="gpu",
+                                           role_flip=role_flip,
+                                           admission=admission,
+                                           actions_enabled=not passive)
+        # deferred admissions re-routed inside controller.step need their
+        # target node's event loop poked (event-driven runtime)
+        self.controller.on_admit = lambda req: self._poke(req.prefill_node)
         self.nodes: Dict[int, SimNode] = {}
         if self.spec.colocated:
             # same GPU budget as 1P1D: two colocated hybrid instances
@@ -147,6 +185,12 @@ class ClusterSim:
         else:
             roles = [("prefill", hw_prefill)] * num_prefill + \
                     [("decode", hw_decode)] * num_decode
+        if hw_nodes is not None:
+            # heterogeneous fleet: per-node profile overrides (same length)
+            if len(hw_nodes) != len(roles):
+                raise ValueError(
+                    f"hw_nodes has {len(hw_nodes)} profiles for {len(roles)} nodes")
+            roles = [(role, hw_nodes[i]) for i, (role, _) in enumerate(roles)]
         for i, (role, hw) in enumerate(roles):
             node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
                            max_batch_tokens)
@@ -159,17 +203,41 @@ class ClusterSim:
                 node.scheduler.set_priority("both")
         self.eq = EventQueue()
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
+        self.offered = 0
+        self._rr = 0   # round-robin cursor
         self.transfer_latencies: List[float] = []
         self.transfer_calls: List[int] = []
         self.transfer_dispatches: List[int] = []
         self._poll_scheduled: Dict[int, bool] = {i: False for i in self.nodes}
+        self._recheck_scheduled = False   # admission-recheck event in flight
 
     # -- routing ------------------------------------------------------------------
     def _route(self, req: Request) -> None:
-        if self.spec.load_aware:
-            self.controller.route_request(req)
+        self.offered += 1
+        if self.routing == "load_aware":
+            decision = self.controller.submit_request(req)
+            self._collect_rejected()
+            if not decision.admitted:
+                if decision.verdict == "deferred":
+                    # deferred re-evaluation runs in controller.step, which
+                    # only fires from _complete — keep a recheck event alive
+                    # so a deferral on an otherwise-idle cluster cannot
+                    # strand the request with an empty event queue
+                    self._schedule_admission_recheck()
+                return
+        elif self.routing == "round_robin":
+            # blind rotation over both sides, no load signal at all
+            pn = self.controller.prefill_nodes() or \
+                [n for n in self.controller.nodes.values() if n.alive]
+            dn = self.controller.decode_nodes() or pn
+            p = pn[self._rr % len(pn)]
+            d = dn[self._rr % len(dn)]
+            self._rr += 1
+            req.decode_node = d.node_id
+            p.scheduler.enqueue_prefill(req)
         else:
-            # baseline: round-robin over P nodes, least-loaded D node
+            # static_pd: fixed roles, round-robin P, least-loaded D node
             pn = [n for n in self.controller.prefill_nodes()]
             p = pn[req.request_id % len(pn)]
             dn = self.controller.decode_nodes() or pn
@@ -178,6 +246,29 @@ class ClusterSim:
             p.scheduler.enqueue_prefill(req)
         node_id = req.prefill_node
         self._poke(node_id)
+
+    def _collect_rejected(self) -> None:
+        for r in self.controller.take_rejected():
+            r.finish_time = self.eq.now
+            self.rejected.append(r)
+
+    def _schedule_admission_recheck(self, period: float = 0.05) -> None:
+        """Periodic controller tick while any request sits deferred."""
+        if self._recheck_scheduled:
+            return
+        self._recheck_scheduled = True
+
+        def recheck():
+            self._recheck_scheduled = False
+            for nid, handle in self.controller.nodes.items():
+                if handle.alive:   # idle != dead (failure injection is explicit)
+                    self.controller.heartbeat(nid, self.eq.now)
+            self.controller.step(self.eq.now)
+            self._collect_rejected()
+            if self.controller.deferred:
+                self._schedule_admission_recheck(period)
+
+        self.eq.push(self.eq.now + period, recheck)
 
     def _poke(self, node_id: int) -> None:
         """Schedule a scheduling-cycle poll for a node if idle."""
@@ -201,8 +292,10 @@ class ClusterSim:
             tokens = decision.num_prefill_tokens
             duration += node.prefill_duration(tokens)
             node.scheduler.last_compute_util = 1.0
+            node.served_prefill += len(decision.prefill_batch)
         if decision.decode_batch:
             duration += node.decode_duration(decision.decode_batch)
+            node.served_decode += len(decision.decode_batch)
             # same signal as NodeEngine.run_decode: the admitted batch's
             # progress fraction — identically 1.0 here because every
             # simulated decode request progresses each cycle.
@@ -249,6 +342,7 @@ class ClusterSim:
             if handle.alive:
                 self.controller.heartbeat(nid, now)
         self.controller.step(now)
+        self._collect_rejected()   # deferred admissions the gate gave up on
         self._poke(node_id)
 
     # -- transfer ----------------------------------------------------------------------
@@ -258,6 +352,16 @@ class ClusterSim:
         dst = self.nodes[dst_id]
         if not src.bm.owns(req.request_id):
             return   # request was drained/requeued (failover) mid-transfer
+        if src is dst:
+            # Role-flexible node serving both stages (degenerate routing):
+            # the cache is already in this pool — local handoff, no transfer
+            # (mirrors PDCluster._transfer).
+            req.transfer_start = req.transfer_end = now
+            req.transfer_calls = req.transfer_dispatches = 0
+            src.scheduler.sending_done(req, free=False)
+            dst.scheduler.enqueue_decode(req)
+            self._poke(dst.node_id)
+            return
         # Same TransferBackend registry as the real runtime: the "sim"
         # backend plans/prices exactly but its data plane is a no-op.
         backend = get_backend("sim", schedule=self.spec.schedule)
@@ -300,8 +404,18 @@ class ClusterSim:
         span = max((r.finish_time for r in self.finished), default=1.0)
         e2e = [r.e2e() for r in self.finished if r.e2e() is not None]
         tpot = [t for t in (r.tpot() for r in self.finished) if t is not None]
+        ttfts = sorted(t for t in (r.ttft() for r in self.finished)
+                       if t is not None)
+        p95 = ttfts[max(0, -(-len(ttfts) * 95 // 100) - 1)] if ttfts else 0.0
+        starved = [n.node_id for n in self.nodes.values()
+                   if n.served_prefill + n.served_decode == 0]
         return {
             "system": self.kind,
+            "routing": self.routing,
+            "offered": self.offered,
+            "rejected": len(self.rejected),
+            "p95_ttft_s": p95,
+            "starved_nodes": len(starved),
             "finished": len(self.finished),
             "throughput_tok_s": total_tokens / span if span else 0.0,
             "mean_e2e_s": sum(e2e) / len(e2e) if e2e else 0.0,

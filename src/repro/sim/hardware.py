@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.costmodel import (NCCL_ENI, IPC, TPU_DCN, TPU_ICI,
-                                  TransportProfile)
+                                  TransportProfile, predicted_ttft_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +31,10 @@ class HardwareProfile:
 
     # -- step-time estimates --------------------------------------------------
     def prefill_time(self, flops: float) -> float:
-        return self.step_overhead_s + flops / (self.peak_flops * self.mfu_prefill)
+        # one formula with the controller's routing/admission TTFT estimate
+        return predicted_ttft_s(0.0, flops,
+                                self.peak_flops * self.mfu_prefill,
+                                self.step_overhead_s)
 
     def decode_time(self, bytes_moved: float) -> float:
         return self.step_overhead_s + bytes_moved / (self.hbm_bandwidth * self.mbu_decode)

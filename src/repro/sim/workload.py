@@ -9,7 +9,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -54,6 +54,38 @@ def generate(spec: WorkloadSpec, rps: float, seed: int = 0,
         olen = spec.mean_output if spec.output_std == 0 else max(
             8, int(rng.normal(spec.mean_output, spec.output_std)))
         # token ids only matter for prefix-cache hashing; randomize
+        prompt = rng.randint(0, vocab_size, size=ilen).tolist()
+        out.append(Request(
+            prompt_tokens=prompt,
+            sampling=SamplingParams(max_new_tokens=olen),
+            arrival_time=float(arrivals[i]),
+        ))
+    return out
+
+
+def generate_mixture(specs: Sequence[WorkloadSpec], weights: Sequence[float],
+                     rps: float, num_requests: int, seed: int = 0,
+                     vocab_size: int = 32000) -> List[Request]:
+    """One Poisson arrival stream whose per-request shape is drawn from a
+    weighted mix of specs — e.g. the computationally-imbalanced scenario
+    mixes long-prompt/short-output (prefill-heavy) with short-prompt/
+    long-output (decode-heavy) traffic in one stream.
+    """
+    if len(specs) != len(weights):
+        raise ValueError("specs and weights must have the same length")
+    rng = np.random.RandomState(seed)
+    probs = np.asarray(weights, dtype=float)
+    probs = probs / probs.sum()
+    gaps = rng.exponential(1.0 / max(rps, 1e-9), size=num_requests)
+    arrivals = np.cumsum(gaps)
+    picks = rng.choice(len(specs), size=num_requests, p=probs)
+    out: List[Request] = []
+    for i in range(num_requests):
+        spec = specs[picks[i]]
+        ilen = spec.mean_input if spec.input_std == 0 else max(
+            16, int(rng.normal(spec.mean_input, spec.input_std)))
+        olen = spec.mean_output if spec.output_std == 0 else max(
+            8, int(rng.normal(spec.mean_output, spec.output_std)))
         prompt = rng.randint(0, vocab_size, size=ilen).tolist()
         out.append(Request(
             prompt_tokens=prompt,

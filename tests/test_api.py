@@ -10,8 +10,8 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.block_manager import BlockManager
-from repro.core.scheduler import (GlobalController, HybridScheduler, ModelCost,
-                                  NodeHandle)
+from repro.core.scheduler import (AdmissionPolicy, GlobalController,
+                                  HybridScheduler, ModelCost, NodeHandle)
 from repro.models import transformer as T
 from repro.models.api import get_model
 from repro.serving.api import FlowKVClient
@@ -211,6 +211,51 @@ def test_checkpoint_restores_roles_and_cancelled(tmp_path, small_model):
     assert c2.cancelled[0].state is RequestState.CANCELLED
 
 
+def test_checkpoint_roundtrips_rejected_and_spilled(tmp_path, small_model):
+    """A checkpoint taken mid-swap keeps the spilled KV and the rejected
+    bookkeeping — restore does not silently drop either."""
+    from repro.serving.checkpoint import load_cluster, save_cluster
+    cfg, params = small_model
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(0, cfg.vocab_size, size=20).tolist()
+               for _ in range(2)]
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=3,
+                          admission=AdmissionPolicy(ttft_slo_s=1e-12,
+                                                    reject_factor=1.0))
+    # admission armed with an impossible SLO -> this submit is REJECTED
+    rej = client.submit(prompts[0], SamplingParams(max_new_tokens=2))
+    assert rej.rejected
+    # disarm the gate, then pressure the pool until a request is SWAPPED
+    client.controller.admission = None
+    handles = [client.submit(p, SamplingParams(max_new_tokens=20))
+               for p in prompts]
+    swapped = None
+    for _ in range(400):
+        client.step()
+        swapped = next((h for h in handles
+                        if h.request.state is RequestState.SWAPPED), None)
+        if swapped is not None or all(h.done for h in handles):
+            break
+    assert swapped is not None
+    dnode = client.cluster.engines[swapped.request.decode_node]
+    assert swapped.request_id in dnode.spilled
+    save_cluster(client.cluster, str(tmp_path / "ckpt"))
+
+    c2 = PDCluster(cfg, params, num_prefill=1, num_decode=1, num_blocks=3)
+    load_cluster(c2, str(tmp_path / "ckpt"))
+    assert len(c2.rejected) == 1
+    assert c2.rejected[0].state is RequestState.REJECTED
+    assert c2.rejected[0].retry_after == rej.retry_after
+    d2 = c2.engines[swapped.request.decode_node]
+    assert swapped.request_id in d2.spilled
+    k, v, length = d2.spilled[swapped.request_id]
+    k0, v0, length0 = dnode.spilled[swapped.request_id]
+    assert length == length0
+    np.testing.assert_allclose(np.asarray(k, np.float32),
+                               np.asarray(k0, np.float32))
+
+
 def test_set_role_flip_back_and_validation(small_model):
     cfg, params = small_model
     client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1, num_blocks=64)
@@ -268,6 +313,137 @@ def test_role_flip_policy_reassigns_and_reverts():
             break
     assert len(gc.decode_nodes()) == 3, "flipped nodes never reverted"
     assert all(n.home_role is None for n in gc.nodes.values())
+
+
+# ---------------------------------------------------------------------------
+# overload admission: REJECTED + retry-after through the client
+# ---------------------------------------------------------------------------
+def test_overload_burst_rejected_with_retry_after(small_model):
+    """An undersized cluster early-rejects part of a burst; rejected handles
+    are terminal, carry retry-after, and resubmission after back-off works."""
+    cfg, params = small_model
+    prompts = _prompts(cfg, n=8, seed=71)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=128, max_batch_tokens=8,
+                          admission=AdmissionPolicy(max_queue_depth=2,
+                                                    max_defer_cycles=3,
+                                                    retry_after_floor_s=2.0))
+    handles = [client.submit(p, SamplingParams(max_new_tokens=3))
+               for p in prompts]
+    client.drain(max_cycles=500)
+    rejected = [h for h in handles if h.rejected]
+    served = [h for h in handles if not h.rejected]
+    assert rejected, "the admission gate never fired on this burst"
+    assert served, "the gate must not reject everything"
+    for h in rejected:
+        assert h.done and h.state is RequestState.REJECTED
+        assert h.retry_after is not None and h.retry_after >= 2.0
+        s = h.stats()
+        assert s["retry_after_s"] == h.retry_after
+        assert s["reject_reason"]
+        assert list(h.tokens()) == []          # stream ends cleanly, empty
+        assert not h.cancel()                  # already terminal
+    for h in served:
+        assert h.request.state is RequestState.FINISHED
+    # bookkeeping: every submission accounted for, nothing leaked
+    st = client.stats()
+    assert st["rejected"] == len(rejected) and st["deferred"] == 0
+    assert client.cluster.submitted == len(prompts)
+    for eng in client.cluster.engines.values():
+        eng.scheduler.bm.check_invariants()
+        assert eng.scheduler.bm.num_free == 128
+    # back-off honored -> resubmission of the same prompts is admitted
+    for _ in range(3):
+        client.step()
+    retries = [client.submit(h.request.prompt_tokens,
+                             SamplingParams(max_new_tokens=3))
+               for h in rejected]
+    client.drain(max_cycles=500)
+    assert all(h.request.state is RequestState.FINISHED for h in retries)
+
+
+def test_deferred_request_admitted_once_load_drains(small_model):
+    """Transient pressure defers (not rejects); the parked request finishes
+    with correct tokens once earlier work drains."""
+    cfg, params = small_model
+    prompts = _prompts(cfg, n=3, seed=81)
+    refs = _reference(cfg, params, prompts, steps=3)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=128, max_batch_tokens=8,
+                          admission=AdmissionPolicy(max_queue_depth=2,
+                                                    max_defer_cycles=200))
+    handles = [client.submit(p, SamplingParams(max_new_tokens=3))
+               for p in prompts]
+    assert handles[-1].request in client.controller.deferred
+    client.drain(max_cycles=500)
+    for h in handles:
+        assert h.request.state is RequestState.FINISHED
+        assert h.request.output_tokens == refs[tuple(h.request.prompt_tokens)]
+    assert client.stats()["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# spill path: decode preemption survives with token-identical output
+# ---------------------------------------------------------------------------
+def test_decode_preemption_spill_resume_token_identical(small_model):
+    """num_blocks=3 forces decode KV pressure: one request gets SWAPPED
+    (KV spilled off-pool), resumes later, and still matches monolithic
+    generation exactly — and nothing leaks."""
+    cfg, params = small_model
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, size=20).tolist()
+               for _ in range(2)]
+    refs = _reference(cfg, params, prompts, steps=20)
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=3)
+    handles = [client.submit(p, SamplingParams(max_new_tokens=20))
+               for p in prompts]
+    swapped_cycles = 0
+    for _ in range(400):
+        client.step()
+        swapped_cycles += sum(
+            1 for h in handles if h.request.state is RequestState.SWAPPED)
+        if all(h.done for h in handles):
+            break
+    assert swapped_cycles > 0, "pool was never pressured into a spill"
+    for h in handles:
+        assert h.request.state is RequestState.FINISHED
+        assert h.request.output_tokens == refs[tuple(h.request.prompt_tokens)]
+        assert h.request.retries == 0          # spill is not the fault path
+    for eng in client.cluster.engines.values():
+        eng.scheduler.bm.check_invariants()
+        assert eng.scheduler.bm.num_free == 3, "spill/resume leaked blocks"
+        assert not eng.spilled, "saved spill was never consumed"
+
+
+def test_cancel_while_swapped_discards_spill(small_model):
+    """Cancelling a SWAPPED request drops its saved KV via on_discard."""
+    cfg, params = small_model
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(0, cfg.vocab_size, size=20).tolist()
+               for _ in range(2)]
+    client = FlowKVClient(cfg, params, num_prefill=1, num_decode=1,
+                          num_blocks=3)
+    handles = [client.submit(p, SamplingParams(max_new_tokens=20))
+               for p in prompts]
+    target = None
+    for _ in range(400):
+        client.step()
+        target = next((h for h in handles
+                       if h.request.state is RequestState.SWAPPED), None)
+        if target is not None:
+            break
+        if all(h.done for h in handles):
+            break
+    assert target is not None, "never observed a swapped request"
+    dnode = client.cluster.engines[target.request.decode_node]
+    assert target.request_id in dnode.spilled
+    assert target.cancel()
+    assert target.request_id not in dnode.spilled
+    client.drain(max_cycles=400)
+    for eng in client.cluster.engines.values():
+        eng.scheduler.bm.check_invariants()
+        assert eng.scheduler.bm.num_free == 3
 
 
 def test_stats_expose_transfer_dispatch_counts(small_model):

@@ -1,14 +1,19 @@
 """Load-aware scheduler: scores, regimes, role switching, elastic scaling,
-failover (paper Alg. 1 + App. B)."""
+failover (paper Alg. 1 + App. B), the overload admission gate, and the
+capability-normalized heterogeneous scoring."""
+import dataclasses
+
 import pytest
 
 from repro.core.block_manager import BlockManager
-from repro.core.scheduler import (GlobalController, HybridScheduler, ModelCost,
-                                  NodeHandle, Thresholds, classify_regime,
+from repro.core.scheduler import (AdmissionPolicy, GlobalController,
+                                  HybridScheduler, ModelCost, NodeHandle,
+                                  ScoreWeights, Thresholds, classify_regime,
                                   node_score)
+from repro.core.scheduler.load_score import DECODE_WEIGHTS, PREFILL_WEIGHTS
 from repro.core.scheduler.metrics import NodeStatus, SlidingWindow, normalize
-from repro.serving.request import Request, SamplingParams
-from repro.sim.hardware import A100
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.sim.hardware import A100, H20, L20
 
 
 def _controller(num_p=2, num_d=2, node_factory=None, **kw):
@@ -44,6 +49,52 @@ def test_normalize_bounds_queues():
     s2 = NodeStatus(waiting_prefill=5)
     n1, n2 = normalize([s1, s2])
     assert n1.waiting_prefill == 1.0 and n2.waiting_prefill == 0.5
+
+
+def test_score_weight_presets_are_convex():
+    """The shipped presets validate at import; validate() returns self."""
+    assert PREFILL_WEIGHTS.validate() is PREFILL_WEIGHTS
+    assert DECODE_WEIGHTS.validate() is DECODE_WEIGHTS
+    assert abs(sum(dataclasses.astuple(PREFILL_WEIGHTS)) - 1.0) < 1e-9
+    assert abs(sum(dataclasses.astuple(DECODE_WEIGHTS)) - 1.0) < 1e-9
+
+
+def test_score_weight_validation_rejects_drift():
+    bad_sum = dataclasses.replace(PREFILL_WEIGHTS, waiting=0.9)
+    with pytest.raises(ValueError, match="sum to 1"):
+        bad_sum.validate()
+    negative = dataclasses.replace(PREFILL_WEIGHTS, waiting=-0.1,
+                                   running=PREFILL_WEIGHTS.running + 0.4)
+    with pytest.raises(ValueError, match="non-negative"):
+        negative.validate()
+
+
+def test_capability_normalization_weak_node_scores_hotter():
+    """Same load vector: a half-capability card reads as more loaded, and
+    a full-capability card reproduces the original (unscaled) formula."""
+    load = NodeStatus(waiting_prefill=0.5, running_decode=0.5,
+                      token_budget_used=0.5)
+    weak_p = load.with_capability(0.5, 1.0, 1.0)      # compute-lean (L20-ish)
+    weak_d = load.with_capability(1.0, 0.5, 1.0)      # bandwidth-lean
+    assert node_score(weak_p, "prefill") > node_score(load, "prefill")
+    assert node_score(weak_d, "decode") > node_score(load, "decode")
+    # utilization fractions are NOT rescaled (already relative to own hw)
+    util_only = NodeStatus(kv_utilization=0.8, compute_utilization=0.8,
+                           bandwidth_utilization=0.8)
+    assert node_score(util_only.with_capability(0.5, 0.5, 0.5), "prefill") == \
+        pytest.approx(node_score(util_only, "prefill"))
+
+
+def test_controller_stamps_fleet_relative_capability():
+    gc = _controller(num_p=1, num_d=1)
+    gc.nodes[0].hardware = L20        # weak prefill card
+    gc.nodes[1].hardware = H20        # decode-friendly card
+    caps = gc._capabilities()
+    assert caps[1][0] == 1.0 and caps[0][0] == pytest.approx(119 / 148, rel=1e-3)
+    assert caps[1][1] == 1.0 and caps[0][1] < 0.25          # 0.864 vs 4.0 TB/s
+    status = gc._scored_status(gc.nodes[0])
+    assert status.capability_compute == caps[0][0]
+    assert status.capability_memory == caps[0][1]
 
 
 def test_node_score_role_sensitivity():
@@ -173,6 +224,142 @@ def test_failover_requeues_requests():
     rerouted = gc.reroute_retries()
     assert rerouted == 0 or r.prefill_node != p
     assert r.retries >= 1 or r.prefill_node != p
+
+
+# ---------------------------------------------------------------------------
+# overload admission gate (Mooncake-style early rejection)
+# ---------------------------------------------------------------------------
+def test_admission_disabled_admits_everything():
+    gc = _controller()
+    d = gc.submit_request(_req())
+    assert d.admitted and d.route is not None
+
+
+def test_admission_rejects_on_predicted_ttft():
+    """Deep overload (predicted TTFT far beyond SLO) rejects at submit."""
+    pol = AdmissionPolicy(ttft_slo_s=1e-12, reject_factor=1.0,
+                          retry_after_floor_s=2.5)
+    gc = _controller(admission=pol)
+    r = _req(1000)
+    d = gc.submit_request(r)
+    assert d.verdict == "rejected"
+    assert r.state is RequestState.REJECTED
+    assert r.retry_after is not None and r.retry_after >= 2.5
+    assert "predicted_ttft" in r.reject_reason
+    assert gc.take_rejected() == [r]
+    assert gc.take_rejected() == []            # outbox drains once
+    assert any(e.kind == "admission" for e in gc.events)
+
+
+def test_admission_defers_then_rejects_when_load_persists():
+    """Queue-depth denial defers; sustained pressure turns it terminal."""
+    pol = AdmissionPolicy(max_queue_depth=1, max_defer_cycles=2)
+    gc = _controller(num_p=1, num_d=1, admission=pol)
+    gc.nodes[0].scheduler.prefill.waiting.append(_req())   # depth 1 == cap
+    r = _req()
+    d = gc.submit_request(r)
+    assert d.verdict == "deferred"
+    assert r in gc.deferred and r.state is RequestState.WAITING
+    for _ in range(3):                         # defers 1, 2 -> reject
+        gc.step()
+    assert r.state is RequestState.REJECTED
+    assert r not in gc.deferred
+    assert gc.take_rejected() == [r]
+
+
+def test_admission_admits_deferred_once_load_drains():
+    pol = AdmissionPolicy(max_queue_depth=1, max_defer_cycles=50)
+    gc = _controller(num_p=1, num_d=1, admission=pol)
+    gc.nodes[0].scheduler.prefill.waiting.append(_req())
+    admitted = []
+    gc.on_admit = admitted.append
+    r = _req()
+    assert gc.submit_request(r).verdict == "deferred"
+    gc.step()
+    assert r in gc.deferred                    # still parked under pressure
+    gc.nodes[0].scheduler.prefill.waiting.clear()   # load drains
+    gc.step()
+    assert r not in gc.deferred and admitted == [r]
+    assert r.prefill_node == 0 and r.retry_after is None
+    assert r in gc.nodes[0].scheduler.prefill.waiting
+
+
+def test_admission_overload_epsilon_gate():
+    """Every prefill node beyond eps_overload -> the gate stops admitting."""
+    pol = AdmissionPolicy(max_queue_depth=1000, ttft_slo_s=1e9)
+    gc = _controller(num_p=2, num_d=2, admission=pol,
+                     thresholds=Thresholds(overload=0.05))
+    for nid in (0, 1):
+        sched = gc.nodes[nid].scheduler
+        sched.last_token_budget_used = 1.0
+        sched.last_compute_util = 1.0
+        sched.sample_status()                  # fill the smoothing window
+    d = gc.submit_request(_req())
+    assert d.verdict == "deferred"
+    assert "eps_overload" in d.reason
+
+
+def test_passive_controller_takes_no_actions():
+    """actions_enabled=False: classify-only (scenario baselines)."""
+    gc = _controller(num_p=1, num_d=1, actions_enabled=False,
+                     admission=AdmissionPolicy(ttft_slo_s=1e-12))
+    assert gc.submit_request(_req(1000)).admitted   # gate off when passive
+    for _ in range(40):
+        gc.nodes[0].scheduler.enqueue_prefill(_req(2000))
+    gc.nodes[0].scheduler.last_token_budget_used = 1.0
+    gc.nodes[0].scheduler.last_compute_util = 1.0
+    for _ in range(10):
+        gc.step()
+    kinds = {e.kind for e in gc.events}
+    assert "role_switch" not in kinds and "scale_up" not in kinds
+    assert "regime" in kinds                   # it still observes
+
+
+# ---------------------------------------------------------------------------
+# spill path: the swapped queue saves/restores KV through the hooks
+# ---------------------------------------------------------------------------
+def test_decode_preemption_spills_and_resumes_via_hooks():
+    bm = BlockManager(4, 4)
+    s = HybridScheduler(0, bm)
+    spilled, resumed = [], []
+    s.on_spill = lambda r: spilled.append(r.request_id)
+    s.on_resume = lambda r: resumed.append(r.request_id)
+    a, b = _req(7), _req(7)
+    for r in (a, b):
+        bm.allocate(r.request_id, r.total_len + 1)   # 2 blocks each: pool full
+        s.enqueue_decode(r)
+    a.output_tokens.append(0)                  # a grows past its 2 blocks
+    b.output_tokens.append(0)
+    d = s.schedule()
+    # a (scanned first) cannot grow -> preempted WITH its KV saved first;
+    # the freed blocks let b grow and keep decoding
+    assert spilled == [a.request_id]
+    assert a.state is RequestState.SWAPPED and a in s.decode.swapped
+    assert not bm.owns(a.request_id) and a.block_ids == []
+    assert d.decode_batch == [b] and d.preempted == [a]
+    # b finishes -> its blocks free -> a resumes through on_resume
+    s.decode_finished(b)
+    d2 = s.schedule()
+    assert resumed == [a.request_id]
+    assert a.state is RequestState.DECODING and d2.decode_batch == [a]
+    assert bm.owns(a.request_id)
+    s.decode_finished(a)
+    bm.check_invariants()
+    assert bm.num_free == 4, "spill/resume leaked blocks"
+
+
+def test_discard_hook_fires_on_cancel_and_drain():
+    bm = BlockManager(8, 4)
+    s = HybridScheduler(0, bm)
+    discarded = []
+    s.on_discard = lambda r: discarded.append(r.request_id)
+    r1, r2 = _req(6), _req(6)
+    s.enqueue_prefill(r1)
+    s.enqueue_prefill(r2)
+    s.remove_request(r1)                       # cancel path
+    assert r1.request_id in discarded
+    s.drain_for_failure()                      # failover path
+    assert r2.request_id in discarded
 
 
 def test_scheduler_drain_for_failure_frees_blocks():

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Docs CI gate: every intra-repo link in README.md / docs/*.md must
+resolve, and every code symbol the docs cite must exist in the tree.
+
+Checked, per file:
+
+* markdown links ``[text](target)`` whose target is not http(s)/mailto/#
+  must point at an existing file (anchors stripped);
+* backticked repo paths (`` `foo/bar.py` ``, `` `docs/x.md` ``,
+  `` `.github/workflows/ci.yml` ``) must exist — tried relative to the
+  repo root, then ``src/``, then ``src/repro/`` (docs often refer to
+  ``kernels/...`` the way the code does);
+* backticked dotted symbols (`` `repro.x.y.z` ``) must import/resolve:
+  the longest importable module prefix is imported and the remaining
+  attributes are getattr-walked (classes, functions, methods, dataclass
+  attributes all resolve). This is what keeps docs/scheduling.md's
+  Alg. 1 -> code mapping honest.
+
+Exit 0 when clean; prints every violation and exits 1 otherwise.
+Run from anywhere: ``PYTHONPATH=src python tools/check_docs.py``.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+from typing import List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+PATH_RE = re.compile(r"`((?:[\w.-]+/)*[\w.-]+\.(?:py|md|yml|yaml|txt))`")
+
+PATH_PREFIXES = ("", "src", "src/repro")
+
+
+def doc_files() -> List[pathlib.Path]:
+    docs = sorted((ROOT / "docs").glob("*.md")) if (ROOT / "docs").is_dir() else []
+    return [ROOT / "README.md", *docs]
+
+
+def check_links(md: pathlib.Path, text: str) -> List[str]:
+    errs = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md.parent / rel).resolve().exists():
+            errs.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errs
+
+
+def check_paths(md: pathlib.Path, text: str) -> List[str]:
+    errs = []
+    for m in PATH_RE.finditer(text):
+        rel = m.group(1)
+        if not any((ROOT / pre / rel).exists() for pre in PATH_PREFIXES):
+            errs.append(f"{md.relative_to(ROOT)}: missing path `{rel}`")
+    return errs
+
+
+def resolve_symbol(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        for attr in parts[i:]:
+            # private members are real symbols too (_handle_imbalance …)
+            if not hasattr(obj, attr):
+                return False
+            obj = getattr(obj, attr)
+        return True
+    return False
+
+
+def check_symbols(md: pathlib.Path, text: str) -> List[str]:
+    errs = []
+    for dotted in sorted(set(SYMBOL_RE.findall(text))):
+        if not resolve_symbol(dotted):
+            errs.append(f"{md.relative_to(ROOT)}: unresolvable symbol `{dotted}`")
+    return errs
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    errs: List[str] = []
+    for md in doc_files():
+        text = md.read_text()
+        errs += check_links(md, text)
+        errs += check_paths(md, text)
+        errs += check_symbols(md, text)
+    if errs:
+        for e in errs:
+            print(f"FAIL {e}")
+        return 1
+    print(f"docs OK: {len(doc_files())} files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,7 @@
     fig1    benchmarks/time_breakdown.py     single-request time split
     fig5    benchmarks/allocator_bench.py    allocator contiguity/alignment
     decode  benchmarks/decode_throughput.py  zero-gather decode dispatches/step
+    prefix  benchmarks/prefix_reuse.py       prefix-cache hit rate vs prefill compute
     scen    benchmarks/scenarios.py          scheduling scenarios (load-aware vs baselines)
     roof    benchmarks/roofline.py           dry-run roofline table
 
@@ -37,7 +38,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full RPS grids (paper-complete, slower)")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,decode,scen,roof")
+                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,decode,prefix,scen,roof")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -77,6 +78,10 @@ def main() -> None:
     if want("decode"):
         from benchmarks import decode_throughput
         for r in decode_throughput.rows():
+            print(r)
+    if want("prefix"):
+        from benchmarks import prefix_reuse
+        for r in prefix_reuse.rows():
             print(r)
     if want("scen"):
         from benchmarks import scenarios

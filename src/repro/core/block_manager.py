@@ -4,10 +4,28 @@ One per node, shared between that node's prefill and decode schedulers (the
 paper's hybrid scheduler "share[s] a block manager"). The data-plane pool
 (the device array holding pages) lives in ``serving/kv_cache.py`` and is
 indexed by the ids handed out here.
+
+Blocks are **ref-counted** so a prefix-cache hit can share the matched
+prefix's blocks into a new request's table instead of copying them
+(``allocate(..., prefix_blocks=...)``). The sharing rules:
+
+* only FULL blocks are ever shared (the prefix index matches at block
+  granularity), so a shared block is read-only by construction — writes
+  land at token positions past the shared prefix, i.e. in blocks the
+  request owns exclusively;
+* a block returns to the allocator only when its refcount reaches zero,
+  and ``on_free`` fires with exactly the physically-freed blocks — the
+  prefix index hangs its residency invalidation off this hook, so it can
+  never advertise KV whose last holder released it.
+
+``check_invariants`` audits the sharing bookkeeping: per-block refcounts
+must equal the number of tables holding the block, and every table block
+must be live in the allocator.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import collections
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.allocator import OutOfBlocksError, make_allocator
 from repro.core.segments import blocks_to_segments, fragmentation
@@ -19,6 +37,12 @@ class BlockManager:
         self.block_size = block_size
         self.allocator = make_allocator(allocator, num_blocks)
         self._table: Dict[int, List[int]] = {}   # request_id -> block ids (ordered)
+        self._refcount: Dict[int, int] = {}      # block id -> holding tables
+        # Fired with the block ids that PHYSICALLY freed (refcount hit zero).
+        # serving/cluster.py and sim/cluster_sim.py wire this to
+        # ``PrefixCacheIndex.invalidate_blocks`` so stale residency is
+        # impossible by construction.
+        self.on_free: Optional[Callable[[List[int]], None]] = None
 
     # -- capacity ---------------------------------------------------------------
     @property
@@ -33,20 +57,56 @@ class BlockManager:
     def blocks_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block_size)
 
-    def can_allocate(self, num_tokens: int) -> bool:
-        return self.blocks_needed(num_tokens) <= self.allocator.num_free
+    def can_allocate(self, num_tokens: int, shared_blocks: int = 0) -> bool:
+        """Room for ``num_tokens``, of which ``shared_blocks`` full blocks
+        come from a prefix-cache hit (shared, not drawn from the free pool)."""
+        return (self.blocks_needed(num_tokens) - shared_blocks
+                <= self.allocator.num_free)
 
     # -- request ops --------------------------------------------------------------
-    def allocate(self, request_id: int, num_tokens: int) -> List[int]:
+    def allocate(self, request_id: int, num_tokens: int,
+                 prefix_blocks: Sequence[int] = ()) -> List[int]:
+        """Build a request's block table.
+
+        With ``prefix_blocks`` (a prefix-cache hit), those blocks are SHARED
+        — their refcount is bumped and they become the head of the table —
+        and only the remaining suffix blocks are drawn from the allocator.
+        """
         if request_id in self._table:
             raise ValueError(f"request {request_id} already has blocks")
-        blocks = self.allocator.allocate(self.blocks_needed(num_tokens))
+        prefix = [int(b) for b in prefix_blocks]
+        for b in prefix:
+            if b not in self._refcount:
+                raise ValueError(f"prefix block {b} is not allocated")
+        fresh = self.blocks_needed(num_tokens) - len(prefix)
+        if fresh < 0:
+            raise ValueError(
+                f"{len(prefix)} prefix blocks exceed the {num_tokens}-token table")
+        blocks = prefix + (self.allocator.allocate(fresh) if fresh else [])
+        for b in blocks:
+            self._refcount[b] = self._refcount.get(b, 0) + 1
         self._table[request_id] = blocks
         return blocks
 
     def register(self, request_id: int, num_tokens: int) -> List[int]:
         """Allocate space on a *destination* node ahead of a KV transfer."""
         return self.allocate(request_id, num_tokens)
+
+    def ensure_capacity(self, request_id: int, num_tokens: int) -> List[int]:
+        """Grow a request's table to cover ``num_tokens``; returns new blocks.
+
+        Used when a remote prefix fetch landed the prefix blocks ahead of
+        admission: the scheduler tops the table up to the full prompt.
+        """
+        blocks = self._table[request_id]
+        extra = self.blocks_needed(num_tokens) - len(blocks)
+        if extra <= 0:
+            return []
+        new = self.allocator.extend(blocks, extra)
+        for b in new:
+            self._refcount[b] = self._refcount.get(b, 0) + 1
+        blocks.extend(new)
+        return new
 
     def append_token(self, request_id: int, total_tokens: int) -> Optional[int]:
         """Ensure capacity for one more token; returns a new block id if grown."""
@@ -56,13 +116,27 @@ class BlockManager:
             return None
         assert needed == len(blocks) + 1, "decode grows one block at a time"
         new = self.allocator.extend(blocks, 1)
+        self._refcount[new[0]] = self._refcount.get(new[0], 0) + 1
         blocks.extend(new)
         return new[0]
 
     def free(self, request_id: int) -> None:
+        """Drop a request's table; physically free blocks at refcount zero."""
         blocks = self._table.pop(request_id, None)
-        if blocks:
-            self.allocator.free(blocks)
+        if not blocks:
+            return
+        dead: List[int] = []
+        for b in blocks:
+            n = self._refcount[b] - 1
+            if n:
+                self._refcount[b] = n
+            else:
+                del self._refcount[b]
+                dead.append(b)
+        if dead:
+            self.allocator.free(dead)
+            if self.on_free is not None:
+                self.on_free(dead)
 
     def release_all(self) -> List[int]:
         """Free every request's blocks (node death / pool teardown).
@@ -82,6 +156,13 @@ class BlockManager:
     def owns(self, request_id: int) -> bool:
         return request_id in self._table
 
+    def block_alive(self, block_id: int) -> bool:
+        """True while some request's table holds this block."""
+        return block_id in self._refcount
+
+    def refcount(self, block_id: int) -> int:
+        return self._refcount.get(block_id, 0)
+
     # -- diagnostics -----------------------------------------------------------------
     def request_fragmentation(self, request_id: int) -> float:
         return fragmentation(blocks_to_segments(self._table[request_id]))
@@ -93,12 +174,17 @@ class BlockManager:
 
     def check_invariants(self) -> None:
         self.allocator.check_invariants()
-        seen: set[int] = set()
+        counts: collections.Counter = collections.Counter()
         for rid, blocks in self._table.items():
             bs = set(blocks)
             assert len(bs) == len(blocks), f"duplicate blocks for request {rid}"
-            assert not (bs & seen), f"block shared across requests (request {rid})"
-            seen |= bs
+            counts.update(bs)
+        # refcounts mirror table membership exactly: a block held by k tables
+        # has refcount k; refcount 1 = exclusive (writable), > 1 = shared
+        # prefix (read-only). No table block may be unaccounted and no
+        # refcount may outlive its holders.
+        assert dict(counts) == self._refcount, (
+            f"refcount drift: tables={dict(counts)} refcounts={self._refcount}")
 
 
 __all__ = ["BlockManager", "OutOfBlocksError"]

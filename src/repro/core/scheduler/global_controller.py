@@ -32,6 +32,10 @@ class NodeHandle:
     scheduler: HybridScheduler
     alive: bool = True
     last_heartbeat: float = 0.0
+    # False for engines whose data plane cannot reuse a resident prefix
+    # (state-path families, windowed attention): routing never stamps a
+    # prefix plan onto requests bound for such a node.
+    supports_prefix_reuse: bool = True
     # Temporary role override (imbalanced regime role switch).
     switched_until_cycle: int = -1
     # Set when the flip policy reassigned this node away from its original
@@ -324,8 +328,61 @@ class GlobalController:
         self.deferred = still
 
     # -- normal-regime routing (Alg. 1 lines 18-23) --------------------------------------
+    def _chain_for(self, req: Request) -> List[bytes]:
+        """The request's prompt digest chain, hashed ONCE per request.
+
+        Cached on the request (the prompt is immutable, so the chain
+        survives retries): admission resolvers and fetch-validation retries
+        probe every cycle, and re-hashing a long prompt each time would be
+        pure control-plane overhead."""
+        chain = req.prefix_chain_cache
+        if chain is None:
+            chain = self.prefix_index.chain(req.prompt_tokens)
+            req.prefix_chain_cache = chain
+        return chain
+
+    def shareable_prefix(self, node_id: int, req: Request,
+                         hashes=None) -> Tuple[int, List[int]]:
+        """A node's SHAREABLE prefix for ``req``: full blocks only, capped so
+        at least one suffix token is always computed (the last prompt token's
+        forward emits the first output token)."""
+        if hashes is None:
+            hashes = self._chain_for(req)
+        m = self.prefix_index.lookup(node_id, req.prompt_tokens, hashes)
+        bs = self.prefix_index.block_size
+        nb = min(len(m.block_ids), max(0, req.prompt_len - 1) // bs)
+        return nb * bs, m.block_ids[:nb]
+
+    def resolve_local_prefix(self, node_id: int, req: Request,
+                             block_alive: Callable[[int], bool]) -> List[int]:
+        """Admission-time prefix resolution (the ``resolve_prefix`` hook
+        body, shared by ``PDCluster`` and ``ClusterSim`` so engine and sim
+        semantics cannot drift): re-stamp the request with the reuse THIS
+        node can actually deliver and return the shareable block ids.
+        ``block_alive`` is the node's own liveness check (belt and braces —
+        index drift past the on_free invalidation would be a bug)."""
+        hit, blocks = self.shareable_prefix(node_id, req)
+        if blocks and not all(block_alive(b) for b in blocks):
+            hit, blocks = 0, []
+        req.num_cached_prefix_tokens = hit
+        req.prefix_src_node = node_id if hit else None
+        req.prefix_block_ids = list(blocks)
+        return blocks
+
     def route_request(self, req: Request) -> Optional[Tuple[int, int]]:
-        """Pick (prefill_node, decode_node); enqueue prefill; return ids."""
+        """Pick (prefill_node, decode_node); enqueue prefill; return ids.
+
+        Prefix-aware (paper §3.2 "identifies global cache prefix matches"):
+        for every prefill candidate the controller prices three plans —
+        reuse the node's LOCAL resident prefix, FETCH a longer prefix from
+        the best remote holder (one fused descriptor-table transfer, priced
+        by ``core.costmodel``), or RECOMPUTE from scratch (the local plan
+        with a zero hit) — and routes to the globally cheapest predicted
+        TTFT. The winning plan is stamped on the request
+        (``num_cached_prefix_tokens`` / ``prefix_src_node`` /
+        ``prefix_block_ids``); the runtime executes the fetch and the node's
+        scheduler re-validates local hits at admission time.
+        """
         pnodes = self.prefill_nodes()
         dnodes = self.decode_nodes()
         if not pnodes or not dnodes:
@@ -336,25 +393,99 @@ class GlobalController:
             dnodes = [n for n in dnodes if n.alive]
             if not pnodes:
                 return None
-        p_best = min(pnodes, key=lambda n: self._ttft_estimate(n, req))
-        req.num_cached_prefix_tokens = min(
-            self.prefix_index.match(p_best.node_id, req.prompt_tokens),
-            max(0, req.prompt_len - 1))
+        # best remote prefix holder anywhere in the cluster (decode nodes
+        # included: post-transfer re-homing parks prefixes there); the
+        # prompt is hashed ONCE and the chain reused for every probe — and
+        # not at all when nothing is resident or no node could reuse it
+        probe = self.prefix_index.has_entries and \
+            any(n.supports_prefix_reuse for n in pnodes)
+        hashes = self._chain_for(req) if probe else []
+        remote_best: Tuple[int, List[int], Optional[int]] = (0, [], None)
+        if probe:
+            for nid, _ in self.prefix_index.best_nodes(req.prompt_tokens, hashes):
+                if nid in self.nodes and self.nodes[nid].alive:
+                    hit, blocks = self.shareable_prefix(nid, req, hashes)
+                    if hit > remote_best[0]:
+                        remote_best = (hit, blocks, nid)
+        best = None   # (ttft, node, hit, src_node, blocks)
+        for n in pnodes:
+            local_hit, local_blocks = (self.shareable_prefix(n.node_id, req, hashes)
+                                       if probe and n.supports_prefix_reuse else (0, []))
+            t = self._ttft_estimate(n, req, hit=local_hit)
+            cand = (t, n, local_hit, n.node_id if local_hit else None, local_blocks)
+            if best is None or cand[0] < best[0]:
+                best = cand
+            r_hit, r_blocks, r_nid = remote_best
+            if (n.supports_prefix_reuse and r_nid is not None
+                    and r_nid != n.node_id and r_hit > local_hit):
+                t = self._ttft_estimate(n, req, hit=r_hit) + \
+                    self._prefix_fetch_estimate(self.nodes[r_nid], n, r_hit)
+                if t < best[0]:
+                    best = (t, n, r_hit, r_nid, r_blocks)
+        _, p_best, hit, src, blocks = best
+        req.num_cached_prefix_tokens = hit
+        req.prefix_src_node = src
+        req.prefix_block_ids = list(blocks)
         d_best = min(dnodes, key=lambda n: self._transfer_estimate(p_best, n, req))
         req.decode_node = d_best.node_id
         p_best.scheduler.enqueue_prefill(req)
         return p_best.node_id, d_best.node_id
 
-    def _ttft_estimate(self, node: NodeHandle, req: Request) -> float:
+    def validate_prefix_plan(self, req: Request) -> bool:
+        """Re-check a stamped REMOTE prefix plan against the live index,
+        immediately before the runtime fetches.
+
+        One source of truth for staleness (shared by ``PDCluster`` and
+        ``ClusterSim``, so sim pricing can never drift from engine
+        behavior): the source must be alive and still hold at least the
+        stamped hit with the very same leading blocks. Any mismatch clears
+        the stamp — the plan degrades to recompute, never to garbage KV —
+        and returns False.
+        """
+        src = self.nodes.get(req.prefix_src_node)
+        hit = req.num_cached_prefix_tokens
+        ok = src is not None and src.alive and hit > 0
+        if ok:
+            live, blocks = self.shareable_prefix(src.node_id, req)
+            ok = live >= hit and blocks[:len(req.prefix_block_ids)] == \
+                list(req.prefix_block_ids)
+        if not ok:
+            req.clear_prefix_plan()
+        return ok
+
+    def rehome_prefix(self, req: Request, node_id: int,
+                      blocks: Sequence[int]) -> None:
+        """Advertise a prompt's full-block prefix where its KV now lives
+        (post-transfer decode node, local handoff, or a fetched copy)."""
+        node = self.nodes.get(node_id)
+        if node is None or not node.supports_prefix_reuse:
+            return
+        full_nb = req.prompt_len // self.prefix_index.block_size
+        if full_nb and len(blocks) >= full_nb:
+            self.record_prefix(node_id, req.prompt_tokens,
+                               list(blocks)[:full_nb])
+
+    def _prefix_fetch_estimate(self, src: NodeHandle, dst: NodeHandle,
+                               hit_tokens: int) -> float:
+        """Latency of pulling a resident prefix src -> dst: ONE fused
+        descriptor-table dispatch, priced like any other KV transfer."""
+        profile = select_route(src.host_id == dst.host_id, self.target)
+        nbytes = self.model_cost.kv_bytes_per_token * hit_tokens
+        return profile.latency(num_calls=1, num_bytes=int(nbytes))
+
+    def _ttft_estimate(self, node: NodeHandle, req: Request,
+                       hit: Optional[int] = None) -> float:
         """Queued prefill work + this request's compute, on this node.
 
         Shared between routing (min-TTFT node pick) and the admission gate
         (predicted TTFT vs SLO) — both price the same queueing model from
         ``core.costmodel.predicted_ttft_s`` over the node's own hardware, so
         a weak card reports longer predicted TTFT for the same backlog.
+        ``hit`` overrides the prefix-reuse length (routing evaluates several
+        reuse plans per node); default = the node's own resident prefix.
         """
-        hit = min(self.prefix_index.match(node.node_id, req.prompt_tokens),
-                  max(0, req.prompt_len - 1))
+        if hit is None:
+            hit, _ = self.shareable_prefix(node.node_id, req)
         sched = node.scheduler
         backlog_tokens = sum(r.prompt_len for r in sched.prefill.waiting)
         backlog_tokens += sum(r.prompt_len for r in sched.prefill.running)
@@ -536,5 +667,12 @@ class GlobalController:
     def _log(self, kind: str, detail: str) -> None:
         self.events.append(ControllerEvent(self.cycle, kind, detail))
 
-    def record_prefix(self, node_id: int, tokens: Sequence[int]) -> None:
-        self.prefix_index.insert(node_id, tokens)
+    def record_prefix(self, node_id: int, tokens: Sequence[int],
+                      block_ids: Optional[Sequence[int]] = None) -> None:
+        """Advertise a prompt's KV as resident on a node.
+
+        ``block_ids`` (one per full block of ``tokens``) is what makes the
+        entry shareable; without it the entry only biases routing estimates
+        and the data plane never claims reuse from it.
+        """
+        self.prefix_index.insert(node_id, tokens, block_ids)

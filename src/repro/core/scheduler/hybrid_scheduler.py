@@ -98,6 +98,16 @@ class HybridScheduler:
         self.on_spill: Optional[Callable[[Request], None]] = None
         self.on_resume: Optional[Callable[[Request], None]] = None
         self.on_discard: Optional[Callable[[Request], None]] = None
+        # -- prefix-cache hook ------------------------------------------------------
+        # Called at waiting-queue admission for requests that hold no blocks
+        # yet. The runtime re-validates the request's prompt against the live
+        # prefix index for THIS node, re-stamps
+        # ``req.num_cached_prefix_tokens`` with the reuse actually available,
+        # and returns the shareable full-prefix block ids (possibly empty).
+        # When the hook is None the stamp is zeroed at admission: a routing
+        # estimate must never bill compute the engine cannot actually skip
+        # (the phantom-hit bug this replaces).
+        self.resolve_prefix: Optional[Callable[[Request], List[int]]] = None
 
     # -- queue entry points (called by the controller / engine) -----------------
     def enqueue_prefill(self, req: Request) -> None:
@@ -207,16 +217,48 @@ class HybridScheduler:
             budget -= chunk
         while self.prefill.waiting and budget > 0 and len(self.prefill.running) < self.max_running:
             req = self.prefill.waiting[0]
+            owned = self.bm.owns(req.request_id)
+            prefix_blocks: List[int] = []
+            if owned:
+                # a remote prefix fetch already landed this request's prefix
+                # blocks; top the table up to the full prompt below and keep
+                # the fetch-time ``num_cached_prefix_tokens`` stamp
+                extra = self.bm.blocks_needed(req.prompt_len + 1) \
+                    - len(self.bm.get(req.request_id))
+                if extra > self.bm.num_free:
+                    break   # KV pool full — leave in waiting
+            else:
+                if self.resolve_prefix is not None:
+                    if req.prefix_src_node is not None and \
+                            req.prefix_src_node != self.node_id:
+                        # pending REMOTE fetch (e.g. destination pool was
+                        # momentarily full): the runtime's fetch pass owns
+                        # this request — re-stamping it local here would
+                        # silently abandon the priced plan. Wait, like any
+                        # other blocks-not-ready head-of-line case.
+                        break
+                    # re-validate the hit against the LIVE index and share
+                    # those very blocks; re-stamps num_cached_prefix_tokens
+                    prefix_blocks = list(self.resolve_prefix(req))
+                else:
+                    req.num_cached_prefix_tokens = 0
+                if not self.bm.can_allocate(req.prompt_len + 1,
+                                            shared_blocks=len(prefix_blocks)):
+                    break   # KV pool full — leave in waiting
             new_tokens = req.prompt_len - req.num_cached_prefix_tokens
-            if not self.bm.owns(req.request_id) and not self.bm.can_allocate(req.prompt_len + 1):
-                break   # KV pool full — leave in waiting
             chunk = min(new_tokens, budget) if self.chunked_prefill else new_tokens
             if chunk < new_tokens and not self.chunked_prefill:
                 break
             self.prefill.waiting.popleft()
-            if not self.bm.owns(req.request_id):
-                # +1: prefill also writes the first generated token's KV
-                req.block_ids = self.bm.allocate(req.request_id, req.prompt_len + 1)
+            if owned:
+                self.bm.ensure_capacity(req.request_id, req.prompt_len + 1)
+                req.block_ids = self.bm.get(req.request_id)
+            else:
+                # +1: prefill also writes the first generated token's KV;
+                # the matched prefix's blocks are SHARED (ref-counted), only
+                # the suffix draws fresh blocks
+                req.block_ids = self.bm.allocate(req.request_id, req.prompt_len + 1,
+                                                 prefix_blocks=prefix_blocks)
             self._admit_prefill(req, chunk, decision)
             budget -= chunk
         self.last_token_budget_used = decision.num_prefill_tokens / max(1, self.max_batch_tokens)

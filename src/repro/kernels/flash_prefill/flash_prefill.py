@@ -29,7 +29,7 @@ NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, q_blk: int, k_blk: int, causal: bool):
+            *, q_blk: int, k_blk: int, causal: bool, q_offset: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -40,7 +40,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q_start = qi * q_blk
+    # q_offset > 0 = suffix mode (prefix-cache reuse): query row i sits at
+    # global position q_offset + i while keys cover the whole [0, T) range,
+    # so the causal frontier — and the chunk-skip test — shift by q_offset.
+    q_start = qi * q_blk + q_offset
     k_start = ki * k_blk
     run = (k_start <= q_start + q_blk - 1) if causal else (ki >= 0)
 
@@ -77,21 +80,36 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, q_blk: int = 128, k_blk: int = 128,
-                  interpret: bool = True) -> jax.Array:
-    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). S divisible by blocks."""
+                  q_offset: int = 0, interpret: bool = True) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,T,KV,hd) -> (B,S,H,hd). S/T divisible by blocks.
+
+    T == S with ``q_offset=0`` is ordinary causal prefill. T > S with
+    ``q_offset = T - S`` is SUFFIX prefill (prefix-cache reuse): the first
+    ``q_offset`` keys are a resident cached prefix and queries are the
+    uncached tail — the kernel computes exactly rows ``q_offset..T`` of the
+    full-sequence result, skipping the prefix rows' compute entirely.
+    """
     b, s, h, hd = q.shape
+    t = k.shape[1]
     kvh = k.shape[2]
     g = h // kvh
+    if causal:
+        # keys may extend past the query horizon (tile padding): causality
+        # masks them for every real row
+        assert t >= s + q_offset, "keys must cover prefix (q_offset) + queries"
+    else:
+        assert t == s and q_offset == 0, "q_offset is causal-only"
     q_blk = min(q_blk, s)
-    k_blk = min(k_blk, s)
-    assert s % q_blk == 0 and s % k_blk == 0, "pad S to block multiples"
-    nq, nk = s // q_blk, s // k_blk
+    k_blk = min(k_blk, t)
+    assert s % q_blk == 0 and t % k_blk == 0, "pad S/T to block multiples"
+    nq, nk = s // q_blk, t // k_blk
     # layout: (B, KV, S, G, hd) for q/o; (B, KV, S, hd) for k/v
     qr = jnp.transpose(q.reshape(b, s, kvh, g, hd), (0, 2, 1, 3, 4))
     kr = jnp.transpose(k, (0, 2, 1, 3))
     vr = jnp.transpose(v, (0, 2, 1, 3))
 
-    kernel = functools.partial(_kernel, q_blk=q_blk, k_blk=k_blk, causal=causal)
+    kernel = functools.partial(_kernel, q_blk=q_blk, k_blk=k_blk, causal=causal,
+                               q_offset=q_offset)
     out = pl.pallas_call(
         kernel,
         grid=(b, kvh, nq, nk),

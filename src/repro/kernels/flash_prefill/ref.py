@@ -6,16 +6,22 @@ import jax.numpy as jnp
 
 
 def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                      *, causal: bool = True) -> jax.Array:
-    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Direct softmax attention."""
+                      *, causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,T,KV,hd) -> (B,S,H,hd). Direct softmax attention.
+
+    ``q_offset`` (suffix mode): query row i sits at global position
+    ``q_offset + i`` over keys 0..T — the prefix-reuse oracle.
+    """
     b, s, h, hd = q.shape
+    t = k.shape[1]
     kv = k.shape[2]
     g = h // kv
     qg = q.reshape(b, s, kv, g, hd)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
     scores = scores / jnp.sqrt(hd)
     if causal:
-        mask = jnp.tril(jnp.ones((s, s), bool))
+        qpos = q_offset + jnp.arange(s)[:, None]
+        mask = jnp.arange(t)[None, :] <= qpos
         scores = jnp.where(mask[None, None, None], scores, jnp.finfo(jnp.float32).min)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)

@@ -42,6 +42,12 @@ class Model:
     # -> (logits, updated pool). Only the paged transformer families have one;
     # None means the engine must use the dense ``decode`` bridge.
     decode_paged: Optional[Callable[..., Tuple[jax.Array, jax.Array]]] = None
+    # Suffix-only prefill for prefix-cache hits: (params, batch, prefix_k,
+    # prefix_v) -> (logits, suffix-only cache), where prefix_k/v
+    # (L, B, C, KV, hd) are the resident prefix's K/V. None means a hit
+    # cannot skip compute on this family (state caches, windowed attention)
+    # and the engine must run the full prefill.
+    prefill_suffix: Optional[Callable[..., Tuple[jax.Array, Dict[str, Any]]]] = None
 
 
 def get_model(cfg: ModelConfig) -> Model:
@@ -75,6 +81,11 @@ def _transformer_model(cfg: ModelConfig) -> Model:
         decode_paged=None if cfg.attn_window > 0 else (
             lambda p, tok, pool, bt, lens: transformer.decode_step_paged(
                 p, cfg, tok, pool, bt, lens)),
+        # windowed configs recompute from scratch rather than risking a
+        # numerically different local-attention path on the warm side
+        prefill_suffix=None if cfg.attn_window > 0 else (
+            lambda p, b, pk, pv: transformer.prefill_suffix(
+                p, cfg, b["tokens"], pk, pv)),
     )
 
 

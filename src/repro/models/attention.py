@@ -132,6 +132,38 @@ def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     return out_project(p, out), (k, v)
 
 
+def suffix_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                     positions: jax.Array, prefix_k: jax.Array,
+                     prefix_v: jax.Array, window: int = 0
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Suffix-only prefill attention over a resident prefix (prefix-cache hit).
+
+    x (B, S_suf, D) are the UNCACHED prompt tokens; prefix_k/v (B, C, KV, hd)
+    are the matched prefix's cached K/V (already RoPE'd at positions 0..C);
+    ``positions`` must be the suffix's global positions (C + arange(S_suf)).
+    Computes exactly the rows C..C+S_suf of full-prompt attention — same
+    flash/dense dispatch policy as :func:`self_attention` keyed on the TOTAL
+    length, so warm and cold prefill take the same numeric path and outputs
+    stay bit-identical. Returns (out (B,S_suf,D), (k, v)) with k/v covering
+    ONLY the suffix (the caller writes just those tokens' pages).
+    """
+    from repro.models.flash import flash_attention  # local import: avoid cycle
+
+    q, k, v = qkv_project(p, x, cfg, positions)
+    k_full = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+    s, t = x.shape[1], k_full.shape[1]
+    offset = prefix_k.shape[1]
+    if window > 0 or t > cfg.flash_threshold:
+        out = flash_attention(q, k_full, v_full, causal=True, window=window,
+                              q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+                              q_offset=offset, wedge=cfg.attn_wedge)
+    else:
+        mask = causal_mask(s, t, offset, window)[None, None, None]
+        out = attend(q, k_full, v_full, mask)
+    return out_project(p, out), (k, v)
+
+
 def decode_self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
                           cache_k: jax.Array, cache_v: jax.Array,
                           position: jax.Array, window: int = 0

@@ -185,6 +185,45 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits, {"k": ks, "v": vs, "length": length}
 
 
+def prefill_suffix(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   prefix_k: jax.Array, prefix_v: jax.Array
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Suffix-only prefill over a resident prefix (prefix-cache hit).
+
+    tokens (B, S_suf) are the prompt tokens AFTER the cached prefix;
+    prefix_k/v (L, B, C, KV, hd) are the prefix's cached K/V exactly as a
+    cold :func:`prefill` would have produced them (read back from the paged
+    pool). Computes rows C..C+S_suf of the full forward — attention per
+    layer runs over [prefix KV ++ suffix KV] with the suffix positions
+    offset by C — so last-position logits and the returned suffix cache are
+    bit-identical to the cold path's, at ``S_suf/S_total`` of the compute.
+
+    Returns (logits (B, V) fp32, cache with k/v covering ONLY the suffix).
+    """
+    x = _input_embeds(params, cfg, tokens, None)
+    c = prefix_k.shape[2]
+    positions = c + jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, inputs):
+        h, aux = carry
+        lp, pk, pv = inputs
+        hn = rms_norm(h, lp["norm_attn"], cfg.norm_eps)
+        attn_out, (k, v) = A.suffix_attention(lp, hn, cfg, positions, pk, pv,
+                                              cfg.attn_window)
+        h = h + attn_out
+        hn = rms_norm(h, lp["norm_mlp"], cfg.norm_eps)
+        ffn_out, aux_i = _ffn(lp, hn, cfg)
+        return (h + ffn_out, aux + aux_i), (k, v)
+
+    (x, _), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], prefix_k, prefix_v))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed", params["embed"]))[:, 0]
+    length = jnp.full((tokens.shape[0],), c + ks.shape[2], jnp.int32)
+    return logits, {"k": ks, "v": vs, "length": length}
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict[str, jax.Array]:
     dtype = dtype or cfg.dtype
     shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)

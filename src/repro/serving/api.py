@@ -138,6 +138,11 @@ class RequestHandle:
             "decode_node": self._req.decode_node,
             "decode_steps": self._req.decode_steps,
             "decode_dispatches": self._req.decode_dispatches,
+            # prefix reuse: prompt tokens the engine did NOT recompute, and
+            # the fused dispatches a remote prefix fetch cost (0 = local hit
+            # or cold prefill)
+            "num_cached_prefix_tokens": self._req.num_cached_prefix_tokens,
+            "prefix_fetch_dispatches": self._req.prefix_fetch_dispatches,
             "retries": self._req.retries,
             "retry_after_s": self._req.retry_after,
             "reject_reason": self._req.reject_reason,

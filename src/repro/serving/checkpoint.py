@@ -71,6 +71,9 @@ def request_to_dict(r: Request) -> dict:
         "retries": r.retries,
         "retry_after": r.retry_after,
         "reject_reason": r.reject_reason,
+        "num_cached_prefix_tokens": int(r.num_cached_prefix_tokens),
+        "prefix_src_node": r.prefix_src_node,
+        "prefix_block_ids": [int(b) for b in r.prefix_block_ids],
     }
 
 
@@ -86,6 +89,9 @@ def request_from_dict(d: dict) -> Request:
     r.retries = d["retries"]
     r.retry_after = d.get("retry_after")
     r.reject_reason = d.get("reject_reason")
+    r.num_cached_prefix_tokens = int(d.get("num_cached_prefix_tokens", 0))
+    r.prefix_src_node = d.get("prefix_src_node")
+    r.prefix_block_ids = list(d.get("prefix_block_ids", []))
     return r
 
 
@@ -171,10 +177,24 @@ def load_cluster(cluster, path: str) -> dict:
         sched.prefill.sending.clear(); sched.prefill.swapped.clear()
         sched.decode.running.clear(); sched.decode.swapped.clear()
         bm = sched.bm
-        # rebuild the block table exactly (allocate the recorded ids)
+        # the checkpoint is authoritative: release every live allocation
+        # THROUGH the allocator first (a used cluster's post-save tables
+        # would otherwise strand blocks as allocated-forever, or alias
+        # since-freed blocks between a restored table and a new request),
+        # then rebuild table + refcounts from the snapshot (a block in k
+        # tables is a prefix shared k ways, matching check_invariants)
+        bm.release_all()
+        # the snapshot carries no prefix-index state: residency recorded
+        # for this node — before OR since the save — now names blocks whose
+        # contents the restore just rewrote. Evict rather than advertise
+        # another request's KV; entries repopulate as restored traffic
+        # finishes prefill.
+        if getattr(cluster, "controller", None) is not None:
+            cluster.controller.prefix_index.evict_node(nid)
         for rid_s, blocks in node["block_table"].items():
             bm._table[int(rid_s)] = list(blocks)
             for b in blocks:
+                bm._refcount[b] = bm._refcount.get(b, 0) + 1
                 if isinstance(bm.allocator.__dict__.get("_free"), list):
                     try:
                         bm.allocator._free.remove(b)

@@ -21,7 +21,7 @@ from repro.core.scheduler.global_controller import (AdmissionDecision,
                                                     AdmissionPolicy,
                                                     GlobalController, ModelCost,
                                                     NodeHandle)
-from repro.core.transfer import backend_for_engine
+from repro.core.transfer import TransferEngine, backend_for_engine
 from repro.models.common import ModelConfig
 from repro.serving.engine import NodeEngine
 from repro.serving.request import Request, RequestState
@@ -36,6 +36,7 @@ class TransferRecord:
     num_bytes: int
     est_latency_s: float
     num_dispatches: int = 0
+    kind: str = "kv"            # "kv" (P->D cache move) | "prefix_fetch"
 
 
 class PDCluster:
@@ -47,10 +48,16 @@ class PDCluster:
                  target: str = "tpu",
                  max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
                  role_flip: bool = False, paged_decode: str = "auto",
-                 admission: Optional[AdmissionPolicy] = None):
+                 admission: Optional[AdmissionPolicy] = None,
+                 prefix_reuse: bool = True):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
+        # prefix_reuse=False disables the reuse DATA PLANE (no recording, no
+        # sharing, no fetches) — the A/B switch the token-identity tests and
+        # benchmarks/prefix_reuse.py flip. Invalidation stays wired either
+        # way; an empty index just never matches.
+        self.prefix_reuse = prefix_reuse
         self.engines: Dict[int, NodeEngine] = {}
         model_cost = ModelCost(
             flops_per_token=2.0 * cfg.active_params(),
@@ -79,9 +86,26 @@ class PDCluster:
             # node or a {node_id: profile} map (missing ids get TPU_V5E)
             hw = hardware.get(i, TPU_V5E) if isinstance(hardware, dict) \
                 else hardware
+            reuse = prefix_reuse and engine.supports_prefix_reuse
             self.controller.register_node(NodeHandle(
                 node_id=i, role=role, host_id=host, hardware=hw,
-                scheduler=engine.scheduler))
+                scheduler=engine.scheduler, supports_prefix_reuse=reuse))
+            # residency honesty: ANY path that physically frees blocks
+            # (transfer done, decode finish, cancel, preemption, teardown)
+            # drops the freed blocks' index entries on this node
+            engine.scheduler.bm.on_free = \
+                (lambda blocks, nid=i:
+                 self.controller.prefix_index.invalidate_blocks(nid, blocks))
+            if reuse:
+                engine.scheduler.resolve_prefix = self._make_resolver(engine)
+
+    def _make_resolver(self, engine: NodeEngine):
+        """Admission-time prefix resolution for one node (scheduler hook):
+        the shared controller helper re-validates the routing-time stamp
+        against the LIVE index and this node's block liveness."""
+        nid, bm = engine.node_id, engine.scheduler.bm
+        return lambda req: self.controller.resolve_local_prefix(
+            nid, req, bm.block_alive)
 
     # -- request entry ------------------------------------------------------------
     def submit(self, req: Request) -> AdmissionDecision:
@@ -119,6 +143,8 @@ class PDCluster:
             req.transfer_calls = req.transfer_dispatches = 0
             src.scheduler.sending_done(req, free=False)
             dst.scheduler.enqueue_decode(req)
+            self._rehome_prefix(req, src.node_id,
+                                src.scheduler.bm.get(req.request_id))
             return
         profile = select_route(
             self.controller.nodes[src.node_id].host_id ==
@@ -133,8 +159,74 @@ class PDCluster:
         req.transfer_end = self.clock + latency
         req.transfer_calls = job.num_calls
         req.transfer_dispatches = job.num_dispatches
+        # The prompt's KV now lives on the DECODE node; sending_done below
+        # frees the prefill-side blocks (and invalidates their entries), so
+        # the index entry is re-homed to where the KV actually is.
+        self._rehome_prefix(req, dst.node_id, list(job.dst_blocks))
         src.scheduler.sending_done(req)
         dst.scheduler.enqueue_decode(req)
+
+    def _rehome_prefix(self, req: Request, node_id: int,
+                       blocks: List[int]) -> None:
+        """Advertise a prompt's full-block prefix as resident on ``node_id``."""
+        if self.prefix_reuse:
+            self.controller.rehome_prefix(req, node_id, blocks)
+
+    # -- the prefix fetch (remote resident prefix -> local pool) ---------------------
+    def _fetch_pending_prefixes(self, engine: NodeEngine) -> None:
+        """Execute the remote-prefix plan for this node's next admission.
+
+        Runs each cycle BEFORE the node schedules, so a fetched prefix is in
+        the pool by the time admission shares it into the block table. Only
+        the HEAD of the waiting queue fetches — admission is head-of-line,
+        and letting queue-tail requests grab prefix blocks early could
+        starve a large head request of the free blocks it needs to ever
+        admit (fetched blocks only free on admission progress)."""
+        if not engine.scheduler.prefill.waiting:
+            return
+        req = engine.scheduler.prefill.waiting[0]
+        src = req.prefix_src_node
+        if src is None or src == engine.node_id or \
+                engine.scheduler.bm.owns(req.request_id):
+            return
+        self._fetch_prefix(engine, req)
+
+    def _fetch_prefix(self, engine: NodeEngine, req: Request) -> None:
+        """Pull a remote resident prefix into this node's pool as ONE fused
+        descriptor-table dispatch (the same data plane as a P->D transfer),
+        priced by ``core.costmodel``. On any staleness — source died, blocks
+        freed, pool full — the plan degrades to recompute (stamp cleared;
+        admission re-resolves locally)."""
+        src_id = req.prefix_src_node
+        hit = req.num_cached_prefix_tokens
+        src = self.engines.get(src_id)
+        if src is None or src_id in self._dead:
+            # runtime knows the engine is gone before the controller's
+            # heartbeat scan does — clear the plan (recompute)
+            req.clear_prefix_plan()
+            return
+        if not self.controller.validate_prefix_plan(req):
+            return   # stale plan cleared by the shared validator
+        bm = engine.scheduler.bm
+        if not bm.can_allocate(hit):
+            return   # destination pool full — retry next cycle
+        dst_blocks = bm.allocate(req.request_id, hit)
+        engine_t = TransferEngine(src.kv.spec, engine.kv.spec)
+        plan = engine_t.planner.plan(self.transfer_schedule,
+                                     req.prefix_block_ids, dst_blocks)
+        engine.kv.import_plan(engine_t, plan, src.kv.pool)
+        profile = select_route(
+            self.controller.nodes[src_id].host_id ==
+            self.controller.nodes[engine.node_id].host_id, self.target)
+        self.transfers.append(TransferRecord(
+            req.request_id, plan.schedule, plan.num_calls, plan.total_bytes,
+            plan.latency(profile), plan.num_dispatches, kind="prefix_fetch"))
+        req.prefix_fetch_dispatches = plan.num_dispatches
+        # the fetched copy is itself resident, shareable KV on this node
+        self.controller.record_prefix(engine.node_id,
+                                      req.prompt_tokens[:hit], dst_blocks)
+        req.prefix_src_node = engine.node_id
+        req.prefix_block_ids = dst_blocks
 
     # -- main loop -------------------------------------------------------------------
     def step(self) -> None:
@@ -144,13 +236,17 @@ class PDCluster:
             if nid in self._dead or not self.controller.nodes[nid].alive:
                 continue
             self.controller.heartbeat(nid, self.clock)
+            if self.prefix_reuse and engine.supports_prefix_reuse:
+                self._fetch_pending_prefixes(engine)
             # engine stamps prefill_start / first_token_time (the first token
             # is emitted by prefill itself, not by the transfer)
             pre_done, finished = engine.step(now=self.clock)
             for req in pre_done:
                 req.prefill_end = self.clock
                 engine.scheduler.mark_sending(req)
-                self.controller.record_prefix(nid, req.prompt_tokens)
+                # NOTE: the prefix is recorded where the KV ends up (see
+                # _rehome_prefix), not here — these blocks free the moment
+                # the transfer below completes
             # drain sending queue (transfer is synchronous at this scale)
             for req in list(engine.scheduler.prefill.sending):
                 self._transfer(req)
@@ -216,18 +312,28 @@ class PDCluster:
         return cluster_state(self)
 
     def stats(self) -> Dict[str, float]:
-        lat = [t.est_latency_s for t in self.transfers]
-        calls = [t.num_calls for t in self.transfers]
-        disp = [t.num_dispatches for t in self.transfers]
+        kv_xfers = [t for t in self.transfers if t.kind == "kv"]
+        lat = [t.est_latency_s for t in kv_xfers]
+        calls = [t.num_calls for t in kv_xfers]
+        disp = [t.num_dispatches for t in kv_xfers]
         ttfts = [t for t in (r.ttft() for r in self.finished) if t is not None]
         d_steps = sum(e.decode_steps for e in self.engines.values())
         d_disp = sum(e.decode_dispatches for e in self.engines.values())
         return {
+            # prefix-reuse data plane: compute the cluster actually ran vs
+            # skipped, and how the hits were sourced
+            "prefill_tokens_computed": sum(
+                e.prefill_tokens_computed for e in self.engines.values()),
+            "prefix_hits": sum(e.prefix_hits for e in self.engines.values()),
+            "prefix_tokens_reused": sum(
+                e.prefix_tokens_reused for e in self.engines.values()),
+            "prefix_fetches": sum(
+                1 for t in self.transfers if t.kind == "prefix_fetch"),
             "finished": len(self.finished),
             "cancelled": len(self.cancelled),
             "rejected": len(self.rejected),
             "deferred": len(self.controller.deferred),
-            "transfers": len(self.transfers),
+            "transfers": len(kv_xfers),
             "mean_transfer_s": sum(lat) / len(lat) if lat else 0.0,
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,
             "mean_transfer_dispatches": sum(disp) / len(disp) if disp else 0.0,

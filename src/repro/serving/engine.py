@@ -127,6 +127,15 @@ class NodeEngine:
         self.decode_steps = 0          # decode cycles executed
         self.decode_dispatches = 0     # device dispatches those cycles issued
         self._decode_cache_keys: Set[Tuple[int, int]] = set()   # jit buckets seen
+        # -- prefix-reuse data plane ---------------------------------------------------
+        # A prefix-cache hit only skips work on the paged path with a
+        # suffix-capable model (windowed attention and state families
+        # recompute); the runtime consults this before wiring the node into
+        # the reuse plane (resolver hook + index recording).
+        self.supports_prefix_reuse = self.paged and self.model.prefill_suffix is not None
+        self.prefill_tokens_computed = 0   # prompt tokens actually forwarded
+        self.prefix_hits = 0               # prefills that reused a resident prefix
+        self.prefix_tokens_reused = 0      # prompt tokens NOT recomputed
 
     @property
     def decode_compile_variants(self) -> int:
@@ -146,17 +155,39 @@ class NodeEngine:
         for req in decision.prefill_batch:   # simple per-request prefill (no padding waste)
             if now is not None and req.prefill_start is None:
                 req.prefill_start = now
-            tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
-            logits, cache = self.model.prefill(self.params, {"tokens": tokens})
-            first = int(jnp.argmax(logits[0]))
-            req.output_tokens.append(first)
-            if self.paged:
-                k = cache["k"][:, 0]
-                v = cache["v"][:, 0]
-                self.kv.write_prefill(req.request_id, k, v, req.prompt_len)
+            cached = req.num_cached_prefix_tokens if self.supports_prefix_reuse else 0
+            if cached > 0:
+                # Prefix-cache hit: the matched prefix's blocks are already
+                # in this request's table (shared ref-counted, or landed by
+                # a remote fetch). Forward ONLY prompt[cached:], attending
+                # over the resident prefix KV, and write only the suffix
+                # pages — the hit skips real compute, not just accounting.
+                k_pre, v_pre = self.kv.gather_prefix(req.request_id, cached)
+                tokens = jnp.asarray([req.prompt_tokens[cached:]], jnp.int32)
+                logits, cache = self.model.prefill_suffix(
+                    self.params, {"tokens": tokens},
+                    k_pre[:, None], v_pre[:, None])
+                self.kv.write_prefill(req.request_id, cache["k"][:, 0],
+                                      cache["v"][:, 0],
+                                      req.prompt_len - cached, start=cached)
+                self.prefix_hits += 1
+                self.prefix_tokens_reused += cached
             else:
-                self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
-            if self.scheduler.prefill_progressed(req, req.prompt_len):
+                tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
+                logits, cache = self.model.prefill(self.params, {"tokens": tokens})
+                if self.paged:
+                    self.kv.write_prefill(req.request_id, cache["k"][:, 0],
+                                          cache["v"][:, 0], req.prompt_len)
+                else:
+                    self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
+            req.output_tokens.append(int(jnp.argmax(logits[0])))
+            executed = req.prompt_len - cached
+            self.prefill_tokens_computed += executed
+            # report ONLY the tokens this cycle actually forwarded:
+            # prefill_progressed seeds progress at num_cached_prefix_tokens,
+            # so reporting prompt_len here double-counted the hit and let the
+            # chunked-prefill budget diverge from executed work
+            if self.scheduler.prefill_progressed(req, executed):
                 if now is not None and req.first_token_time is None:
                     req.first_token_time = now
                 done.append(req)

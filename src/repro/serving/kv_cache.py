@@ -19,7 +19,7 @@ to show the O(batch) -> O(1) collapse.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,15 +54,22 @@ class PagedKVCache:
 
     # -- write path -------------------------------------------------------------
     def write_prefill(self, request_id: int, k: jax.Array, v: jax.Array,
-                      length: int) -> List[int]:
+                      length: int, start: int = 0) -> List[int]:
         """Store a request's prefill KV. k/v: (L, S, KV, hd), S >= length.
 
         Blocks must already be allocated (scheduler does it at admission).
         K and V land in ONE pool update (whole blocks, all layers), not one
         per cache half.
+
+        ``start`` (block-aligned) writes a SUFFIX: k/v cover tokens
+        ``start..start+length`` and land in the table's blocks after the
+        shared prefix — a prefix-cache hit writes only the tokens it
+        actually computed, never touching the shared (read-only) blocks.
         """
         spec = self.spec
-        blocks = self.bm.get(request_id)
+        assert start % spec.block_size == 0, "suffix writes are block-aligned"
+        first = start // spec.block_size
+        blocks = self.bm.get(request_id)[first:]
         nb = spec.blocks_for_tokens(length)
         assert nb <= len(blocks), (nb, len(blocks))
         pad = nb * spec.block_size - length
@@ -128,11 +135,22 @@ class PagedKVCache:
             out[i, :len(t)] = t
         return out
 
-    def gather_dense(self, request_id: int, max_len: int
+    def gather_prefix(self, request_id: int, length: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Dense K/V of a request's first ``length`` tokens — reads ONLY the
+        blocks holding them (the shared prefix of a cache hit), so fresh
+        suffix blocks full of garbage are never touched."""
+        nb = self.spec.blocks_for_tokens(length)
+        return self.gather_dense(request_id, length, num_blocks=nb)
+
+    def gather_dense(self, request_id: int, max_len: int,
+                     num_blocks: Optional[int] = None
                      ) -> Tuple[jax.Array, jax.Array]:
         """Rebuild (L, max_len, KV, hd) dense K/V from pages (reference path)."""
         spec = self.spec
         blocks = self.bm.get(request_id)
+        if num_blocks is not None:
+            blocks = blocks[:num_blocks]
         idx = jnp.asarray(blocks, jnp.int32)
         pages = jnp.take(self.pool, idx, axis=0)          # (nb, L, 2, payload)
         self.num_pool_dispatches += 1

@@ -3,70 +3,182 @@ cache prefix matches to boost throughput and reduce KV Cache transfer
 latency").
 
 Prefixes are tracked at block granularity: a chain of rolling hashes, one per
-full block of tokens, per node. The controller queries the index when routing
-a prefill request; a hit lets the target node skip recomputing the matched
-prefix (``Request.num_cached_prefix_tokens``).
+full block of tokens, per node. Each entry also records the *physical block
+id* holding that block's KV on the node, which is what makes a hit actionable:
+the scheduler shares those very blocks (ref-counted) into the new request's
+block table, or the runtime pulls them from a remote node as one fused
+descriptor-table transfer (see ``serving/cluster.py``).
+
+Honesty rules (the three phantom-hit bugs this module used to have):
+
+* **Stable hashing** — the chain uses ``blake2b`` over the rolling digest and
+  the block's token ids, NOT Python's per-process-salted builtin ``hash()``,
+  so index state means the same thing across processes and checkpoint
+  restores (``PYTHONHASHSEED``-independent, tested).
+* **Residency is block-backed** — an entry only advertises KV that a live
+  block holds. ``invalidate_blocks`` is called from every block-free path
+  (``BlockManager.on_free``): transfer-done frees, decode finish, cancel,
+  preemption spill, node release. A block shared by several requests only
+  frees (and only invalidates) when its refcount reaches zero.
+* **Re-homing** — after a P->D transfer the KV lives on the decode node, so
+  the runtime re-inserts the entry there with the destination block ids and
+  the source-side entry dies with the source blocks.
+
+Entries inserted without block ids (``block_ids=None``) still *match* — they
+support routing-signal-only callers and tests — but ``lookup`` reports no
+shareable blocks for them, so the data plane never pretends to reuse KV it
+cannot address.
 """
 from __future__ import annotations
 
-import collections
-from typing import Dict, List, Sequence, Tuple
+import dataclasses
+import hashlib
+import struct
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 
-def _block_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
-    """Rolling per-block hash chain: hash(i) covers tokens[0 : (i+1)*block)."""
-    hashes: List[int] = []
-    h = 0
-    for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
-        h = hash((h, tuple(tokens[i:i + block_size])))
+def _block_hashes(tokens: Sequence[int], block_size: int) -> List[bytes]:
+    """Rolling per-block digest chain: hash(i) covers tokens[0 : (i+1)*block).
+
+    ``blake2b`` over (previous digest, token ids) — deterministic across
+    processes and Python versions (no interpreter hash salt).
+    """
+    hashes: List[bytes] = []
+    h = b"\x00" * 16
+    n_full = len(tokens) - len(tokens) % block_size
+    for i in range(0, n_full, block_size):
+        m = hashlib.blake2b(h, digest_size=16)
+        m.update(struct.pack(f"<{block_size}q", *tokens[i:i + block_size]))
+        h = m.digest()
         hashes.append(h)
     return hashes
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """A node's longest resident prefix for a prompt.
+
+    ``num_tokens`` counts every matched full block; ``block_ids`` holds the
+    physical block per matched block *when known* — a shorter (or empty)
+    ``block_ids`` than ``num_tokens/block_size`` means the tail of the match
+    came from entries without block backing and is NOT shareable.
+    """
+
+    num_tokens: int = 0
+    block_ids: List[int] = dataclasses.field(default_factory=list)
 
 
 class PrefixCacheIndex:
     def __init__(self, block_size: int):
         self.block_size = block_size
-        # node_id -> set of block-chain hashes resident on that node
-        self._node_hashes: Dict[int, set[int]] = collections.defaultdict(set)
-        # hash -> ref count across nodes (for stats)
-        self._refcount: collections.Counter = collections.Counter()
+        # node_id -> {chain digest -> physical block id or None (unbacked)}
+        self._node_hashes: Dict[int, Dict[bytes, Optional[int]]] = {}
+        # node_id -> {physical block id -> chain digest} (invalidation path)
+        self._node_blocks: Dict[int, Dict[int, bytes]] = {}
+
+    @property
+    def has_entries(self) -> bool:
+        """True when ANY node advertises residency — routers check this
+        before paying a full-prompt hashing pass that can only miss."""
+        return any(self._node_hashes.values())
+
+    def chain(self, tokens: Sequence[int]) -> List[bytes]:
+        """The prompt's digest chain — compute ONCE per routing decision and
+        pass to ``lookup``/``best_nodes``: routing probes every node, and
+        re-hashing the whole prompt per probe is pure waste."""
+        return _block_hashes(tokens, self.block_size)
 
     # -- updates ------------------------------------------------------------------
-    def insert(self, node_id: int, tokens: Sequence[int]) -> None:
-        for h in _block_hashes(tokens, self.block_size):
-            if h not in self._node_hashes[node_id]:
-                self._node_hashes[node_id].add(h)
-                self._refcount[h] += 1
+    def insert(self, node_id: int, tokens: Sequence[int],
+               block_ids: Optional[Sequence[int]] = None) -> None:
+        """Record ``tokens``'s full-block prefix chain as resident on a node.
+
+        ``block_ids[i]`` is the physical block holding chain position ``i``;
+        when given it must cover at least every full block of ``tokens``.
+        Re-inserting an existing digest re-points it at the newest block (the
+        copy most recently written, i.e. the one that lives longest).
+        """
+        hashes = _block_hashes(tokens, self.block_size)
+        if block_ids is not None and len(block_ids) < len(hashes):
+            raise ValueError(
+                f"{len(hashes)} full blocks but only {len(block_ids)} block ids")
+        by_hash = self._node_hashes.setdefault(node_id, {})
+        by_block = self._node_blocks.setdefault(node_id, {})
+        for i, h in enumerate(hashes):
+            if block_ids is None:
+                # an unbacked insert must never disturb a backed entry's
+                # block mapping (it would orphan the invalidation path)
+                by_hash.setdefault(h, None)
+                continue
+            b = int(block_ids[i])
+            old = by_hash.get(h)
+            if old is not None and old != b:
+                by_block.pop(old, None)
+            by_hash[h] = b
+            by_block[b] = h
+
+    def invalidate_blocks(self, node_id: int, block_ids: Iterable[int]) -> None:
+        """Drop every entry whose backing block was freed (refcount zero).
+
+        Wired as ``BlockManager.on_free`` so release / cancel / preemption /
+        transfer-done / node teardown all stop advertising dead KV.
+        """
+        by_hash = self._node_hashes.get(node_id)
+        by_block = self._node_blocks.get(node_id)
+        if not by_block:
+            return
+        for b in block_ids:
+            h = by_block.pop(int(b), None)
+            if h is not None:
+                by_hash.pop(h, None)
 
     def evict_node(self, node_id: int) -> None:
-        for h in self._node_hashes.pop(node_id, set()):
-            self._refcount[h] -= 1
-            if self._refcount[h] <= 0:
-                del self._refcount[h]
+        self._node_hashes.pop(node_id, None)
+        self._node_blocks.pop(node_id, None)
 
     # -- queries ------------------------------------------------------------------
-    def match(self, node_id: int, tokens: Sequence[int]) -> int:
-        """Longest cached prefix (in tokens) resident on ``node_id``."""
+    def lookup(self, node_id: int, tokens: Sequence[int],
+               hashes: Optional[List[bytes]] = None) -> PrefixMatch:
+        """Longest resident prefix on ``node_id``, with its backing blocks.
+
+        ``block_ids`` stops at the first unbacked entry: only a contiguous
+        block-backed run is shareable by the data plane. ``hashes`` takes a
+        precomputed :meth:`chain` (routing probes many nodes per request).
+        Hit/miss rates are NOT counted here — speculative routing probes
+        would swamp them; the runtimes count real hits at execution time.
+        """
         resident = self._node_hashes.get(node_id)
         if not resident:
-            return 0
-        matched = 0
-        for h in _block_hashes(tokens, self.block_size):
-            if h in resident:
-                matched += self.block_size
-            else:
+            return PrefixMatch()
+        match = PrefixMatch()
+        blocks_ok = True
+        for h in (self.chain(tokens) if hashes is None else hashes):
+            if h not in resident:
                 break
-        return matched
+            match.num_tokens += self.block_size
+            b = resident[h]
+            if blocks_ok and b is not None:
+                match.block_ids.append(b)
+            else:
+                blocks_ok = False
+        return match
 
-    def best_nodes(self, tokens: Sequence[int]) -> List[Tuple[int, int]]:
+    def match(self, node_id: int, tokens: Sequence[int]) -> int:
+        """Longest cached prefix (in tokens) resident on ``node_id``."""
+        return self.lookup(node_id, tokens).num_tokens
+
+    def best_nodes(self, tokens: Sequence[int],
+                   hashes: Optional[List[bytes]] = None) -> List[Tuple[int, int]]:
         """(node_id, matched_tokens) sorted by match length, desc."""
-        out = [(nid, self.match(nid, tokens)) for nid in self._node_hashes]
+        hashes = self.chain(tokens) if hashes is None else hashes
+        out = [(nid, self.lookup(nid, tokens, hashes).num_tokens)
+               for nid in self._node_hashes]
         out.sort(key=lambda t: -t[1])
         return out
 
     def stats(self) -> Dict[str, int]:
         return {
             "nodes": len(self._node_hashes),
-            "unique_prefixes": len(self._refcount),
             "total_entries": sum(len(s) for s in self._node_hashes.values()),
+            "backed_entries": sum(len(s) for s in self._node_blocks.values()),
         }

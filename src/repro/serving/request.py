@@ -54,6 +54,18 @@ class Request:
     decode_node: Optional[int] = None
     block_ids: List[int] = dataclasses.field(default_factory=list)   # on current node
     num_cached_prefix_tokens: int = 0   # prefix-cache hit length (skipped compute)
+    # Winning prefix-reuse plan from routing: the node holding the matched
+    # blocks (== prefill_node for a local hit, another node for a remote
+    # fetch, None for recompute) and the matched block ids on that node.
+    # Local hits are RE-validated at admission against the live index;
+    # remote plans are executed by the runtime as one fused transfer.
+    prefix_src_node: Optional[int] = None
+    prefix_block_ids: List[int] = dataclasses.field(default_factory=list)
+    # Set when a remote prefix fetch actually ran (its cost shows in stats()).
+    prefix_fetch_dispatches: int = 0
+    # Memoized prompt digest chain (prompt is immutable): the controller
+    # hashes once per request instead of once per probe/retry cycle.
+    prefix_chain_cache: Optional[List[bytes]] = None
 
     # --- timing (set by engine / simulator clocks) ----------------------------
     prefill_start: Optional[float] = None
@@ -142,6 +154,14 @@ class Request:
             "num_dispatches": self.transfer_dispatches,
         }
 
+    def clear_prefix_plan(self) -> None:
+        """Degrade a routed prefix-reuse plan to recompute (staleness paths:
+        source died, blocks freed, fetch impossible). One helper so the
+        controller, cluster and simulator can never clear half a plan."""
+        self.num_cached_prefix_tokens = 0
+        self.prefix_src_node = None
+        self.prefix_block_ids = []
+
     def reset_for_retry(self) -> None:
         """Return the request to WAITING after a node failure (fault path)."""
         self.state = RequestState.WAITING
@@ -149,6 +169,8 @@ class Request:
         self.block_ids = []
         self.prefill_node = None
         self.decode_node = None
+        self.clear_prefix_plan()
+        self.prefix_fetch_dispatches = 0
         self.prefill_start = self.prefill_end = None
         self.transfer_start = self.transfer_end = None
         self.transfer_calls = self.transfer_dispatches = None

@@ -125,6 +125,7 @@ class SimNode:
         # both at 0 at the end of a run was STARVED by the routing policy)
         self.served_prefill = 0     # requests that ran a prefill chunk here
         self.served_decode = 0      # request-cycles decoded here
+        self.prefill_tokens_computed = 0   # prompt tokens actually priced
 
     # -- cost model ----------------------------------------------------------
     def prefill_duration(self, num_tokens: int) -> float:
@@ -144,7 +145,8 @@ class ClusterSim:
                  max_batch_tokens: int = 8192, tp: int = 1,
                  routing: Optional[str] = None,
                  role_flip: bool = False,
-                 admission: Optional[AdmissionPolicy] = None):
+                 admission: Optional[AdmissionPolicy] = None,
+                 prefix_reuse: Optional[bool] = None):
         self.cfg = cfg
         self.spec = system_spec(kind)
         self.kind = kind
@@ -191,13 +193,27 @@ class ClusterSim:
                 raise ValueError(
                     f"hw_nodes has {len(hw_nodes)} profiles for {len(roles)} nodes")
             roles = [(role, hw_nodes[i]) for i, (role, _) in enumerate(roles)]
+        # Prefix-reuse mirror of the real runtime (priced, virtual data
+        # plane). Default: only the FlowKV system under load-aware routing
+        # has a global prefix cache — baselines never claim hits.
+        if prefix_reuse is None:
+            prefix_reuse = self.spec.load_aware and self.routing == "load_aware"
+        self.prefix_reuse = prefix_reuse
         for i, (role, hw) in enumerate(roles):
             node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
                            max_batch_tokens)
             self.nodes[i] = node
             self.controller.register_node(NodeHandle(
                 node_id=i, role=role, host_id=0 if same_host else i,
-                hardware=hw, scheduler=node.scheduler))
+                hardware=hw, scheduler=node.scheduler,
+                supports_prefix_reuse=prefix_reuse))
+            # same residency honesty as the real cluster: physical frees
+            # drop the freed blocks' index entries
+            node.bm.on_free = \
+                (lambda blocks, nid=i:
+                 self.controller.prefix_index.invalidate_blocks(nid, blocks))
+            if prefix_reuse:
+                node.scheduler.resolve_prefix = self._make_resolver(node)
         if self.spec.colocated:
             for node in self.nodes.values():
                 node.scheduler.set_priority("both")
@@ -209,8 +225,19 @@ class ClusterSim:
         self.transfer_latencies: List[float] = []
         self.transfer_calls: List[int] = []
         self.transfer_dispatches: List[int] = []
+        self.prefix_hits = 0               # prefills that reused a prefix
+        self.prefix_tokens_reused = 0      # prompt tokens never priced
+        self.prefix_fetches = 0            # remote fetches executed
+        self.prefix_fetch_dispatches: List[int] = []
         self._poll_scheduled: Dict[int, bool] = {i: False for i in self.nodes}
         self._recheck_scheduled = False   # admission-recheck event in flight
+
+    def _make_resolver(self, node: SimNode):
+        """Admission-time prefix resolution: same shared controller helper
+        as PDCluster, so engine and sim semantics cannot drift."""
+        nid, bm = node.node_id, node.bm
+        return lambda req: self.controller.resolve_local_prefix(
+            nid, req, bm.block_alive)
 
     # -- routing ------------------------------------------------------------------
     def _route(self, req: Request) -> None:
@@ -278,6 +305,69 @@ class ClusterSim:
         node = self.nodes[node_id]
         self.eq.push(max(self.eq.now, node.busy_until), lambda: self._cycle(node_id))
 
+    # -- prefix fetch (mirrors PDCluster._fetch_prefix, priced) ----------------------
+    def _fetch_pending_prefixes(self, node: SimNode) -> None:
+        """Start the remote-prefix pull for this node's next admission.
+
+        Head-of-line only, like the real cluster: queue-tail fetches could
+        starve a large head request of free blocks. The request leaves the
+        waiting queue for the fetch's (priced) latency — exactly ONE
+        fused-dispatch plan per fetch, same descriptor tables as hardware —
+        and re-enters it when the blocks land, so admission can only share
+        a prefix that is actually resident."""
+        if not node.scheduler.prefill.waiting:
+            return
+        req = node.scheduler.prefill.waiting[0]
+        src_id = req.prefix_src_node
+        if src_id is None or src_id == node.node_id or \
+                node.bm.owns(req.request_id):
+            return
+        src = self.nodes.get(src_id)
+        hit = req.num_cached_prefix_tokens
+        if src is None:
+            req.clear_prefix_plan()
+            return
+        if not self.controller.validate_prefix_plan(req):
+            return   # stale plan cleared by the shared validator
+        if not node.bm.can_allocate(hit):
+            return   # destination pool full — retry next cycle
+        dst_blocks = node.bm.allocate(req.request_id, hit)
+        plan = src.planner.plan(self.spec.schedule,
+                                req.prefix_block_ids, dst_blocks)
+        profile = (self.spec.transfer_intra if self.same_host
+                   else self.spec.transfer_inter)
+        latency = plan.latency(profile)
+        self.prefix_fetches += 1
+        self.prefix_fetch_dispatches.append(plan.num_dispatches)
+        req.prefix_fetch_dispatches = plan.num_dispatches
+        node.scheduler.prefill.waiting.remove(req)
+
+        def arrive(req=req, dst_blocks=dst_blocks, hit=hit,
+                   nid=node.node_id):
+            dst = self.nodes[nid]
+            if not self.controller.nodes[nid].alive:
+                dst.bm.free(req.request_id)   # node died mid-fetch
+                req.reset_for_retry()
+                self.controller.retry_queue.append(req)
+                return
+            self.controller.record_prefix(nid, req.prompt_tokens[:hit],
+                                          dst_blocks)
+            req.prefix_src_node = nid
+            req.prefix_block_ids = dst_blocks
+            # the prefix is resident: back to the HEAD (this request's
+            # admission was what the fetch was for)
+            dst.scheduler.prefill.waiting.appendleft(req)
+            self._poke(nid)
+
+        self.eq.push(self.eq.now + latency, arrive)
+
+    def _rehome_prefix(self, req: Request, node_id: int,
+                       blocks: Sequence[int]) -> None:
+        """Advertise a prompt's full-block prefix where its KV now lives
+        (shared controller helper — sim and engine can never drift)."""
+        if self.prefix_reuse:
+            self.controller.rehome_prefix(req, node_id, blocks)
+
     # -- node cycle -----------------------------------------------------------------
     def _cycle(self, node_id: int) -> None:
         self._poll_scheduled[node_id] = False
@@ -286,6 +376,8 @@ class ClusterSim:
         if not handle.alive:
             return
         self.controller.heartbeat(node_id, self.eq.now)
+        if self.prefix_reuse:
+            self._fetch_pending_prefixes(node)
         decision = node.scheduler.schedule()
         duration = 0.0
         if decision.prefill_batch:
@@ -293,6 +385,9 @@ class ClusterSim:
             duration += node.prefill_duration(tokens)
             node.scheduler.last_compute_util = 1.0
             node.served_prefill += len(decision.prefill_batch)
+            # chunks are suffix-sized on a hit: the simulator prices exactly
+            # the compute the real engine would run
+            node.prefill_tokens_computed += tokens
         if decision.decode_batch:
             duration += node.decode_duration(decision.decode_batch)
             node.served_decode += len(decision.decode_batch)
@@ -321,9 +416,14 @@ class ClusterSim:
                 # include the transfer (same fix as the real cluster)
                 if req.first_token_time is None:
                     req.first_token_time = now
+                if req.num_cached_prefix_tokens:
+                    self.prefix_hits += 1
+                    self.prefix_tokens_reused += req.num_cached_prefix_tokens
                 if self.spec.colocated:
                     node.scheduler.bm  # same pool: no transfer
                     node.scheduler.enqueue_decode(req)
+                    self._rehome_prefix(req, node_id,
+                                        node.bm.get(req.request_id))
                 else:
                     node.scheduler.mark_sending(req)
                     self._start_transfer(req, now)
@@ -360,6 +460,7 @@ class ClusterSim:
             req.transfer_calls = req.transfer_dispatches = 0
             src.scheduler.sending_done(req, free=False)
             dst.scheduler.enqueue_decode(req)
+            self._rehome_prefix(req, dst.node_id, dst.bm.get(req.request_id))
             self._poke(dst.node_id)
             return
         # Same TransferBackend registry as the real runtime: the "sim"
@@ -389,6 +490,9 @@ class ClusterSim:
 
         def arrive():
             req.transfer_end = self.eq.now
+            # KV now lives on the decode node; the sending_done free below
+            # invalidates the prefill-side entry (same as the real cluster)
+            self._rehome_prefix(req, dst.node_id, job.dst_blocks)
             src.scheduler.sending_done(req)
             dst.scheduler.enqueue_decode(req)
             self._poke(dst.node_id)
@@ -414,6 +518,16 @@ class ClusterSim:
             "routing": self.routing,
             "offered": self.offered,
             "rejected": len(self.rejected),
+            # prefix-reuse plane (priced identically to the real engine:
+            # hits shrink the prefill chunks the duration model sees)
+            "prefill_tokens_computed": sum(
+                n.prefill_tokens_computed for n in self.nodes.values()),
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
+            "prefix_fetches": self.prefix_fetches,
+            "mean_prefix_fetch_dispatches": (
+                sum(self.prefix_fetch_dispatches) / len(self.prefix_fetch_dispatches)
+                if self.prefix_fetch_dispatches else 0.0),
             "p95_ttft_s": p95,
             "starved_nodes": len(starved),
             "finished": len(self.finished),

@@ -141,11 +141,42 @@ def test_routing_prefers_same_host_decode():
 def test_prefix_cache_routing():
     gc = _controller()
     tokens = list(range(640))
-    gc.record_prefix(1, tokens)
+    gc.record_prefix(1, tokens, block_ids=list(range(100, 120)))
     r = Request(prompt_tokens=tokens[:320], sampling=SamplingParams())
     p, _ = gc.route_request(r)
     assert p == 1
-    assert r.num_cached_prefix_tokens == 320 - 1 or r.num_cached_prefix_tokens == 320
+    # shareable reuse is FULL blocks only, capped so >= 1 suffix token runs:
+    # 320-token prompt, 32-token blocks -> 9 shareable blocks = 288 tokens
+    assert r.num_cached_prefix_tokens == 288
+    assert r.prefix_src_node == 1
+    assert r.prefix_block_ids == list(range(100, 109))
+
+
+def test_prefix_routing_unbacked_entries_never_bill():
+    """Entries recorded without block ids bias nothing: the router must not
+    stamp reuse it cannot address (the phantom-hit regression)."""
+    gc = _controller()
+    tokens = list(range(640))
+    gc.record_prefix(1, tokens)                  # no block ids
+    r = Request(prompt_tokens=tokens[:320], sampling=SamplingParams())
+    gc.route_request(r)
+    assert r.num_cached_prefix_tokens == 0
+    assert r.prefix_src_node is None
+
+
+def test_prefix_routing_remote_fetch_plan():
+    """A longer prefix resident on a non-prefill node becomes a remote-fetch
+    plan when predicted TTFT (compute saved vs one fused transfer) wins."""
+    gc = _controller(num_p=2, num_d=2)
+    tokens = list(range(640))
+    gc.record_prefix(3, tokens, block_ids=list(range(200, 220)))   # decode node
+    r = Request(prompt_tokens=tokens, sampling=SamplingParams())
+    p, _ = gc.route_request(r)
+    # 8B-scale cost model: recomputing 608 tokens dwarfs one fused fetch
+    assert r.prefix_src_node == 3
+    assert p in (0, 1) and p != 3
+    assert r.num_cached_prefix_tokens == (640 - 1) // 32 * 32 == 608
+    assert r.prefix_block_ids == list(range(200, 219))
 
 
 # ---------------------------------------------------------------------------

@@ -127,16 +127,36 @@ def check(stats: Dict[str, List[Dict[str, float]]]) -> None:
     assert all(v == {1.0} for v in per_ctx.values()), per_ctx
 
 
+def history_metrics(stats: Dict[str, List[Dict[str, float]]]
+                    ) -> Dict[str, float]:
+    """Headline decode metrics for BENCH_decode.json (repro.obs.history)."""
+    return {
+        "kernel_max_dispatches_per_step": max(
+            r["dispatches_per_step"] for r in stats["kernel"]),
+        "dense_max_dispatches_per_step": max(
+            r["dispatches_per_step"] for r in stats["dense"]),
+        "kernel_compile_variants": max(
+            r["compile_variants"] for r in stats["kernel"]),
+        "kernel_min_tokens_per_s": min(
+            r["tokens_per_s"] for r in stats["kernel"]),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="print per-path stats as JSON")
     ap.add_argument("--check", action="store_true",
                     help="assert the O(1)-dispatch decode invariant")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_decode.json (repro.obs.history)")
     args = ap.parse_args()
     stats = bench()
     if args.check:
         check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("decode", history_metrics(stats))
     if args.json:
         print(json.dumps(stats, indent=2, sort_keys=True))
         return

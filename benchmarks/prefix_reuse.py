@@ -221,16 +221,38 @@ def check(stats: Dict[str, List[Dict[str, object]]]) -> None:
             assert r["prefix_tokens_reused"] == 0, r
 
 
+def history_metrics(stats: Dict[str, List[Dict[str, object]]]
+                    ) -> Dict[str, float]:
+    """Reuse-plane headlines for BENCH_prefix.json (repro.obs.history)."""
+    share1 = [r for r in stats["sim"] if r["share_fraction"] == 1.0]
+    return {
+        "engine_tokens_saved_total": sum(
+            r["prefill_tokens_saved"] for r in stats["engine"]),
+        "engine_max_fetch_dispatches": max(
+            (max(r["fetch_dispatches"], default=0) for r in stats["engine"]),
+            default=0),
+        "sim_tokens_saved_share1": sum(
+            r["prefill_tokens_saved"] for r in share1),
+        "sim_mean_fetch_dispatches_share1": max(
+            (r["mean_prefix_fetch_dispatches"] for r in share1), default=0.0),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="print per-row stats as JSON")
     ap.add_argument("--check", action="store_true",
                     help="assert the reuse-saves-compute invariants")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_prefix.json (repro.obs.history)")
     args = ap.parse_args()
     stats = bench()
     if args.check:
         check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("prefix", history_metrics(stats))
     if args.json:
         print(json.dumps(stats, indent=2, sort_keys=True))
         return

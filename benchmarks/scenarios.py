@@ -98,12 +98,30 @@ def check(stats: Dict[str, Dict[str, Dict[str, float]]]) -> None:
                 f"normal: only {la['finished']}/{la['offered']} finished"
 
 
+def history_metrics(stats: Dict[str, Dict[str, Dict[str, float]]]
+                    ) -> Dict[str, float]:
+    """Per-scenario load-aware headlines for BENCH_scenarios.json."""
+    out: Dict[str, float] = {}
+    for name, by_policy in stats.items():
+        la = by_policy["load_aware"]
+        out[f"{name}_load_aware_goodput"] = la["goodput"]
+        out[f"{name}_load_aware_p95_ttft_s"] = la["p95_ttft_s"]
+    if "overload" in stats:
+        out["overload_rejected"] = stats["overload"]["load_aware"]["rejected"]
+    if "heterogeneous" in stats:
+        out["heterogeneous_starved_nodes"] = \
+            stats["heterogeneous"]["load_aware"]["starved_nodes"]
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="print {scenario: {policy: stats}} as JSON")
     ap.add_argument("--check", action="store_true",
                     help="assert the load-aware-wins gates (CI smoke)")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_scenarios.json (repro.obs.history)")
     ap.add_argument("--only", default="",
                     help=f"comma-separated subset of {sorted(SCENARIOS)}")
     args = ap.parse_args()
@@ -111,6 +129,9 @@ def main() -> None:
     stats = bench(names)
     if args.check:
         check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("scenarios", history_metrics(stats))
     if args.json:
         print(json.dumps(stats, indent=2, sort_keys=True))
         return

@@ -2,10 +2,18 @@
 
 The paper's motivating figure: with block-wise NCCL transfer the KV move is
 ~25% of request latency; FlowKV makes it negligible.
+
+CLI: ``python -m benchmarks.time_breakdown [--json] [--check] [--history]``
+(``--check`` asserts the transfer SHARE of total request latency under the
+flowkv schedule is no worse than blockwise's — the figure's claim as a CI
+gate; ``--history`` appends the shares to ``BENCH_breakdown.json``, see
+``repro.obs.history``).
 """
 from __future__ import annotations
 
-from typing import List
+import argparse
+import json
+from typing import Dict, List
 
 from repro.configs import get_config
 from repro.core.costmodel import IPC, NCCL_INTRA, VLLM_MERGE_INTRA
@@ -15,8 +23,9 @@ from repro.core.scheduler.global_controller import ModelCost
 from repro.sim.hardware import A100
 
 
-def rows(model: str = "llama31-8b", in_tokens: int = 13000,
-         out_tokens: int = 100) -> List[str]:
+def bench(model: str = "llama31-8b", in_tokens: int = 13000,
+          out_tokens: int = 100) -> Dict[str, Dict[str, float]]:
+    """{schedule: {prefill_s, xfer_s, decode_s, total_s, xfer_frac}}."""
     cfg = get_config(model)
     spec = KVCacheSpec(num_layers=cfg.num_layers, num_blocks=8192,
                        block_size=cfg.block_size, num_kv_heads=cfg.num_kv_heads,
@@ -30,7 +39,7 @@ def rows(model: str = "llama31-8b", in_tokens: int = 13000,
         A100.decode_time(cost.weight_bytes + cost.kv_bytes_per_token * (in_tokens + i))
         for i in range(out_tokens))
     ids = list(range(spec.blocks_for_tokens(in_tokens)))
-    out = []
+    stats: Dict[str, Dict[str, float]] = {}
     for name, plan, prof in (
         ("vllm_blockwise", planner.plan_blockwise(ids, ids), VLLM_MERGE_INTRA),
         ("layerwise", planner.plan_layerwise(ids, ids), NCCL_INTRA),
@@ -38,13 +47,68 @@ def rows(model: str = "llama31-8b", in_tokens: int = 13000,
     ):
         xfer = plan.latency(prof)
         total = prefill + xfer + decode
+        stats[name] = {
+            "prefill_s": prefill, "xfer_s": xfer, "decode_s": decode,
+            "total_s": total, "xfer_frac": xfer / total,
+            "num_calls": plan.num_calls,
+        }
+    return stats
+
+
+def rows(stats=None) -> List[str]:
+    stats = stats or bench()
+    out = []
+    for name, s in stats.items():
         out.append(
-            f"fig1/{name},{xfer*1e6:.0f},"
-            f"xfer_frac={xfer/total:.3f};prefill_s={prefill:.3f}"
-            f";decode_s={decode:.3f};total_s={total:.3f}")
+            f"fig1/{name},{s['xfer_s']*1e6:.0f},"
+            f"xfer_frac={s['xfer_frac']:.3f};prefill_s={s['prefill_s']:.3f}"
+            f";decode_s={s['decode_s']:.3f};total_s={s['total_s']:.3f}")
     return out
 
 
-if __name__ == "__main__":
-    for r in rows():
+def check(stats: Dict[str, Dict[str, float]]) -> None:
+    """CI gate: FlowKV's transfer share of request latency must not exceed
+    the blockwise baseline's — the figure's entire point."""
+    fk, bw = stats["flowkv"], stats["vllm_blockwise"]
+    assert fk["xfer_frac"] <= bw["xfer_frac"], (
+        f"flowkv xfer share {fk['xfer_frac']:.4f} > "
+        f"blockwise {bw['xfer_frac']:.4f}")
+    # and it must actually be negligible, not merely better (paper: <1%
+    # vs ~25%); 5% leaves room for cost-model recalibration
+    assert fk["xfer_frac"] < 0.05, \
+        f"flowkv xfer share {fk['xfer_frac']:.4f} is not negligible"
+
+
+def history_metrics(stats: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    fk, bw = stats["flowkv"], stats["vllm_blockwise"]
+    return {
+        "flowkv_xfer_frac": fk["xfer_frac"],
+        "blockwise_xfer_frac": bw["xfer_frac"],
+        "flowkv_over_blockwise_xfer": fk["xfer_s"] / bw["xfer_s"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="print per-schedule breakdown as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert flowkv's transfer share <= blockwise's")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_breakdown.json (repro.obs.history)")
+    args = ap.parse_args()
+    stats = bench()
+    if args.check:
+        check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("breakdown", history_metrics(stats))
+    if args.json:
+        print(json.dumps(stats, indent=2, sort_keys=True))
+        return
+    for r in rows(stats):
         print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -155,16 +155,31 @@ def check(stats: Dict[str, Dict[str, float]]) -> None:
     assert all(d == 1 for d in disp.values()), disp
 
 
+def history_metrics(stats: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    """Flatten dispatch stats for BENCH_transfer.json (repro.obs.history)."""
+    out: Dict[str, float] = {}
+    for schedule, s in stats.items():
+        out[f"{schedule}_calls"] = s["num_calls"]
+        out[f"{schedule}_dispatches"] = s["num_dispatches"]
+    out["flowkv_wall_s"] = stats["flowkv"]["wall_s"]
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="print per-schedule dispatch stats as JSON")
     ap.add_argument("--check", action="store_true",
                     help="assert flowkv <= blockwise <= layerwise ordering")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_transfer.json (repro.obs.history)")
     args = ap.parse_args()
     stats = dispatch_stats()
     if args.check:
         check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("transfer", history_metrics(stats))
     if args.json:
         print(json.dumps(stats, indent=2, sort_keys=True))
         return

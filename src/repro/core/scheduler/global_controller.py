@@ -124,6 +124,9 @@ class GlobalController:
         # how the scenario suite runs its round-robin / static-PD baselines
         # through the same code without load-aware behavior leaking in.
         self.actions_enabled = actions_enabled
+        # Optional repro.obs.tracing.SpanRecorder: when set AND an admission
+        # policy is armed, every gate verdict becomes an "admission" span.
+        self.tracer = None
         self.nodes: Dict[int, NodeHandle] = {}
         self.prefix_index = PrefixCacheIndex(block_size)
         self.cycle = 0
@@ -243,6 +246,7 @@ class GlobalController:
         more work onto a cluster that cannot meet the SLO anyway.
         """
         decision = self._admission_check(req)
+        self._trace_admission(req, decision)
         if decision.verdict == "admitted":
             decision.route = self.route_request(req)
         elif decision.verdict == "deferred":
@@ -293,6 +297,23 @@ class GlobalController:
             return AdmissionDecision("rejected", best_ttft, retry, reason)
         return AdmissionDecision("deferred", best_ttft, retry, reason)
 
+    def _trace_admission(self, req: Request,
+                         decision: AdmissionDecision) -> None:
+        """One instantaneous "admission" span per gate verdict (the QUEUE
+        span covers the time a deferral costs; this records the decision)."""
+        if self.tracer is None or self.admission is None \
+                or not self.actions_enabled:
+            return
+        wall = self.tracer.wall()
+        self.tracer.emit(
+            req.request_id, "admission",
+            start_cycle=float(self.cycle), end_cycle=float(self.cycle),
+            start_wall_s=wall, end_wall_s=wall,
+            attrs={"verdict": decision.verdict,
+                   "predicted_ttft_s": decision.predicted_ttft_s,
+                   "reason": decision.reason,
+                   "defers": req.admission_defers})
+
     def _reject(self, req: Request, decision: AdmissionDecision) -> None:
         req.state = RequestState.REJECTED
         req.retry_after = decision.retry_after_s
@@ -314,6 +335,7 @@ class GlobalController:
         for req in self.deferred:
             req.admission_defers += 1
             decision = self._admission_check(req)
+            self._trace_admission(req, decision)
             if decision.verdict == "admitted" and self.route_request(req) is not None:
                 req.retry_after = None
                 self._log("admission",

@@ -1,0 +1,224 @@
+"""Fit the cost-model coefficients from measured timings.
+
+The simulator and the controller price everything with two small linear
+models:
+
+* :class:`repro.core.costmodel.TransportProfile` —
+  ``latency = fixed_s + calls*per_call_s + bytes/bandwidth_Bps``
+* :class:`repro.sim.hardware.HardwareProfile` prefill —
+  ``predicted_ttft_s = overhead_s + flops / (peak_flops * mfu_prefill)``
+
+Both are linear in their unknowns, so ordinary least squares over measured
+``(calls, bytes, seconds)`` / ``(flops, seconds)`` samples recovers the
+coefficients exactly on synthetic data (``tests/test_obs.py``) and
+usefully on real data. FLOP counts come from the same sources the roofline
+harness uses: ``launch/hlo_flops.py`` when a compiled HLO is at hand, the
+``2 * active_params`` analytic model otherwise (they agree — that is what
+``benchmarks/roofline.py``'s useful_ratio column audits).
+
+``--check`` is the sim-vs-real gate: run a real (CPU-scale) prefill sweep,
+fit a :class:`HardwareProfile` for THIS host on part of the sweep, then
+predict the held-out points with ``predicted_ttft_s`` and require the
+median relative error under :data:`TTFT_ERROR_BOUND`. The bound is wide
+because shared CI hosts jitter; the point of the gate is that the
+calibrated model and reality stay the same ORDER — a broken fit (sign
+flip, unit slip, constant-only model) fails it immediately.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.obs.calibrate --check
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import TransportProfile, predicted_ttft_s
+from repro.sim.hardware import TPU_V5E, HardwareProfile
+
+# Documented sim-vs-real bound for --check (docs/observability.md): median
+# relative error of predicted vs measured prefill TTFT on held-out lengths.
+# Wide on purpose: sub-ms kernel timings on a shared CI host jitter by tens
+# of percent, and the gate's job is catching structural breaks (sign flip,
+# unit slip, constant-only fit) — those miss by integer factors.
+TTFT_ERROR_BOUND = 0.75
+
+
+# -- transport: latency = fixed + calls*per_call + bytes/bw ---------------------
+def fit_transport(samples: Sequence[Tuple[int, int, float]],
+                  name: str = "fitted") -> TransportProfile:
+    """Least-squares fit of (num_calls, num_bytes, seconds) samples.
+
+    Needs >= 3 samples spanning distinct calls AND bytes values (the design
+    matrix [1, calls, bytes] must have full column rank) — synthetic
+    recovery is exact, measured fits are clamped to physical (>= 0)
+    coefficients.
+    """
+    if len(samples) < 3:
+        raise ValueError(f"need >= 3 samples to fit 3 coefficients, "
+                         f"got {len(samples)}")
+    a = np.array([[1.0, c, b] for c, b, _ in samples])
+    y = np.array([t for _, _, t in samples])
+    (fixed, per_call, per_byte), *_ = np.linalg.lstsq(a, y, rcond=None)
+    fixed, per_call, per_byte = (max(0.0, float(v))
+                                 for v in (fixed, per_call, per_byte))
+    return TransportProfile(
+        name=name, per_call_s=per_call,
+        bandwidth_Bps=1.0 / per_byte if per_byte > 0 else 1e15,
+        fixed_s=fixed)
+
+
+# -- compute: seconds = overhead + flops / effective_flops ----------------------
+def fit_compute(samples: Sequence[Tuple[float, float]]
+                ) -> Tuple[float, float]:
+    """Fit (flops, seconds) samples; returns (effective_flops, overhead_s)."""
+    if len(samples) < 2:
+        raise ValueError(f"need >= 2 samples to fit 2 coefficients, "
+                         f"got {len(samples)}")
+    a = np.array([[1.0, f] for f, _ in samples])
+    y = np.array([t for _, t in samples])
+    (overhead, inv_eff), *_ = np.linalg.lstsq(a, y, rcond=None)
+    overhead = max(0.0, float(overhead))
+    eff = 1.0 / inv_eff if inv_eff > 0 else 1e18
+    return float(eff), overhead
+
+
+def fit_hardware(samples: Sequence[Tuple[float, float]],
+                 base: HardwareProfile = TPU_V5E,
+                 name: str = "fitted") -> HardwareProfile:
+    """A HardwareProfile whose prefill_time() reproduces the samples.
+
+    The fitted effective throughput lands in ``mfu_prefill`` (relative to
+    ``base``'s peak), the fitted dispatch floor in ``step_overhead_s`` —
+    i.e. exactly the two knobs ``predicted_ttft_s`` reads, so the
+    controller's routing/admission estimates inherit the calibration
+    unchanged.
+    """
+    eff, overhead = fit_compute(samples)
+    return dataclasses.replace(base, name=name,
+                               mfu_prefill=eff / base.peak_flops,
+                               step_overhead_s=overhead)
+
+
+# -- FLOP seeds -----------------------------------------------------------------
+def prefill_flops(cfg, num_tokens: int, hlo_text: Optional[str] = None
+                  ) -> float:
+    """Prefill FLOPs for ``num_tokens``.
+
+    Analytic model: the linear weight term (2 * active_params per token)
+    PLUS the quadratic attention term (QK^T and AV are each
+    2*n^2*heads*head_dim per layer). At smoke-model scale the quadratic
+    term DOMINATES wall time, so dropping it would bend the x axis of the
+    fit. When a compiled HLO is provided, ``launch/hlo_flops.py`` counts it
+    too and the larger of the two wins — the HLO count is exact where it
+    sees the dots, but CPU XLA lowers matmuls to oneDNN custom-calls the
+    text counter cannot price, so it can only refine the analytic floor
+    upward, never below it.
+    """
+    n_attn = cfg.num_attention_layers() or cfg.num_layers
+    analytic = 2.0 * cfg.active_params() * num_tokens + \
+        4.0 * n_attn * cfg.num_heads * cfg.head_dim * num_tokens ** 2
+    if hlo_text is not None:
+        from repro.launch.hlo_flops import analyze_hlo
+        counts = analyze_hlo(hlo_text)
+        return max(analytic, float(counts.flops))
+    return analytic
+
+
+# -- the sim-vs-real check -------------------------------------------------------
+def measure_prefill(prompt_lens: Sequence[int] = (32, 64, 96, 128, 160,
+                                                  192, 224, 256),
+                    repeats: int = 5, arch: str = "qwen3-1.7b"):
+    """Time real single-node prefills at several prompt lengths.
+
+    Returns ``(cfg, [(flops, best_seconds)])``. Each length is compiled
+    once and timed ``repeats`` times keeping the MINIMUM — the estimator
+    least contaminated by CI-host noise; compile time is excluded (the
+    cost model prices steady-state compute, not tracing).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.models.api import get_model
+
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(lambda p, t: T.prefill(p, cfg, t)[0])
+    samples = []
+    for n in prompt_lens:
+        tokens = jnp.zeros((1, n), jnp.int32)
+        compiled = step.lower(params, tokens).compile()
+        flops = prefill_flops(cfg, n, hlo_text=compiled.as_text())
+        jax.block_until_ready(step(params, tokens))   # warm the cache
+        best = min(_timed(step, params, tokens) for _ in range(repeats))
+        samples.append((flops, best))
+    return cfg, samples
+
+
+def _timed(step, params, tokens) -> float:
+    import jax
+
+    t0 = time.monotonic()
+    jax.block_until_ready(step(params, tokens))
+    return time.monotonic() - t0
+
+
+def check(bound: float = TTFT_ERROR_BOUND, arch: str = "qwen3-1.7b") -> dict:
+    """Fit on the even sweep points, score prediction error on the odd ones."""
+    cfg, samples = measure_prefill(arch=arch)
+    train, held = samples[::2], samples[1::2]
+    hw = fit_hardware(train, name=f"{arch}-cpu-fit")
+    errors = []
+    for flops, measured in held:
+        pred = predicted_ttft_s(0.0, flops,
+                                hw.peak_flops * hw.mfu_prefill,
+                                hw.step_overhead_s)
+        errors.append(abs(pred - measured) / measured)
+    median = float(np.median(errors))
+    return {
+        "arch": arch,
+        "effective_flops": hw.peak_flops * hw.mfu_prefill,
+        "step_overhead_s": hw.step_overhead_s,
+        "held_out_rel_errors": errors,
+        "median_rel_error": median,
+        "bound": bound,
+        "ok": median <= bound,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Calibrate cost-model coefficients from measured timings")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless the fitted model predicts held-out "
+                         f"prefill TTFT within {TTFT_ERROR_BOUND:.0%} "
+                         "median relative error")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    result = check(arch=args.arch)
+    if args.json:
+        print(json.dumps(result, indent=2, sort_keys=True))
+    else:
+        print(f"calibrated {result['arch']}: "
+              f"effective {result['effective_flops']/1e9:.2f} GFLOP/s, "
+              f"overhead {result['step_overhead_s']*1e3:.2f} ms, "
+              f"median held-out TTFT error "
+              f"{result['median_rel_error']:.1%} (bound {result['bound']:.0%})")
+    if args.check and not result["ok"]:
+        print(f"FAIL: median_rel_error {result['median_rel_error']:.3f} > "
+              f"bound {result['bound']}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,7 @@ controller's heartbeat scan drains and re-routes its requests.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.costmodel import select_route
@@ -49,10 +50,15 @@ class PDCluster:
                  max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
                  role_flip: bool = False, paged_decode: str = "auto",
                  admission: Optional[AdmissionPolicy] = None,
-                 prefix_reuse: bool = True):
+                 prefix_reuse: bool = True, tracer=None):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
+        # Optional repro.obs.tracing.SpanRecorder (also settable post-hoc
+        # via repro.obs.tracing.attach_tracer): the cluster emits queue /
+        # transfer / decode / prefix_fetch spans, engines emit prefill,
+        # the controller emits admission.
+        self.tracer = tracer
         # prefix_reuse=False disables the reuse DATA PLANE (no recording, no
         # sharing, no fetches) — the A/B switch the token-identity tests and
         # benchmarks/prefix_reuse.py flip. Invalidation stays wired either
@@ -67,6 +73,7 @@ class PDCluster:
         self.controller = GlobalController(model_cost, cfg.block_size, target=target,
                                            role_flip=role_flip,
                                            admission=admission)
+        self.controller.tracer = tracer
         self.clock = 0.0
         self.submitted = 0
         self._dead: set = set()      # killed engines stop heartbeating/working
@@ -80,6 +87,7 @@ class PDCluster:
             engine = NodeEngine(i, cfg, params, num_blocks=num_blocks,
                                 allocator=allocator, max_batch_tokens=max_batch_tokens,
                                 paged_decode=paged_decode)
+            engine.tracer = tracer
             self.engines[i] = engine
             host = (hosts or {}).get(i, i)
             # heterogeneous fleets: hardware may be one profile for every
@@ -113,6 +121,8 @@ class PDCluster:
         is admitted (legacy behavior); with one, the decision may be
         "deferred" (parked controller-side, admitted as load drains) or
         "rejected" (terminal REJECTED state + retry-after hint)."""
+        if req.arrival_wall is None:
+            req.arrival_wall = time.monotonic()
         decision = self.controller.submit_request(req)
         if decision.admitted and decision.route is None:
             raise RuntimeError("no alive nodes to route to")
@@ -123,6 +133,7 @@ class PDCluster:
     def _collect_rejected(self) -> None:
         for req in self.controller.take_rejected():
             req.finish_time = self.clock
+            req.finish_wall = time.monotonic()
             self.rejected.append(req)
 
     # -- the FlowKV transfer (P pool -> D pool) -------------------------------------
@@ -136,15 +147,25 @@ class PDCluster:
         src = self.engines[req.prefill_node]
         dst = self.engines[req.decode_node]
         req.transfer_start = self.clock
+        req.transfer_start_wall = time.monotonic()
         if src is dst:
             # Role-flexible node serving both stages: the cache is already
             # in this node's pool — hand off locally, keep the blocks.
             req.transfer_end = self.clock
+            req.transfer_end_wall = req.transfer_start_wall
             req.transfer_calls = req.transfer_dispatches = 0
             src.scheduler.sending_done(req, free=False)
             dst.scheduler.enqueue_decode(req)
             self._rehome_prefix(req, src.node_id,
                                 src.scheduler.bm.get(req.request_id))
+            if self.tracer is not None:
+                self.tracer.emit(
+                    req.request_id, "transfer",
+                    start_cycle=req.transfer_start, end_cycle=req.transfer_end,
+                    start_wall_s=req.transfer_start_wall,
+                    end_wall_s=req.transfer_end_wall, node_id=src.node_id,
+                    attrs={"schedule": "local", "calls": 0, "dispatches": 0,
+                           "bytes": 0, "est_latency_s": 0.0})
             return
         profile = select_route(
             self.controller.nodes[src.node_id].host_id ==
@@ -157,8 +178,19 @@ class PDCluster:
             req.request_id, job.schedule, job.num_calls, job.num_bytes, latency,
             job.num_dispatches))
         req.transfer_end = self.clock + latency
+        req.transfer_end_wall = time.monotonic()
         req.transfer_calls = job.num_calls
         req.transfer_dispatches = job.num_dispatches
+        if self.tracer is not None:
+            self.tracer.emit(
+                req.request_id, "transfer",
+                start_cycle=req.transfer_start, end_cycle=req.transfer_end,
+                start_wall_s=req.transfer_start_wall,
+                end_wall_s=req.transfer_end_wall, node_id=src.node_id,
+                attrs={"schedule": job.schedule, "calls": job.num_calls,
+                       "dispatches": job.num_dispatches,
+                       "bytes": job.num_bytes, "est_latency_s": latency,
+                       "dst_node": dst.node_id})
         # The prompt's KV now lives on the DECODE node; sending_done below
         # frees the prefill-side blocks (and invalidates their entries), so
         # the index entry is re-homed to where the KV actually is.
@@ -218,10 +250,21 @@ class PDCluster:
         profile = select_route(
             self.controller.nodes[src_id].host_id ==
             self.controller.nodes[engine.node_id].host_id, self.target)
+        latency = plan.latency(profile)
         self.transfers.append(TransferRecord(
             req.request_id, plan.schedule, plan.num_calls, plan.total_bytes,
-            plan.latency(profile), plan.num_dispatches, kind="prefix_fetch"))
+            latency, plan.num_dispatches, kind="prefix_fetch"))
         req.prefix_fetch_dispatches = plan.num_dispatches
+        if self.tracer is not None:
+            wall = self.tracer.wall()
+            self.tracer.emit(
+                req.request_id, "prefix_fetch",
+                start_cycle=self.clock, end_cycle=self.clock + latency,
+                start_wall_s=wall, end_wall_s=wall,
+                node_id=engine.node_id,
+                attrs={"src_node": src_id, "tokens": hit,
+                       "dispatches": plan.num_dispatches,
+                       "bytes": plan.total_bytes, "est_latency_s": latency})
         # the fetched copy is itself resident, shareable KV on this node
         self.controller.record_prefix(engine.node_id,
                                       req.prompt_tokens[:hit], dst_blocks)
@@ -243,6 +286,18 @@ class PDCluster:
             pre_done, finished = engine.step(now=self.clock)
             for req in pre_done:
                 req.prefill_end = self.clock
+                if self.tracer is not None:
+                    # queue span closes when prefill started (stamped by the
+                    # engine); emitted here because the engine does not see
+                    # the request until it leaves the waiting queue
+                    self.tracer.emit(
+                        req.request_id, "queue",
+                        start_cycle=req.arrival_time,
+                        end_cycle=req.prefill_start,
+                        start_wall_s=req.arrival_wall,
+                        end_wall_s=req.prefill_start_wall, node_id=nid,
+                        attrs={"defers": req.admission_defers,
+                               "retries": req.retries})
                 engine.scheduler.mark_sending(req)
                 # NOTE: the prefix is recorded where the KV ends up (see
                 # _rehome_prefix), not here — these blocks free the moment
@@ -252,6 +307,16 @@ class PDCluster:
                 self._transfer(req)
             for req in finished:
                 req.finish_time = self.clock
+                req.finish_wall = time.monotonic()
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        req.request_id, "decode",
+                        start_cycle=req.transfer_end, end_cycle=self.clock,
+                        start_wall_s=req.transfer_end_wall,
+                        end_wall_s=req.finish_wall, node_id=nid,
+                        attrs={"new_tokens": req.num_output,
+                               "decode_steps": req.decode_steps,
+                               "decode_dispatches": req.decode_dispatches})
                 self.finished.append(req)
         self.controller.step(self.clock)
         self._collect_rejected()   # deferred requests the gate gave up on
@@ -284,6 +349,7 @@ class PDCluster:
             engine.release(req)
         req.state = RequestState.CANCELLED
         req.finish_time = self.clock
+        req.finish_wall = time.monotonic()
         self.cancelled.append(req)
         return True
 

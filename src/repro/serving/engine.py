@@ -30,6 +30,7 @@ tests/test_cluster.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
@@ -136,6 +137,13 @@ class NodeEngine:
         self.prefill_tokens_computed = 0   # prompt tokens actually forwarded
         self.prefix_hits = 0               # prefills that reused a resident prefix
         self.prefix_tokens_reused = 0      # prompt tokens NOT recomputed
+        # -- observability ------------------------------------------------------------
+        # Optional repro.obs.tracing.SpanRecorder; read at emission time, so
+        # attach_tracer() can instrument a live engine. The engine emits the
+        # "prefill" span (it is where prefill runs and where wall-clock
+        # stamps originate); queue/transfer/decode spans come from the
+        # cluster, admission spans from the controller.
+        self.tracer = None
 
     @property
     def decode_compile_variants(self) -> int:
@@ -155,6 +163,8 @@ class NodeEngine:
         for req in decision.prefill_batch:   # simple per-request prefill (no padding waste)
             if now is not None and req.prefill_start is None:
                 req.prefill_start = now
+            if req.prefill_start_wall is None:
+                req.prefill_start_wall = time.monotonic()
             cached = req.num_cached_prefix_tokens if self.supports_prefix_reuse else 0
             if cached > 0:
                 # Prefix-cache hit: the matched prefix's blocks are already
@@ -190,6 +200,18 @@ class NodeEngine:
             if self.scheduler.prefill_progressed(req, executed):
                 if now is not None and req.first_token_time is None:
                     req.first_token_time = now
+                wall = time.monotonic()
+                req.prefill_end_wall = wall
+                if req.first_token_wall is None:
+                    req.first_token_wall = wall
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        req.request_id, "prefill",
+                        start_cycle=req.prefill_start, end_cycle=now,
+                        start_wall_s=req.prefill_start_wall,
+                        end_wall_s=wall, node_id=self.node_id,
+                        attrs={"prompt_len": req.prompt_len,
+                               "cached_prefix_tokens": cached})
                 done.append(req)
         self.scheduler.last_compute_util = 1.0 if decision.prefill_batch else 0.0
         return done

@@ -76,6 +76,19 @@ class Request:
     finish_time: Optional[float] = None
     retries: int = 0
 
+    # --- wall-clock timing (time.monotonic(), stamped by the real runtime) -----
+    # The fields above run on the driving scheduler clock (cluster CYCLES in
+    # PDCluster, simulated seconds in ClusterSim). These parallel stamps are
+    # real seconds, so per-phase durations are reportable without the sim's
+    # cycle->s conversion. The simulator leaves them None.
+    arrival_wall: Optional[float] = None
+    prefill_start_wall: Optional[float] = None
+    prefill_end_wall: Optional[float] = None
+    transfer_start_wall: Optional[float] = None
+    transfer_end_wall: Optional[float] = None
+    first_token_wall: Optional[float] = None
+    finish_wall: Optional[float] = None
+
     # --- admission gate (set when the controller defers/rejects) ---------------
     retry_after: Optional[float] = None   # hint: resubmit after this many seconds
     reject_reason: Optional[str] = None   # e.g. "predicted_ttft 42.1s > slo 30.0s"
@@ -139,8 +152,13 @@ class Request:
         return self.transfer_end - self.transfer_start
 
     def timing_breakdown(self) -> dict:
-        """Per-stage wall-clock split (None where the stage hasn't happened):
-        queue -> prefill -> transfer -> decode, plus ttft / e2e."""
+        """Per-stage timing split (None where the stage hasn't happened):
+        queue -> prefill -> transfer -> decode, plus ttft / e2e.
+
+        The unsuffixed entries run on the driving scheduler clock (cycles in
+        the real cluster, simulated seconds in the sim); the ``*_wall_s``
+        entries are monotonic wall-clock SECONDS stamped by the real runtime
+        (None in the simulator)."""
         def span(a: Optional[float], b: Optional[float]) -> Optional[float]:
             return None if a is None or b is None else b - a
         return {
@@ -150,6 +168,14 @@ class Request:
             "decode_s": span(self.transfer_end, self.finish_time),
             "ttft_s": self.ttft(),
             "e2e_s": self.e2e(),
+            "queue_wall_s": span(self.arrival_wall, self.prefill_start_wall),
+            "prefill_wall_s": span(self.prefill_start_wall,
+                                   self.prefill_end_wall),
+            "transfer_wall_s": span(self.transfer_start_wall,
+                                    self.transfer_end_wall),
+            "decode_wall_s": span(self.transfer_end_wall, self.finish_wall),
+            "ttft_wall_s": span(self.arrival_wall, self.first_token_wall),
+            "e2e_wall_s": span(self.arrival_wall, self.finish_wall),
             "num_calls": self.transfer_calls,
             "num_dispatches": self.transfer_dispatches,
         }
@@ -173,6 +199,9 @@ class Request:
         self.prefix_fetch_dispatches = 0
         self.prefill_start = self.prefill_end = None
         self.transfer_start = self.transfer_end = None
+        self.prefill_start_wall = self.prefill_end_wall = None
+        self.transfer_start_wall = self.transfer_end_wall = None
+        self.first_token_wall = None
         self.transfer_calls = self.transfer_dispatches = None
         self.decode_steps = self.decode_dispatches = 0
         self.first_token_time = None

@@ -151,6 +151,11 @@ class ClusterSim:
         self.spec = system_spec(kind)
         self.kind = kind
         self.same_host = same_host
+        # Optional repro.obs.tracing.SpanRecorder (attach_tracer). The sim
+        # emits the same span taxonomy as PDCluster on the SIMULATED clock
+        # (start_cycle/end_cycle in sim seconds); wall stamps stay None —
+        # the virtual data plane consumes no wall time worth attributing.
+        self.tracer = None
         hw_decode = hw_decode or hw_prefill
         if routing is not None and routing not in ROUTING_POLICIES:
             raise ValueError(
@@ -342,8 +347,18 @@ class ClusterSim:
         req.prefix_fetch_dispatches = plan.num_dispatches
         node.scheduler.prefill.waiting.remove(req)
 
+        start = self.eq.now
+
         def arrive(req=req, dst_blocks=dst_blocks, hit=hit,
                    nid=node.node_id):
+            if self.tracer is not None:
+                self.tracer.emit(
+                    req.request_id, "prefix_fetch",
+                    start_cycle=start, end_cycle=self.eq.now, node_id=nid,
+                    attrs={"src_node": src_id, "tokens": hit,
+                           "dispatches": plan.num_dispatches,
+                           "bytes": plan.total_bytes,
+                           "est_latency_s": latency})
             dst = self.nodes[nid]
             if not self.controller.nodes[nid].alive:
                 dst.bm.free(req.request_id)   # node died mid-fetch
@@ -383,6 +398,12 @@ class ClusterSim:
         if decision.prefill_batch:
             tokens = decision.num_prefill_tokens
             duration += node.prefill_duration(tokens)
+            for req in decision.prefill_batch:
+                # first scheduled chunk = compute starts (the real engine
+                # stamps this in run_prefill); queue_s / prefill_s and the
+                # queue span depend on it
+                if req.prefill_start is None:
+                    req.prefill_start = self.eq.now
             node.scheduler.last_compute_util = 1.0
             node.served_prefill += len(decision.prefill_batch)
             # chunks are suffix-sized on a hit: the simulator prices exactly
@@ -416,6 +437,20 @@ class ClusterSim:
                 # include the transfer (same fix as the real cluster)
                 if req.first_token_time is None:
                     req.first_token_time = now
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        req.request_id, "queue",
+                        start_cycle=req.arrival_time,
+                        end_cycle=req.prefill_start, node_id=node_id,
+                        attrs={"defers": req.admission_defers,
+                               "retries": req.retries})
+                    self.tracer.emit(
+                        req.request_id, "prefill",
+                        start_cycle=req.prefill_start, end_cycle=now,
+                        node_id=node_id,
+                        attrs={"prompt_len": req.prompt_len,
+                               "cached_prefix_tokens":
+                                   req.num_cached_prefix_tokens})
                 if req.num_cached_prefix_tokens:
                     self.prefix_hits += 1
                     self.prefix_tokens_reused += req.num_cached_prefix_tokens
@@ -435,6 +470,12 @@ class ClusterSim:
             if req.num_output >= req.sampling.max_new_tokens:
                 node.scheduler.decode_finished(req)
                 req.finish_time = now
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        req.request_id, "decode",
+                        start_cycle=req.transfer_end, end_cycle=now,
+                        node_id=node_id,
+                        attrs={"new_tokens": req.num_output})
                 self.finished.append(req)
         # keep heartbeats fresh for all healthy nodes (failure injection is
         # explicit in this simulator; idle != dead)
@@ -458,6 +499,12 @@ class ClusterSim:
             # (mirrors PDCluster._transfer).
             req.transfer_start = req.transfer_end = now
             req.transfer_calls = req.transfer_dispatches = 0
+            if self.tracer is not None:
+                self.tracer.emit(
+                    req.request_id, "transfer",
+                    start_cycle=now, end_cycle=now, node_id=src.node_id,
+                    attrs={"schedule": "local", "calls": 0, "dispatches": 0,
+                           "bytes": 0, "est_latency_s": 0.0})
             src.scheduler.sending_done(req, free=False)
             dst.scheduler.enqueue_decode(req)
             self._rehome_prefix(req, dst.node_id, dst.bm.get(req.request_id))
@@ -490,6 +537,15 @@ class ClusterSim:
 
         def arrive():
             req.transfer_end = self.eq.now
+            if self.tracer is not None:
+                self.tracer.emit(
+                    req.request_id, "transfer",
+                    start_cycle=req.transfer_start, end_cycle=self.eq.now,
+                    node_id=src.node_id,
+                    attrs={"schedule": job.schedule, "calls": job.num_calls,
+                           "dispatches": job.num_dispatches,
+                           "bytes": job.num_bytes, "est_latency_s": latency,
+                           "dst_node": dst.node_id})
             # KV now lives on the decode node; the sending_done free below
             # invalidates the prefill-side entry (same as the real cluster)
             self._rehome_prefix(req, dst.node_id, job.dst_blocks)

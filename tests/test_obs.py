@@ -1,0 +1,225 @@
+"""Observability plane: span tracing, trace capture/replay, calibration,
+bench history (``src/repro/obs/``)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import TransportProfile, predicted_ttft_s
+from repro.obs import attach_tracer, read_trace, write_trace
+from repro.obs.calibrate import fit_compute, fit_hardware, fit_transport
+from repro.obs.history import AREAS, check, check_metrics, load, record
+from repro.obs.replay import capture, per_request_stats, replay
+from repro.obs.tracing import (SPAN_NAMES, TRACE_SCHEMA_VERSION, Span,
+                               SpanRecorder, request_record)
+from repro.sim.cluster_sim import ClusterSim
+from repro.sim.hardware import A100
+from repro.sim.workload import SIMULATED, generate
+
+
+@pytest.fixture(scope="module")
+def cfg8b():
+    return get_config("llama31-8b")
+
+
+def _requests(n=10, seed=3):
+    wl = dataclasses.replace(SIMULATED["1k"], num_requests=n)
+    return generate(wl, rps=2.0, seed=seed)
+
+
+# -- span schema / JSONL round-trip ------------------------------------------------
+def test_span_record_roundtrip_drops_none():
+    s = Span(trace_id=7, name="prefill", start_cycle=1.0, end_cycle=3.5,
+             node_id=0, attrs={"prompt_len": 64})
+    rec = s.to_record()
+    assert "start_wall_s" not in rec          # None fields omitted
+    assert Span.from_record(rec) == s
+    assert s.duration_cycles() == 2.5
+    assert s.duration_wall_s() is None
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    rec = SpanRecorder()
+    for i in range(3):
+        rec.emit(i, SPAN_NAMES[i], start_cycle=float(i), end_cycle=i + 1.0,
+                 start_wall_s=0.5 * i, end_wall_s=0.5 * i + 0.1,
+                 node_id=i % 2, attrs={"k": i})
+    reqs = [request_record(i, 0.25 * i, 100 + i, 64) for i in range(3)]
+    path = write_trace(tmp_path / "t.jsonl", rec.spans, reqs,
+                       meta={"system": "flowkv"})
+    trace = read_trace(path)
+    assert trace.schema == TRACE_SCHEMA_VERSION
+    assert trace.meta["system"] == "flowkv"
+    assert trace.requests == reqs
+    assert trace.spans == rec.spans
+    # header must be the first record and carry a supported schema
+    lines = path.read_text().splitlines()
+    assert json.loads(lines[0])["kind"] == "header"
+
+
+def test_read_trace_rejects_bad_schema_and_kind(tmp_path):
+    p = tmp_path / "bad_schema.jsonl"
+    p.write_text('{"kind": "header", "schema": 999}\n')
+    with pytest.raises(ValueError, match="schema"):
+        read_trace(p)
+    p2 = tmp_path / "bad_kind.jsonl"
+    p2.write_text('{"kind": "header", "schema": %d}\n{"kind": "mystery"}\n'
+                  % TRACE_SCHEMA_VERSION)
+    with pytest.raises(ValueError, match="mystery"):
+        read_trace(p2)
+    p3 = tmp_path / "headless.jsonl"
+    p3.write_text('{"kind": "span", "trace_id": 1, "name": "queue"}\n')
+    with pytest.raises(ValueError, match="header"):
+        read_trace(p3)
+
+
+# -- sim tracing ---------------------------------------------------------------------
+def test_sim_emits_lifecycle_spans(cfg8b):
+    sim = ClusterSim(cfg8b, "flowkv", num_prefill=1, num_decode=1)
+    rec = attach_tracer(sim)
+    reqs = _requests()
+    sim.run(reqs, t_max=50_000)
+    by_name = {n: rec.by_name(n) for n in ("queue", "prefill", "transfer",
+                                           "decode")}
+    for name, spans in by_name.items():
+        assert len(spans) == len(reqs), name
+        for s in spans:
+            # sim spans run on the simulated clock only
+            assert s.start_wall_s is None and s.end_wall_s is None
+            assert s.duration_cycles() is not None
+            assert s.duration_cycles() >= 0.0
+    # every request's spans are causally ordered: queue ends where prefill
+    # starts; decode starts at transfer end
+    for r in reqs:
+        spans = {s.name: s for s in rec.for_trace(r.request_id)}
+        assert spans["queue"].end_cycle == spans["prefill"].start_cycle
+        assert spans["transfer"].end_cycle == spans["decode"].start_cycle
+
+
+# -- replay ---------------------------------------------------------------------------
+def test_replay_is_deterministic(cfg8b, tmp_path):
+    reqs = _requests()
+    sim = ClusterSim(cfg8b, "flowkv", num_prefill=1, num_decode=1)
+    path = tmp_path / "cap.jsonl"
+    capture(sim, reqs, path=path, meta={"config": "llama31-8b"})
+    r1 = replay(path, policy="load_aware")
+    r2 = replay(path, policy="load_aware")
+    assert r1["per_request"] == r2["per_request"]
+    assert r1["stats"] == r2["stats"]
+    # and the replay reproduces the ORIGINAL run, not merely itself
+    assert r1["per_request"] == per_request_stats(reqs)
+
+
+def test_replay_policy_changes_schedule_not_workload(cfg8b, tmp_path):
+    reqs = _requests(n=8, seed=5)
+    sim = ClusterSim(cfg8b, "flowkv", num_prefill=2, num_decode=2)
+    path = tmp_path / "cap.jsonl"
+    capture(sim, reqs, path=path, meta={"config": "llama31-8b"})
+    la = replay(path, policy="load_aware")
+    rr = replay(path, policy="round_robin")
+    assert la["stats"]["offered"] == rr["stats"]["offered"] == 8
+    assert la["policy"] == "load_aware" and rr["policy"] == "round_robin"
+    # same request shapes either way
+    for rid, row in la["per_request"].items():
+        assert row["prompt_len"] == rr["per_request"][rid]["prompt_len"]
+
+
+def test_replay_rejects_spans_only_trace(tmp_path):
+    rec = SpanRecorder()
+    rec.emit(1, "queue", start_cycle=0.0, end_cycle=1.0)
+    path = write_trace(tmp_path / "spans_only.jsonl", rec.spans)
+    with pytest.raises(ValueError, match="request"):
+        replay(path)
+
+
+# -- calibration ----------------------------------------------------------------------
+def test_fit_transport_recovers_known_profile():
+    truth = TransportProfile(name="truth", per_call_s=75e-6,
+                             bandwidth_Bps=20e9, fixed_s=3e-4)
+    rng = np.random.RandomState(0)
+    samples = [(int(c), int(b), truth.latency(int(c), int(b)))
+               for c, b in zip(rng.randint(1, 500, 12),
+                               rng.randint(1 << 10, 1 << 28, 12))]
+    fit = fit_transport(samples)
+    assert fit.per_call_s == pytest.approx(truth.per_call_s, rel=1e-6)
+    assert fit.bandwidth_Bps == pytest.approx(truth.bandwidth_Bps, rel=1e-6)
+    assert fit.fixed_s == pytest.approx(truth.fixed_s, rel=1e-6)
+    with pytest.raises(ValueError, match=">= 3"):
+        fit_transport(samples[:2])
+
+
+def test_fit_hardware_recovers_known_coefficients():
+    eff_truth, ovh_truth = 150e9, 2.5e-3
+    samples = [(f, ovh_truth + f / eff_truth)
+               for f in (1e9, 5e9, 2e10, 1e11)]
+    eff, ovh = fit_compute(samples)
+    assert eff == pytest.approx(eff_truth, rel=1e-6)
+    assert ovh == pytest.approx(ovh_truth, rel=1e-6)
+    hw = fit_hardware(samples, base=A100, name="fit")
+    # the fitted profile's prefill_time (== predicted_ttft_s) reproduces
+    # the samples — calibration lands exactly in the controller's formula
+    for f, t in samples:
+        assert hw.prefill_time(f) == pytest.approx(t, rel=1e-6)
+        assert predicted_ttft_s(0.0, f, hw.peak_flops * hw.mfu_prefill,
+                                hw.step_overhead_s) == pytest.approx(t, rel=1e-6)
+
+
+# -- wall-clock request stats (the satellite bugfix) -----------------------------------
+def test_timing_breakdown_has_wall_fields():
+    from repro.serving.request import Request
+    r = Request(prompt_tokens=[1, 2, 3])
+    bd = r.timing_breakdown()
+    for key in ("queue_wall_s", "prefill_wall_s", "transfer_wall_s",
+                "decode_wall_s", "ttft_wall_s", "e2e_wall_s"):
+        assert key in bd and bd[key] is None   # nothing stamped yet
+    r.arrival_wall, r.first_token_wall, r.finish_wall = 1.0, 3.5, 7.25
+    bd = r.timing_breakdown()
+    assert bd["ttft_wall_s"] == 2.5
+    assert bd["e2e_wall_s"] == 6.25
+
+
+# -- bench history ---------------------------------------------------------------------
+def test_history_record_and_check(tmp_path):
+    m = {"flowkv_calls": 1.0, "flowkv_dispatches": 1.0, "flowkv_wall_s": 0.1}
+    record("transfer", m, root=tmp_path)
+    data = load("transfer", root=tmp_path)
+    assert data["baseline"] == m and len(data["entries"]) == 1
+    # identical follow-up: passes
+    record("transfer", dict(m), root=tmp_path)
+    assert check("transfer", root=tmp_path) == []
+    # structural drift: exact metric fails
+    record("transfer", {**m, "flowkv_calls": 2.0}, root=tmp_path)
+    failures = check("transfer", root=tmp_path)
+    assert failures and "flowkv_calls" in failures[0]
+    # wall-clock drift alone: informational, never fails
+    record("transfer", {**m, "flowkv_wall_s": 99.0}, root=tmp_path)
+    assert check("transfer", root=tmp_path) == []
+
+
+def test_history_modes_le_ge():
+    base = {"imbalance_load_aware_goodput": 0.8,
+            "imbalance_load_aware_p95_ttft_s": 10.0}
+    ok = check_metrics("scenarios", base, {
+        "imbalance_load_aware_goodput": 0.79,      # within 2% tolerance
+        "imbalance_load_aware_p95_ttft_s": 10.4})  # within 5%
+    assert ok == []
+    bad = check_metrics("scenarios", base, {
+        "imbalance_load_aware_goodput": 0.7,
+        "imbalance_load_aware_p95_ttft_s": 12.0})
+    assert len(bad) == 2
+    # a metric the baseline never saw is not gated; a missing one is
+    assert check_metrics("scenarios", base,
+                         {"imbalance_load_aware_goodput": 0.8}) != []
+
+
+def test_history_schema_guard(tmp_path):
+    p = tmp_path / "BENCH_transfer.json"
+    p.write_text('{"schema": 999, "area": "transfer"}')
+    with pytest.raises(ValueError, match="schema"):
+        load("transfer", root=tmp_path)
+    with pytest.raises(ValueError, match="unknown area"):
+        record("nonsense", {}, root=tmp_path)
+    assert all(spec.mode in ("exact", "le", "ge", "info")
+               for specs in AREAS.values() for spec in specs.values())

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Perf-trajectory CI gate over the committed BENCH_<area>.json files.
+
+Thin CLI over :mod:`repro.obs.history` (which holds the schema, the
+per-metric gating modes, and the record/check logic — importable from
+tests and benchmarks alike):
+
+* ``--check``     — fail (exit 1) when any area's newest entry regresses
+  against its committed baseline; this is what the CI perf-trajectory job
+  runs after the gated benchmarks append their entries.
+* ``--list``      — print each area's baseline, entry count and newest
+  metrics (the human view of the trajectory).
+* ``--area a,b``  — restrict either mode to a subset of areas.
+
+Run from anywhere: ``PYTHONPATH=src python tools/bench_history.py --check``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import history  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="gate newest entries against committed baselines")
+    ap.add_argument("--list", action="store_true",
+                    help="print the recorded trajectory per area")
+    ap.add_argument("--area", default="",
+                    help=f"comma-separated subset of {sorted(history.AREAS)}")
+    args = ap.parse_args()
+    areas = [a for a in args.area.split(",") if a] or sorted(history.AREAS)
+    for a in areas:
+        if a not in history.AREAS:
+            ap.error(f"unknown area {a!r}; have {sorted(history.AREAS)}")
+
+    if args.list:
+        for area in areas:
+            data = history.load(area)
+            if data is None:
+                print(f"{area}: no history recorded")
+                continue
+            newest = data["entries"][-1] if data["entries"] else None
+            print(f"{area}: {len(data['entries'])} entries")
+            print(f"  baseline: {json.dumps(data['baseline'], sort_keys=True)}")
+            if newest:
+                print(f"  newest ({newest['ts']}): "
+                      f"{json.dumps(newest['metrics'], sort_keys=True)}")
+        if not args.check:
+            return 0
+
+    failures = history.check_all(areas)
+    bad = {a: f for a, f in failures.items() if f}
+    for area, msgs in sorted(bad.items()):
+        for msg in msgs:
+            print(f"REGRESSION {msg}")
+    checked = [a for a in areas if history.load(a) is not None]
+    print(f"checked {len(checked)} area(s) with history "
+          f"({', '.join(checked) or 'none'}): "
+          f"{'FAIL' if bad else 'ok'}")
+    return 1 if (args.check and bad) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,7 +32,7 @@ serving simulator.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +146,92 @@ def predicted_ttft_s(queued_flops: float, new_flops: float,
     formula.
     """
     return overhead_s + (queued_flops + new_flops) / max(effective_flops, 1.0)
+
+
+def predicted_chunked_ttft_s(backlog_tokens: Sequence[float],
+                             new_tokens: float, chunk_tokens: float,
+                             flops_per_token: float, effective_flops: float,
+                             overhead_s: float = 0.0) -> float:
+    """Admission-time TTFT under CHUNKED prefill interleaving.
+
+    The whole-prompt estimator (:func:`predicted_ttft_s`) charges a new
+    request the node's ENTIRE queued prefill backlog — under chunking that
+    is a head-of-line fiction: a long prompt only claims ``chunk_tokens``
+    per cycle, so a short prompt queued behind it interleaves instead of
+    waiting the long prompt out. While this request runs its own
+    ``ceil(new_tokens / chunk_tokens)`` chunks, each queued request can
+    delay it by AT MOST ``own_cycles * chunk_tokens`` of concurrent chunk
+    work — any backlog beyond that executes after this request's first
+    token and must not be priced into its TTFT.
+
+    ``backlog_tokens`` is per-request REMAINING prefill tokens queued ahead
+    (``HybridScheduler.prefill_backlog_tokens``). With ``chunk_tokens``
+    >= every prompt the bound is inactive and this reduces exactly to
+    :func:`predicted_ttft_s` over the same backlog.
+    """
+    chunk = max(1.0, float(chunk_tokens))
+    own_cycles = max(1.0, -(-float(new_tokens) // chunk))   # ceil, >= 1
+    delayed = sum(min(float(b), own_cycles * chunk) for b in backlog_tokens)
+    return predicted_ttft_s(delayed * flops_per_token,
+                            new_tokens * flops_per_token,
+                            effective_flops, overhead_s)
+
+
+def layer_window_overlap(window_latencies: Sequence[float],
+                         window_layer_ends: Sequence[int],
+                         num_layers: int,
+                         prefill_s: float) -> Tuple[float, float]:
+    """Price a layerwise-pipelined transfer: returns ``(exposed_s, hidden_s)``.
+
+    Window w (layers ``[.., window_layer_ends[w])``) becomes sendable when
+    the producing prefill pass finishes its last layer — modeled as the
+    uniform-layer point ``prefill_s * end_w / num_layers`` — and windows
+    serialize on one transport link::
+
+        finish_w = max(finish_{w-1}, ready_w) + latency_w
+
+    The request only WAITS for what spills past the end of prefill:
+    ``exposed = max(0, finish_last - prefill_s)``; the rest of the wire
+    time is hidden behind compute. This one function is the single pricing
+    source for the real cluster (``PDCluster._transfer``), the simulator
+    (``ClusterSim._start_transfer``) and the controller's routing estimate,
+    so load-aware scheduling sees exactly the gain the data plane realizes.
+    With one window ready at the end (``prefill_s * L/L``) nothing hides:
+    ``exposed == total`` — the unoverlapped baseline.
+    """
+    finish = 0.0
+    total = 0.0
+    for end, lat in zip(window_layer_ends, window_latencies):
+        ready = prefill_s * end / max(1, num_layers)
+        finish = max(finish, ready) + lat
+        total += lat
+    exposed = max(0.0, finish - prefill_s)
+    return exposed, total - exposed
+
+
+def estimate_overlapped_transfer_s(profile: TransportProfile, num_bytes: int,
+                                   num_layers: int, layer_window: int,
+                                   prefill_s: float,
+                                   calls_per_window: int = 1) -> float:
+    """Routing-time estimate of the EXPOSED transfer latency under
+    layer-window overlap, without a concrete plan: bytes split evenly over
+    ``ceil(num_layers / layer_window)`` windows, each priced as its own
+    transport call(s), then run through :func:`layer_window_overlap`.
+    ``layer_window <= 0`` (overlap off) prices the classic single call.
+    """
+    if layer_window <= 0 or layer_window >= num_layers:
+        return profile.latency(num_calls=calls_per_window,
+                               num_bytes=int(num_bytes))
+    ends = list(range(layer_window, num_layers, layer_window)) + [num_layers]
+    lats = []
+    prev = 0
+    for end in ends:
+        bytes_w = num_bytes * end // num_layers - num_bytes * prev // num_layers
+        lats.append(profile.latency(num_calls=calls_per_window,
+                                    num_bytes=int(bytes_w)))
+        prev = end
+    exposed, _ = layer_window_overlap(lats, ends, num_layers, prefill_s)
+    return exposed
 
 
 def select_route(same_host: bool, target: str = "gpu") -> TransportProfile:

@@ -12,7 +12,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.costmodel import (TransportProfile, predicted_ttft_s,
+from repro.core.costmodel import (TransportProfile,
+                                  estimate_overlapped_transfer_s,
+                                  predicted_chunked_ttft_s, predicted_ttft_s,
                                   select_route)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.scheduler.load_score import (Thresholds, classify_regime,
@@ -105,8 +107,17 @@ class GlobalController:
                  role_flip: bool = False,
                  node_factory: Optional[Callable[[str], NodeHandle]] = None,
                  admission: Optional[AdmissionPolicy] = None,
-                 actions_enabled: bool = True):
+                 actions_enabled: bool = True,
+                 layer_window: int = 0,
+                 num_layers: int = 1):
         self.model_cost = model_cost
+        # Layerwise transfer/compute overlap: when the runtime streams KV in
+        # per-layer-window sub-plans, routing must price the EXPOSED (post-
+        # prefill) latency, not the full wire time — otherwise load-aware
+        # placement can't see the gain the data plane realizes. layer_window
+        # <= 0 keeps the classic single-call estimate.
+        self.layer_window = layer_window
+        self.num_layers = max(1, num_layers)
         self.thresholds = thresholds or Thresholds()
         self.target = target
         self.heartbeat_timeout = heartbeat_timeout
@@ -505,24 +516,54 @@ class GlobalController:
         a weak card reports longer predicted TTFT for the same backlog.
         ``hit`` overrides the prefix-reuse length (routing evaluates several
         reuse plans per node); default = the node's own resident prefix.
+
+        On a chunked-prefill node the whole-prompt occupancy model is a
+        head-of-line fiction — queued prompts interleave in chunks, so a
+        short request behind a long one must NOT be charged the long
+        prompt's full prefill. ``predicted_chunked_ttft_s`` bounds each
+        queued request's interference at the chunk work that can actually
+        run before this request's first token (and prices REMAINING tokens,
+        not re-counting prefill work already done).
         """
         if hit is None:
             hit, _ = self.shareable_prefix(node.node_id, req)
         sched = node.scheduler
-        backlog_tokens = sum(r.prompt_len for r in sched.prefill.waiting)
-        backlog_tokens += sum(r.prompt_len for r in sched.prefill.running)
         hw = node.hardware
         fpt = self.model_cost.flops_per_token
+        eff = hw.peak_flops * hw.mfu_prefill
+        new_tokens = req.prompt_len - hit
+        if getattr(sched, "chunked_prefill", False):
+            chunk = sched.prefill_chunk_tokens or sched.max_batch_tokens
+            return predicted_chunked_ttft_s(
+                sched.prefill_backlog_tokens(), new_tokens, chunk,
+                fpt, eff, hw.step_overhead_s)
+        backlog_tokens = sum(r.prompt_len for r in sched.prefill.waiting)
+        backlog_tokens += sum(r.prompt_len for r in sched.prefill.running)
         return predicted_ttft_s(
-            backlog_tokens * fpt, (req.prompt_len - hit) * fpt,
-            hw.peak_flops * hw.mfu_prefill, hw.step_overhead_s)
+            backlog_tokens * fpt, new_tokens * fpt, eff, hw.step_overhead_s)
 
     def _transfer_estimate(self, p: NodeHandle, d: NodeHandle, req: Request) -> float:
         """Expected KV transfer latency P->D + a decode-load tiebreak."""
         profile: TransportProfile = select_route(p.host_id == d.host_id, self.target)
         nbytes = self.model_cost.kv_bytes_per_token * (req.prompt_len + 1)
-        # FlowKV's segment allocator keeps requests ~1 segment => 1 call.
-        latency = profile.latency(num_calls=1, num_bytes=int(nbytes))
+        if self.layer_window > 0:
+            # Layer-window streaming: only the wire time that spills past the
+            # producing prefill tail is exposed. The hide window is the LAST
+            # prefill chunk's compute — the window whose layers the final
+            # sub-plans wait on.
+            sched = p.scheduler
+            tail = req.prompt_len
+            if getattr(sched, "chunked_prefill", False):
+                tail = min(tail, sched.prefill_chunk_tokens
+                           or sched.max_batch_tokens)
+            prefill_s = p.hardware.prefill_time(
+                tail * self.model_cost.flops_per_token)
+            latency = estimate_overlapped_transfer_s(
+                profile, int(nbytes), self.num_layers, self.layer_window,
+                prefill_s)
+        else:
+            # FlowKV's segment allocator keeps requests ~1 segment => 1 call.
+            latency = profile.latency(num_calls=1, num_bytes=int(nbytes))
         load_penalty = node_score(self._scored_status(d), "decode")
         return latency * (1.0 + load_penalty)
 

@@ -69,12 +69,19 @@ class HybridScheduler:
 
     def __init__(self, node_id: int, block_manager: BlockManager,
                  max_batch_tokens: int = 8192, max_running: int = 64,
-                 chunked_prefill: bool = True, window: int = 8):
+                 chunked_prefill: bool = True, window: int = 8,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.node_id = node_id
         self.bm = block_manager
         self.max_batch_tokens = max_batch_tokens
         self.max_running = max_running
         self.chunked_prefill = chunked_prefill
+        # Sarathi-style per-request chunk cap: no single prompt may claim
+        # more than this many tokens per cycle, so a long prompt leaves
+        # budget for the short prompts queued behind it instead of hogging
+        # the whole cycle (head-of-line blocking). None = budget-only
+        # chunking (a request may fill the entire cycle budget).
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.prefill = SubScheduler("prefill")
         self.decode = SubScheduler("decode")
         # Role priority: "prefill" (default), "decode", or "both" when the
@@ -168,6 +175,16 @@ class HybridScheduler:
 
     # -- the scheduling cycle ---------------------------------------------------------
     def schedule(self) -> ScheduleDecision:
+        """Emit this cycle's decision.
+
+        Chunked mode is CONTINUOUS BATCHING: both roles schedule every
+        cycle (priority only orders who draws resources first), so decode
+        requests join/leave the running batch between cycles and prefill
+        chunks interleave with decode steps instead of the old lockstep
+        where one prefill-heavy cycle starved the decode batch. With
+        ``chunked_prefill=False`` (the distserve-style baseline) the first
+        role to schedule work wins the whole cycle, as before.
+        """
         self._tick_priority_lease()
         order = {
             "prefill": ("prefill", "decode"),
@@ -180,9 +197,37 @@ class HybridScheduler:
                 self._schedule_prefill(decision)
             else:
                 self._schedule_decode(decision)
-            if decision.kind != "idle" and self.priority != "both":
+            if decision.kind != "idle" and self.priority != "both" \
+                    and not self.chunked_prefill:
                 break
         return decision
+
+    def _chunk_cap(self, budget: int) -> int:
+        """Per-request token cap for this admission (budget ∧ chunk knob)."""
+        if self.prefill_chunk_tokens is None:
+            return budget
+        return min(budget, self.prefill_chunk_tokens)
+
+    def _align_chunk(self, done: int, chunk: int, prompt_len: int,
+                     first: bool = False) -> int:
+        """Round a non-final chunk down to a block boundary.
+
+        ``PagedKVCache.write_prefill(start=...)`` requires block-aligned
+        suffix starts, so every intermediate chunk boundary must land on a
+        multiple of ``block_size`` (``done`` is aligned by induction: prefix
+        hits are capped to full blocks and prior chunks were aligned). The
+        final chunk may be ragged. Returns 0 when the aligned chunk is
+        empty — the request waits for budget next cycle — EXCEPT for the
+        cycle's first prefill admission (``first``), which always gets at
+        least one block: a token budget below ``block_size`` must throttle
+        progress, never starve it (bounded overshoot < block_size tokens).
+        """
+        if done + chunk >= prompt_len:
+            return chunk
+        aligned = chunk - (done + chunk) % self.bm.block_size
+        if aligned <= 0 and first:
+            aligned = min(self.bm.block_size, prompt_len - done)
+        return aligned
 
     def _schedule_prefill(self, decision: ScheduleDecision) -> None:
         budget = self.max_batch_tokens - decision.num_prefill_tokens
@@ -194,16 +239,29 @@ class HybridScheduler:
             remaining = req.prompt_len - done
             if remaining <= 0:
                 continue
-            chunk = min(remaining, budget) if self.chunked_prefill else remaining
+            chunk = min(remaining, self._chunk_cap(budget)) \
+                if self.chunked_prefill else remaining
+            if self.chunked_prefill:
+                chunk = self._align_chunk(done, chunk, req.prompt_len,
+                                          first=not decision.prefill_chunks)
+                if chunk <= 0:
+                    continue   # sub-block budget left: wait for next cycle
             self._admit_prefill(req, chunk, decision)
             budget -= chunk
         # resume swapped next (vLLM semantics), then admit waiting
         while self.prefill.swapped and budget > 0:
             req = self.prefill.swapped[0]
-            need = req.prompt_len - self._progress.get(req.request_id, 0)
-            chunk = min(need, budget) if self.chunked_prefill else need
+            done = self._progress.get(req.request_id, 0)
+            need = req.prompt_len - done
+            chunk = min(need, self._chunk_cap(budget)) \
+                if self.chunked_prefill else need
             if chunk < need and not self.chunked_prefill:
                 break
+            if self.chunked_prefill:
+                chunk = self._align_chunk(done, chunk, req.prompt_len,
+                                          first=not decision.prefill_chunks)
+                if chunk <= 0:
+                    break
             # a spilled prefill holds no blocks — re-allocate before admission
             # (was: admitted without blocks, so a resumed spill would crash)
             if not self.bm.owns(req.request_id):
@@ -246,9 +304,17 @@ class HybridScheduler:
                                             shared_blocks=len(prefix_blocks)):
                     break   # KV pool full — leave in waiting
             new_tokens = req.prompt_len - req.num_cached_prefix_tokens
-            chunk = min(new_tokens, budget) if self.chunked_prefill else new_tokens
+            chunk = min(new_tokens, self._chunk_cap(budget)) \
+                if self.chunked_prefill else new_tokens
             if chunk < new_tokens and not self.chunked_prefill:
                 break
+            if self.chunked_prefill:
+                chunk = self._align_chunk(req.num_cached_prefix_tokens, chunk,
+                                          req.prompt_len,
+                                          first=not decision.prefill_chunks)
+                if chunk <= 0:
+                    break   # sub-block budget: head-of-line waits
+
             self.prefill.waiting.popleft()
             if owned:
                 self.bm.ensure_capacity(req.request_id, req.prompt_len + 1)
@@ -312,6 +378,28 @@ class HybridScheduler:
         req.block_ids = []
         self.decode.swapped.append(req)
         decision.preempted.append(req)
+
+    # -- progress queries (engine + admission estimator) --------------------------------
+    def prefill_tokens_done(self, req: Request) -> int:
+        """Prompt tokens already resident for ``req`` (cached prefix +
+        completed chunks) — the suffix offset the engine's next chunk
+        executes from."""
+        return self._progress.get(req.request_id, req.num_cached_prefix_tokens)
+
+    def prefill_backlog_tokens(self) -> List[int]:
+        """Per-request REMAINING prefill tokens queued on this node (running
+        continuations first, then swapped, then waiting). The admission
+        gate prices these as interleaved chunks, not whole prompts."""
+        out: List[int] = []
+        for req in self.prefill.running:
+            rem = req.prompt_len - self.prefill_tokens_done(req)
+            if rem > 0:
+                out.append(rem)
+        for req in self.prefill.swapped:
+            out.append(req.prompt_len - self._progress.get(req.request_id, 0))
+        for req in self.prefill.waiting:
+            out.append(req.prompt_len - req.num_cached_prefix_tokens)
+        return out
 
     # -- completion callbacks (engine/simulator) ---------------------------------------
     def prefill_progressed(self, req: Request, tokens: int) -> bool:

@@ -148,23 +148,34 @@ class DescriptorTable:
 
 def _lower_descriptors(schedule: Schedule, num_layers: int,
                        src_blocks: Sequence[int],
-                       dst_blocks: Sequence[int]) -> DescriptorTable:
+                       dst_blocks: Sequence[int],
+                       layer_lo: int = 0,
+                       layer_hi: Optional[int] = None) -> DescriptorTable:
     """Expand a plan's block lists into its page-descriptor table.
 
     Row order is schedule-faithful (layerwise/flowkv are block-major, blockwise
     is (layer, k/v)-major) but execution is order-independent: destination
     pages within a plan are disjoint.
+
+    ``layer_lo``/``layer_hi`` restrict the table to the layer window
+    ``[lo, hi)`` — the lowering for a layer-window sub-plan (pipelined
+    transfer/compute overlap). The default covers every layer, and the
+    table's ``num_layers`` is always the count of layers it actually
+    carries, so per-schedule call derivations stay window-faithful.
     """
     s = np.asarray(list(src_blocks), np.int32)
     d = np.asarray(list(dst_blocks), np.int32)
     n = s.shape[0]
-    Lr = num_layers
-    lay_inner = np.repeat(np.arange(Lr, dtype=np.int32), 2)   # (2L,) per block
+    lo = layer_lo
+    hi = num_layers if layer_hi is None else layer_hi
+    Lr = hi - lo
+    layers = np.arange(lo, hi, dtype=np.int32)
+    lay_inner = np.repeat(layers, 2)                          # (2Lr,) per block
     kv_inner = np.tile(np.arange(2, dtype=np.int32), Lr)
     if schedule == "blockwise":
         src_block = np.tile(s, 2 * Lr)
         dst_block = np.tile(d, 2 * Lr)
-        layer = np.repeat(np.arange(Lr, dtype=np.int32), 2 * n)
+        layer = np.repeat(layers, 2 * n)
         kv = np.tile(np.repeat(np.arange(2, dtype=np.int32), n), Lr)
     else:
         src_block = np.repeat(s, 2 * Lr)
@@ -185,15 +196,28 @@ class TransferPlan:
     num_layers: int
     src_blocks: Tuple[int, ...]
     dst_blocks: Tuple[int, ...]
+    # Layer-window sub-plan bounds (transfer/compute overlap): the plan
+    # covers layers [layer_lo, layer_hi). Defaults cover every layer — a
+    # full plan is the layer_lo=0, layer_hi=None degenerate window, and
+    # nothing downstream changes unless split_layer_windows() is used.
+    layer_lo: int = 0
+    layer_hi: Optional[int] = None
 
     @functools.cached_property
     def _descriptors(self) -> DescriptorTable:
         return _lower_descriptors(self.schedule, self.num_layers,
-                                  self.src_blocks, self.dst_blocks)
+                                  self.src_blocks, self.dst_blocks,
+                                  self.layer_lo, self.layer_hi)
 
     def to_descriptors(self) -> DescriptorTable:
         """Lower to the page-descriptor table the fused executor consumes."""
         return self._descriptors
+
+    @property
+    def layer_span(self) -> Tuple[int, int]:
+        """The [lo, hi) layer window this plan carries."""
+        return (self.layer_lo,
+                self.num_layers if self.layer_hi is None else self.layer_hi)
 
     @property
     def num_calls(self) -> int:
@@ -208,6 +232,41 @@ class TransferPlan:
 
     def latency(self, profile: TransportProfile) -> float:
         return profile.latency(self.num_calls, self.total_bytes)
+
+    def split_layer_windows(self, window: int) -> List["TransferPlan"]:
+        """Slice this plan into per-layer-window sub-plans for pipelined
+        transfer/compute overlap (Mooncake-style layerwise KV streaming).
+
+        Each sub-plan covers ``window`` consecutive layers of the SAME
+        block pairs and executes as its own fused descriptor-table
+        dispatch, so window w can be on the wire while layers >= w*window
+        are still prefilling. Bytes partition exactly
+        (``sum(sub.total_bytes) == total_bytes``); transport calls are
+        counted per window, which is precisely the overlap's cost side —
+        more, smaller calls. ``window <= 0`` or >= num_layers (or an empty
+        plan) returns ``[self]`` unchanged.
+        """
+        L = self.num_layers
+        if window <= 0 or window >= L or not self.src_blocks:
+            return [self]
+        out: List[TransferPlan] = []
+        for lo in range(0, L, window):
+            hi = min(lo + window, L)
+            # cumulative-difference split so bytes sum exactly to the total
+            bytes_w = (self.total_bytes * hi // L
+                       - self.total_bytes * lo // L)
+            if self.schedule == "flowkv":
+                # flowkv ops are all-layer runs (layer=None): scale per run
+                ops_w = [dataclasses.replace(
+                    op, num_bytes=op.num_bytes * (hi - lo) // L)
+                    for op in self.ops]
+            else:
+                ops_w = [op for op in self.ops
+                         if op.layer is not None and lo <= op.layer < hi]
+            out.append(dataclasses.replace(
+                self, ops=ops_w, total_bytes=bytes_w,
+                layer_lo=lo, layer_hi=hi))
+        return out
 
 
 class TransferPlanner:

@@ -3,7 +3,8 @@
 Every gated benchmark (``--json``/``--check`` CLI contract) can also append
 its headline metrics to a schema-versioned history file at the repo root —
 ``BENCH_transfer.json``, ``BENCH_decode.json``, ``BENCH_scenarios.json``,
-``BENCH_prefix.json``, ``BENCH_breakdown.json`` — via its ``--history``
+``BENCH_prefix.json``, ``BENCH_breakdown.json``, ``BENCH_chunked.json`` —
+via its ``--history``
 flag. The files are committed, so the repo carries its own perf trajectory:
 each PR's CI run appends one entry, and ``tools/bench_history.py --check``
 fails the build when the newest entry regresses against the committed
@@ -82,6 +83,18 @@ AREAS: Dict[str, Dict[str, MetricSpec]] = {
         "normal_load_aware_goodput": MetricSpec("ge", 0.0),
         "heterogeneous_load_aware_goodput": MetricSpec("ge", 0.02),
         "heterogeneous_starved_nodes": MetricSpec("exact"),
+    },
+    "chunked": {
+        # long-prompt-mix A/B on the deterministic sim (benchmarks/
+        # chunked_prefill.py): chunked+overlap must keep beating lockstep
+        # on p95 TTFT, and layer-window streaming must keep hiding a
+        # meaningful share of transfer wall time.
+        "lockstep_p95_ttft_s": MetricSpec("info"),
+        "chunked_p95_ttft_s": MetricSpec("le", 0.05),
+        "overlap_p95_ttft_s": MetricSpec("le", 0.05),
+        "overlap_p95_speedup": MetricSpec("ge", 0.02),
+        "overlap_hidden_frac": MetricSpec("ge", 0.02),
+        "overlap_windows_per_transfer": MetricSpec("exact"),
     },
     "prefix": {
         "engine_tokens_saved_total": MetricSpec("ge", 0.0),

@@ -32,13 +32,21 @@ import pathlib
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
-TRACE_SCHEMA_VERSION = 1
+TRACE_SCHEMA_VERSION = 2
+
+# Schema history: v1 had the six lifecycle span kinds; v2 (chunked prefill +
+# layerwise overlap) added the fine-grained ``prefill_chunk`` and
+# ``transfer_layer_window`` kinds. v2 is additive, so v1 traces still read.
+SUPPORTED_SCHEMAS = (1, 2)
 
 # The span taxonomy (docs/observability.md). Producers are free to add new
-# names — consumers must treat this as open — but these six are the request
-# lifecycle the replay/calibration tooling understands.
-SPAN_NAMES = ("queue", "admission", "prefill", "transfer", "decode",
-              "prefix_fetch")
+# names — consumers must treat this as open — but these are the request
+# lifecycle the replay/calibration tooling understands. ``prefill_chunk``
+# and ``transfer_layer_window`` are sub-spans of ``prefill`` / ``transfer``:
+# one per interleaved prompt chunk, one per layer-window sub-plan on the
+# wire, so captured traces show the overlap instead of one opaque span.
+SPAN_NAMES = ("queue", "admission", "prefill", "prefill_chunk", "transfer",
+              "transfer_layer_window", "decode", "prefix_fetch")
 
 
 @dataclasses.dataclass
@@ -187,10 +195,10 @@ def read_trace(path: Union[str, pathlib.Path]) -> Trace:
                         f"{path}: first record must be the trace header, "
                         f"got kind={kind!r}")
                 schema = int(rec.get("schema", -1))
-                if schema != TRACE_SCHEMA_VERSION:
+                if schema not in SUPPORTED_SCHEMAS:
                     raise ValueError(
-                        f"{path}: trace schema {schema} != supported "
-                        f"{TRACE_SCHEMA_VERSION}")
+                        f"{path}: trace schema {schema} not in supported "
+                        f"{SUPPORTED_SCHEMAS}")
                 trace.meta = {k: v for k, v in rec.items() if k != "kind"}
             elif kind == "request":
                 trace.requests.append(rec)

@@ -17,7 +17,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple, Union
 
-from repro.core.costmodel import select_route
+from repro.core.costmodel import layer_window_overlap, select_route
 from repro.core.scheduler.global_controller import (AdmissionDecision,
                                                     AdmissionPolicy,
                                                     GlobalController, ModelCost,
@@ -35,9 +35,14 @@ class TransferRecord:
     schedule: str
     num_calls: int
     num_bytes: int
-    est_latency_s: float
+    est_latency_s: float        # EXPOSED latency (post-prefill wire time)
     num_dispatches: int = 0
     kind: str = "kv"            # "kv" (P->D cache move) | "prefix_fetch"
+    # wire time hidden behind the producer's prefill compute by layer-window
+    # streaming (0.0 on the unoverlapped path); est_latency_s + hidden_s is
+    # the total time on the wire
+    hidden_s: float = 0.0
+    num_windows: int = 1
 
 
 class PDCluster:
@@ -50,10 +55,18 @@ class PDCluster:
                  max_batch_tokens: int = 2048, hosts: Optional[Dict[int, int]] = None,
                  role_flip: bool = False, paged_decode: str = "auto",
                  admission: Optional[AdmissionPolicy] = None,
-                 prefix_reuse: bool = True, tracer=None):
+                 prefix_reuse: bool = True, tracer=None,
+                 chunked_prefill: bool = True,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 layer_window: int = 0):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
+        # Layerwise transfer/compute overlap: layer_window > 0 streams each
+        # P->D transfer as ceil(L / layer_window) per-layer-window sub-plans
+        # (own fused dispatch each), so completed layers' KV is on the wire
+        # while later layers still prefill. 0 = classic one-plan transfer.
+        self.layer_window = layer_window
         # Optional repro.obs.tracing.SpanRecorder (also settable post-hoc
         # via repro.obs.tracing.attach_tracer): the cluster emits queue /
         # transfer / decode / prefix_fetch spans, engines emit prefill,
@@ -70,9 +83,12 @@ class PDCluster:
             kv_bytes_per_token=float(cfg.kv_bytes_per_token() or 1024),
             weight_bytes=2.0 * cfg.num_params(),
         )
+        n_attn = cfg.num_attention_layers() or cfg.num_layers
         self.controller = GlobalController(model_cost, cfg.block_size, target=target,
                                            role_flip=role_flip,
-                                           admission=admission)
+                                           admission=admission,
+                                           layer_window=layer_window,
+                                           num_layers=n_attn)
         self.controller.tracer = tracer
         self.clock = 0.0
         self.submitted = 0
@@ -86,7 +102,9 @@ class PDCluster:
             role = "prefill" if i < num_prefill else "decode"
             engine = NodeEngine(i, cfg, params, num_blocks=num_blocks,
                                 allocator=allocator, max_batch_tokens=max_batch_tokens,
-                                paged_decode=paged_decode)
+                                paged_decode=paged_decode,
+                                chunked_prefill=chunked_prefill,
+                                prefill_chunk_tokens=prefill_chunk_tokens)
             engine.tracer = tracer
             self.engines[i] = engine
             host = (hosts or {}).get(i, i)
@@ -172,11 +190,19 @@ class PDCluster:
             self.controller.nodes[dst.node_id].host_id, self.target)
         backend = backend_for_engine(src, self.transfer_schedule)
         job = backend.plan(req, src, dst)
-        backend.execute(job, src, dst)
-        latency = backend.price(job, profile)
+        hidden = 0.0
+        windows = 1
+        if self.layer_window > 0 and job.plan is not None and \
+                job.plan.num_layers > self.layer_window:
+            latency, hidden = self._transfer_windowed(req, src, dst, job,
+                                                      profile)
+            windows = -(-job.plan.num_layers // self.layer_window)
+        else:
+            backend.execute(job, src, dst)
+            latency = backend.price(job, profile)
         self.transfers.append(TransferRecord(
             req.request_id, job.schedule, job.num_calls, job.num_bytes, latency,
-            job.num_dispatches))
+            job.num_dispatches, hidden_s=hidden, num_windows=windows))
         req.transfer_end = self.clock + latency
         req.transfer_end_wall = time.monotonic()
         req.transfer_calls = job.num_calls
@@ -190,6 +216,7 @@ class PDCluster:
                 attrs={"schedule": job.schedule, "calls": job.num_calls,
                        "dispatches": job.num_dispatches,
                        "bytes": job.num_bytes, "est_latency_s": latency,
+                       "hidden_s": hidden, "windows": windows,
                        "dst_node": dst.node_id})
         # The prompt's KV now lives on the DECODE node; sending_done below
         # frees the prefill-side blocks (and invalidates their entries), so
@@ -197,6 +224,58 @@ class PDCluster:
         self._rehome_prefix(req, dst.node_id, list(job.dst_blocks))
         src.scheduler.sending_done(req)
         dst.scheduler.enqueue_decode(req)
+
+    def _prefill_tail_s(self, req: Request) -> float:
+        """Compute window available for hiding transfer: the duration of
+        this request's FINAL prefill chunk on its prefill node (the pass
+        whose early layers' KV the first sub-plans ship). Chunking shrinks
+        it — the real trade-off: smaller chunks cut queueing TTFT but leave
+        less compute to hide wire time behind."""
+        tokens = req.last_prefill_chunk_tokens or req.prompt_len
+        hw = self.controller.nodes[req.prefill_node].hardware
+        return hw.prefill_time(
+            tokens * self.controller.model_cost.flops_per_token)
+
+    def _transfer_windowed(self, req: Request, src: NodeEngine,
+                           dst: NodeEngine, job, profile) -> Tuple[float, float]:
+        """Execute one P->D transfer as per-layer-window sub-plans (each its
+        own fused descriptor-table dispatch) and price the pipeline:
+        window w goes on the wire as soon as its layers finish prefilling,
+        so only the spill past the end of prefill is exposed latency.
+        Returns ``(exposed_s, hidden_s)``; mutates ``job``'s call/dispatch
+        counts to the windowed totals (more, smaller calls — the cost side
+        of overlap, priced honestly)."""
+        subs = job.plan.split_layer_windows(self.layer_window)
+        engine_t = TransferEngine(src.kv.spec, dst.kv.spec)
+        lats = []
+        for sub in subs:
+            dst.kv.import_plan(engine_t, sub, src.kv.pool)
+            lats.append(sub.latency(profile))
+        job.num_dispatches = engine_t.num_dispatches
+        job.num_calls = sum(sub.num_calls for sub in subs)
+        L = job.plan.num_layers
+        prefill_s = self._prefill_tail_s(req)
+        ends = [sub.layer_span[1] for sub in subs]
+        exposed, hidden = layer_window_overlap(lats, ends, L, prefill_s)
+        if self.tracer is not None:
+            # Per-window spans on the notional [clock - prefill_s, clock]
+            # prefill tail: windows that ran during compute visibly precede
+            # the parent transfer span's start — that's the overlap.
+            t0 = self.clock - prefill_s
+            finish = 0.0
+            wall = time.monotonic()
+            for sub, lat in zip(subs, lats):
+                lo, hi = sub.layer_span
+                start = max(finish, prefill_s * hi / L)
+                finish = start + lat
+                self.tracer.emit(
+                    req.request_id, "transfer_layer_window",
+                    start_cycle=t0 + start, end_cycle=t0 + finish,
+                    start_wall_s=wall, end_wall_s=wall, node_id=src.node_id,
+                    attrs={"layer_lo": lo, "layer_hi": hi,
+                           "bytes": sub.total_bytes, "est_latency_s": lat,
+                           "hidden": finish <= prefill_s})
+        return exposed, hidden
 
     def _rehome_prefix(self, req: Request, node_id: int,
                        blocks: List[int]) -> None:
@@ -382,6 +461,8 @@ class PDCluster:
         lat = [t.est_latency_s for t in kv_xfers]
         calls = [t.num_calls for t in kv_xfers]
         disp = [t.num_dispatches for t in kv_xfers]
+        hidden = sum(t.hidden_s for t in kv_xfers)
+        wire = hidden + sum(lat)
         ttfts = [t for t in (r.ttft() for r in self.finished) if t is not None]
         d_steps = sum(e.decode_steps for e in self.engines.values())
         d_disp = sum(e.decode_dispatches for e in self.engines.values())
@@ -403,6 +484,10 @@ class PDCluster:
             "mean_transfer_s": sum(lat) / len(lat) if lat else 0.0,
             "mean_transfer_calls": sum(calls) / len(calls) if calls else 0.0,
             "mean_transfer_dispatches": sum(disp) / len(disp) if disp else 0.0,
+            # layer-window overlap: wire time hidden behind prefill compute
+            # (est_latency_s above is the EXPOSED remainder)
+            "transfer_hidden_s": hidden,
+            "transfer_hidden_frac": hidden / wire if wire else 0.0,
             "mean_ttft_cycles": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             # decode data plane: dispatches per cycle is the zero-gather
             # invariant (1.0 on the paged-kernel path, O(batch) on the oracle)

@@ -82,7 +82,8 @@ class NodeEngine:
     def __init__(self, node_id: int, cfg: ModelConfig, params,
                  num_blocks: int = 256, allocator: str = "flowkv",
                  max_batch_tokens: int = 2048, max_model_len: int = 512,
-                 paged_decode: str = "auto"):
+                 paged_decode: str = "auto", chunked_prefill: bool = True,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.node_id = node_id
         self.cfg = cfg
         self.model: Model = get_model(cfg)
@@ -98,8 +99,16 @@ class NodeEngine:
             self.kv = None
             bm = BlockManager(num_blocks, cfg.block_size, allocator)
         self.states: Dict[int, Any] = {}        # request_id -> cache pytree (state path)
-        self.scheduler = HybridScheduler(node_id, bm,
-                                         max_batch_tokens=max_batch_tokens)
+        # Chunked prefill needs the suffix data plane: an intermediate chunk
+        # is exactly a suffix prefill (q_offset = tokens done) over the
+        # paged pool. State families and windowed-attention configs have no
+        # suffix kernel, so their scheduler runs whole-prompt admission.
+        self.supports_chunked_prefill = \
+            self.paged and self.model.prefill_suffix is not None
+        self.scheduler = HybridScheduler(
+            node_id, bm, max_batch_tokens=max_batch_tokens,
+            chunked_prefill=chunked_prefill and self.supports_chunked_prefill,
+            prefill_chunk_tokens=prefill_chunk_tokens)
         # -- spill path (decode memory pressure) --------------------------------------
         # request_id -> (k, v, length) saved host-side when the scheduler
         # preempts a decode request; restored into fresh blocks on resume so
@@ -155,9 +164,19 @@ class NodeEngine:
                     now: Optional[float] = None) -> List[Request]:
         """Execute the prefill batch; returns requests that finished prefill.
 
-        The first output token is produced HERE (prefill's last forward
-        emits it), so this is also where TTFT is stamped when a clock is
-        supplied — not at transfer time.
+        Honors the scheduler's per-request CHUNK budget
+        (``decision.prefill_chunks``): an intermediate chunk runs as a
+        suffix prefill — prefix K/V gathered from the paged pool, the
+        chunk's tokens forwarded at ``q_offset = tokens_done``, the new
+        pages written back at ``start = tokens_done`` — which is
+        bit-identical to the monolithic forward over the same positions
+        (tests/test_chunked_prefill.py). A chunk that starts at 0 and
+        covers the whole prompt takes the monolithic path, so unchunked
+        behavior is byte-for-byte the old code.
+
+        The first output token is produced by the FINAL chunk (prefill's
+        last forward emits it), so this is also where TTFT is stamped when
+        a clock is supplied — not at transfer time.
         """
         done: List[Request] = []
         for req in decision.prefill_batch:   # simple per-request prefill (no padding waste)
@@ -165,39 +184,62 @@ class NodeEngine:
                 req.prefill_start = now
             if req.prefill_start_wall is None:
                 req.prefill_start_wall = time.monotonic()
+            offset = self.scheduler.prefill_tokens_done(req)
+            chunk = decision.prefill_chunks.get(
+                req.request_id, req.prompt_len - offset)
+            chunk = min(chunk, req.prompt_len - offset)
+            if chunk <= 0:
+                continue
+            final = offset + chunk == req.prompt_len
+            if final:
+                req.last_prefill_chunk_tokens = chunk
             cached = req.num_cached_prefix_tokens if self.supports_prefix_reuse else 0
-            if cached > 0:
-                # Prefix-cache hit: the matched prefix's blocks are already
-                # in this request's table (shared ref-counted, or landed by
-                # a remote fetch). Forward ONLY prompt[cached:], attending
-                # over the resident prefix KV, and write only the suffix
-                # pages — the hit skips real compute, not just accounting.
-                k_pre, v_pre = self.kv.gather_prefix(req.request_id, cached)
-                tokens = jnp.asarray([req.prompt_tokens[cached:]], jnp.int32)
+            chunk_wall = time.monotonic()
+            if offset > 0:
+                # Suffix chunk: resident prefix = cached-prefix blocks
+                # (shared ref-counted or landed by a remote fetch) plus any
+                # previously-executed chunks' pages. Forward ONLY
+                # prompt[offset:offset+chunk], attending over the resident
+                # K/V, and write only this chunk's pages — a prefix-cache
+                # hit skips real compute, a chunk continuation resumes it.
+                k_pre, v_pre = self.kv.gather_prefix(req.request_id, offset)
+                tokens = jnp.asarray(
+                    [req.prompt_tokens[offset:offset + chunk]], jnp.int32)
                 logits, cache = self.model.prefill_suffix(
                     self.params, {"tokens": tokens},
                     k_pre[:, None], v_pre[:, None])
                 self.kv.write_prefill(req.request_id, cache["k"][:, 0],
-                                      cache["v"][:, 0],
-                                      req.prompt_len - cached, start=cached)
-                self.prefix_hits += 1
-                self.prefix_tokens_reused += cached
+                                      cache["v"][:, 0], chunk, start=offset)
+                if offset == cached and cached > 0:
+                    # first executed chunk of a prefix-hit request
+                    self.prefix_hits += 1
+                    self.prefix_tokens_reused += cached
             else:
-                tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
+                tokens = jnp.asarray([req.prompt_tokens[:chunk]], jnp.int32)
                 logits, cache = self.model.prefill(self.params, {"tokens": tokens})
                 if self.paged:
                     self.kv.write_prefill(req.request_id, cache["k"][:, 0],
-                                          cache["v"][:, 0], req.prompt_len)
+                                          cache["v"][:, 0], chunk)
                 else:
                     self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
-            req.output_tokens.append(int(jnp.argmax(logits[0])))
-            executed = req.prompt_len - cached
-            self.prefill_tokens_computed += executed
+            if final:
+                # only the last chunk's last position is the real next-token
+                # distribution; intermediate chunks' logits are discarded
+                req.output_tokens.append(int(jnp.argmax(logits[0])))
+            self.prefill_tokens_computed += chunk
+            if self.tracer is not None:
+                self.tracer.emit(
+                    req.request_id, "prefill_chunk",
+                    start_cycle=now, end_cycle=now,
+                    start_wall_s=chunk_wall, end_wall_s=time.monotonic(),
+                    node_id=self.node_id,
+                    attrs={"offset": offset, "tokens": chunk,
+                           "prompt_len": req.prompt_len, "final": final})
             # report ONLY the tokens this cycle actually forwarded:
             # prefill_progressed seeds progress at num_cached_prefix_tokens,
             # so reporting prompt_len here double-counted the hit and let the
             # chunked-prefill budget diverge from executed work
-            if self.scheduler.prefill_progressed(req, executed):
+            if self.scheduler.prefill_progressed(req, chunk):
                 if now is not None and req.first_token_time is None:
                     req.first_token_time = now
                 wall = time.monotonic()

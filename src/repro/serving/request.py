@@ -97,6 +97,9 @@ class Request:
     # --- transfer data-plane counters (set when the KV transfer runs) ----------
     transfer_calls: Optional[int] = None        # transport calls priced
     transfer_dispatches: Optional[int] = None   # fused kernel dispatches
+    # tokens in the FINAL prefill chunk (== prompt_len when unchunked): the
+    # compute window layer-window transfer overlap can hide behind
+    last_prefill_chunk_tokens: Optional[int] = None
 
     # --- decode data-plane counters (accumulated per decode cycle) --------------
     decode_steps: int = 0          # decode cycles this request participated in

@@ -30,7 +30,8 @@ from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.block_manager import BlockManager, OutOfBlocksError
 from repro.core.costmodel import (MOONCAKE_RDMA, NCCL_ENI, IPC,
                                   VLLM_MERGE_ENI, VLLM_MERGE_INTRA,
-                                  TransportProfile, select_route)
+                                  TransportProfile, layer_window_overlap,
+                                  select_route)
 from repro.core.layout import KVCacheSpec
 from repro.core.transfer import TransferPlanner, get_backend
 from repro.models.common import ModelConfig
@@ -101,21 +102,29 @@ def system_spec(kind: str) -> SystemSpec:
 class SimNode:
     def __init__(self, node_id: int, role: str, hw: HardwareProfile,
                  spec: SystemSpec, kv_spec: KVCacheSpec, cost: ModelCost,
-                 max_batch_tokens: int):
+                 max_batch_tokens: int, chunked_prefill: Optional[bool] = None,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.node_id = node_id
         self.role = role
         self.hw = hw
         self.spec = spec
         self.kv_spec = kv_spec
         self.cost = cost
+        # chunked_prefill override (None = the system spec's baseline bit);
+        # SAME HybridScheduler knobs as the real NodeEngine, so chunk-size
+        # semantics cannot drift between sim and engine (parity-tested).
+        chunked = spec.chunked_prefill if chunked_prefill is None \
+            else chunked_prefill
+        self.chunked_prefill = chunked
         self.bm = BlockManager(kv_spec.num_blocks, kv_spec.block_size, spec.allocator)
         self.scheduler = HybridScheduler(
             node_id, self.bm,
-            max_batch_tokens=max_batch_tokens if spec.chunked_prefill else 1 << 30,
-            chunked_prefill=spec.chunked_prefill,
+            max_batch_tokens=max_batch_tokens if chunked else 1 << 30,
+            chunked_prefill=chunked,
+            prefill_chunk_tokens=prefill_chunk_tokens,
             # distserve-style: whole-prompt prefill, one prompt at a time
             # (no sarathi chunking) — reproduces the long-prompt saturation
-            max_running=1 if (role == "prefill" and not spec.chunked_prefill) else 64,
+            max_running=1 if (role == "prefill" and not chunked) else 64,
         )
         if spec.colocated:
             self.scheduler.set_priority("both")
@@ -146,11 +155,21 @@ class ClusterSim:
                  routing: Optional[str] = None,
                  role_flip: bool = False,
                  admission: Optional[AdmissionPolicy] = None,
-                 prefix_reuse: Optional[bool] = None):
+                 prefix_reuse: Optional[bool] = None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 layer_window: int = 0):
         self.cfg = cfg
         self.spec = system_spec(kind)
         self.kind = kind
         self.same_host = same_host
+        # chunked_prefill / prefill_chunk_tokens override the system spec's
+        # baseline bit per run (A/B: lockstep vs sarathi-chunked on the SAME
+        # system); layer_window > 0 prices layerwise transfer/compute
+        # overlap exactly like PDCluster._transfer_windowed does.
+        self.chunked_override = chunked_prefill
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.layer_window = layer_window
         # Optional repro.obs.tracing.SpanRecorder (attach_tracer). The sim
         # emits the same span taxonomy as PDCluster on the SIMULATED clock
         # (start_cycle/end_cycle in sim seconds); wall stamps stay None —
@@ -181,7 +200,9 @@ class ClusterSim:
                                            target="gpu",
                                            role_flip=role_flip,
                                            admission=admission,
-                                           actions_enabled=not passive)
+                                           actions_enabled=not passive,
+                                           layer_window=layer_window,
+                                           num_layers=n_attn)
         # deferred admissions re-routed inside controller.step need their
         # target node's event loop poked (event-driven runtime)
         self.controller.on_admit = lambda req: self._poke(req.prefill_node)
@@ -206,7 +227,8 @@ class ClusterSim:
         self.prefix_reuse = prefix_reuse
         for i, (role, hw) in enumerate(roles):
             node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
-                           max_batch_tokens)
+                           max_batch_tokens, chunked_prefill=chunked_prefill,
+                           prefill_chunk_tokens=prefill_chunk_tokens)
             self.nodes[i] = node
             self.controller.register_node(NodeHandle(
                 node_id=i, role=role, host_id=0 if same_host else i,
@@ -227,9 +249,10 @@ class ClusterSim:
         self.rejected: List[Request] = []
         self.offered = 0
         self._rr = 0   # round-robin cursor
-        self.transfer_latencies: List[float] = []
+        self.transfer_latencies: List[float] = []   # EXPOSED latencies
         self.transfer_calls: List[int] = []
         self.transfer_dispatches: List[int] = []
+        self.transfer_hidden: List[float] = []      # wire time hidden by overlap
         self.prefix_hits = 0               # prefills that reused a prefix
         self.prefix_tokens_reused = 0      # prompt tokens never priced
         self.prefix_fetches = 0            # remote fetches executed
@@ -430,6 +453,18 @@ class ClusterSim:
         # prefill completions
         for req in list(decision.prefill_batch):
             chunk = decision.prefill_chunks.get(req.request_id, req.prompt_len)
+            offset = node.scheduler.prefill_tokens_done(req)
+            executed = min(chunk, req.prompt_len - offset)
+            if self.tracer is not None and executed > 0:
+                # same zero-width per-chunk span the real engine emits, so
+                # sim and engine chunk sequences are directly comparable
+                # (tests/test_chunked_prefill.py parity test)
+                self.tracer.emit(
+                    req.request_id, "prefill_chunk",
+                    start_cycle=now, end_cycle=now, node_id=node_id,
+                    attrs={"offset": offset, "tokens": executed,
+                           "prompt_len": req.prompt_len,
+                           "final": offset + executed == req.prompt_len})
             if node.scheduler.prefill_progressed(req, chunk):
                 req.prefill_end = now
                 req.output_tokens.append(0)   # first token (virtual)
@@ -461,6 +496,10 @@ class ClusterSim:
                                         node.bm.get(req.request_id))
                 else:
                     node.scheduler.mark_sending(req)
+                    # the final chunk's compute is the window layer-wise
+                    # transfer overlap hides behind (same stamp the real
+                    # engine records in run_prefill)
+                    req.last_prefill_chunk_tokens = chunk
                     self._start_transfer(req, now)
         # decode completions (one token per request per cycle)
         for req in list(decision.decode_batch):
@@ -524,14 +563,49 @@ class ClusterSim:
         profile = (self.spec.transfer_intra if self.same_host
                    else self.spec.transfer_inter)
         latency = backend.price(job, profile)
+        hidden = 0.0
+        windows = 1
+        if self.layer_window > 0 and job.plan is not None and \
+                job.plan.num_layers > self.layer_window:
+            # Layer-window overlap, priced EXACTLY like the real cluster
+            # (PDCluster._transfer_windowed): per-window sub-plan latencies
+            # through the shared pipeline recurrence; only the spill past
+            # the producing prefill tail is exposed.
+            subs = job.plan.split_layer_windows(self.layer_window)
+            lats = [sub.latency(profile) for sub in subs]
+            ends = [sub.layer_span[1] for sub in subs]
+            L = job.plan.num_layers
+            prefill_s = src.prefill_duration(
+                req.last_prefill_chunk_tokens or req.prompt_len)
+            latency, hidden = layer_window_overlap(lats, ends, L, prefill_s)
+            job.num_calls = sum(sub.num_calls for sub in subs)
+            job.num_dispatches = sum(sub.num_dispatches for sub in subs)
+            windows = len(subs)
+            if self.tracer is not None:
+                t0 = now - prefill_s
+                finish = 0.0
+                for sub, lat in zip(subs, lats):
+                    lo, hi = sub.layer_span
+                    start_rel = max(finish, prefill_s * hi / L)
+                    finish = start_rel + lat
+                    self.tracer.emit(
+                        req.request_id, "transfer_layer_window",
+                        start_cycle=t0 + start_rel, end_cycle=t0 + finish,
+                        node_id=src.node_id,
+                        attrs={"layer_lo": lo, "layer_hi": hi,
+                               "bytes": sub.total_bytes,
+                               "est_latency_s": lat,
+                               "hidden": finish <= prefill_s})
         req.transfer_start = now
         req.transfer_calls = job.num_calls
         req.transfer_dispatches = job.num_dispatches
         self.transfer_latencies.append(latency)
         self.transfer_calls.append(job.num_calls)
         self.transfer_dispatches.append(job.num_dispatches)
+        self.transfer_hidden.append(hidden)
         # sender-side compute blocked for a schedule-dependent share of the
-        # transfer (per-call kernel contention)
+        # EXPOSED transfer (per-call kernel contention; hidden windows ran
+        # concurrently with compute that already paid for them)
         src.busy_until = max(src.busy_until, now) + \
             self.spec.transfer_blocking * latency
 
@@ -545,6 +619,7 @@ class ClusterSim:
                     attrs={"schedule": job.schedule, "calls": job.num_calls,
                            "dispatches": job.num_dispatches,
                            "bytes": job.num_bytes, "est_latency_s": latency,
+                           "hidden_s": hidden, "windows": windows,
                            "dst_node": dst.node_id})
             # KV now lives on the decode node; the sending_done free below
             # invalidates the prefill-side entry (same as the real cluster)
@@ -597,5 +672,14 @@ class ClusterSim:
             "mean_transfer_dispatches": (
                 sum(self.transfer_dispatches) / len(self.transfer_dispatches)
                 if self.transfer_dispatches else 0.0),
+            # layer-window overlap: wire time hidden behind prefill compute;
+            # mean_transfer_s above is the EXPOSED remainder
+            "transfer_hidden_s": sum(self.transfer_hidden),
+            "transfer_hidden_frac": (
+                sum(self.transfer_hidden)
+                / (sum(self.transfer_hidden) + sum(self.transfer_latencies))
+                if self.transfer_hidden and
+                (sum(self.transfer_hidden) + sum(self.transfer_latencies)) > 0
+                else 0.0),
             "events": len(self.controller.events),
         }

@@ -75,6 +75,30 @@ def test_read_trace_rejects_bad_schema_and_kind(tmp_path):
         read_trace(p3)
 
 
+def test_trace_schema_v1_still_reads(tmp_path):
+    # v2 added span kinds only — pre-existing v1 captures must keep reading
+    p = tmp_path / "v1.jsonl"
+    p.write_text('{"kind": "header", "schema": 1}\n'
+                 '{"kind": "span", "trace_id": 1, "name": "prefill", '
+                 '"start_cycle": 0.0, "end_cycle": 1.0}\n')
+    trace = read_trace(p)
+    assert trace.schema == 1
+    assert len(trace.spans) == 1
+
+
+def test_chunk_and_layer_window_span_kinds_roundtrip(tmp_path):
+    assert "prefill_chunk" in SPAN_NAMES
+    assert "transfer_layer_window" in SPAN_NAMES
+    rec = SpanRecorder()
+    rec.emit(1, "prefill_chunk", start_cycle=0.0, end_cycle=1.0, node_id=0,
+             attrs={"offset": 0, "tokens": 32, "prompt_len": 96,
+                    "final": False})
+    rec.emit(1, "transfer_layer_window", start_cycle=0.5, end_cycle=0.9,
+             node_id=0, attrs={"layer_lo": 0, "layer_hi": 8, "hidden": True})
+    path = write_trace(tmp_path / "t2.jsonl", rec.spans)
+    assert read_trace(path).spans == rec.spans
+
+
 # -- sim tracing ---------------------------------------------------------------------
 def test_sim_emits_lifecycle_spans(cfg8b):
     sim = ClusterSim(cfg8b, "flowkv", num_prefill=1, num_decode=1)
@@ -96,6 +120,34 @@ def test_sim_emits_lifecycle_spans(cfg8b):
         spans = {s.name: s for s in rec.for_trace(r.request_id)}
         assert spans["queue"].end_cycle == spans["prefill"].start_cycle
         assert spans["transfer"].end_cycle == spans["decode"].start_cycle
+
+
+def test_sim_emits_layer_window_spans(cfg8b):
+    sim = ClusterSim(cfg8b, "flowkv", num_prefill=1, num_decode=1,
+                     same_host=False, layer_window=8)
+    rec = attach_tracer(sim)
+    reqs = _requests(n=4, seed=9)
+    sim.run(reqs, t_max=50_000)
+    n_layers = sim.kv_spec.num_layers
+    windows_per_xfer = -(-n_layers // 8)
+    wspans = rec.by_name("transfer_layer_window")
+    assert len(wspans) == windows_per_xfer * len(rec.by_name("transfer"))
+    for r in reqs:
+        ws = sorted((s for s in rec.for_trace(r.request_id)
+                     if s.name == "transfer_layer_window"),
+                    key=lambda s: s.attrs["layer_lo"])
+        xfer = [s for s in rec.for_trace(r.request_id)
+                if s.name == "transfer"][0]
+        # windows tile the layer axis and the last window lands exactly at
+        # the parent transfer span's end (the exposed remainder)
+        assert ws[0].attrs["layer_lo"] == 0
+        assert ws[-1].attrs["layer_hi"] == n_layers
+        for a, b in zip(ws, ws[1:]):
+            assert a.attrs["layer_hi"] == b.attrs["layer_lo"]
+        assert ws[-1].end_cycle == pytest.approx(xfer.end_cycle)
+        # overlap is real: at least one window fully hidden behind prefill
+        assert any(s.attrs["hidden"] for s in ws)
+        assert xfer.attrs["hidden_s"] > 0.0
 
 
 # -- replay ---------------------------------------------------------------------------

@@ -1,0 +1,259 @@
+"""Gated chaos benchmark: fault tolerance of the serving plane.
+
+Two parts, both deterministic:
+
+1. **Sim A/B** — the ``failure`` scenario (node crash + flaky/corrupting
+   transfers + degraded bandwidth, ``sim/scenarios.py``) against its
+   fault-free twin under ``load_aware`` routing. The gate is Mooncake-style
+   goodput under chaos staying a bounded fraction of fault-free goodput,
+   with every offered request terminating and zero leaked KV blocks.
+
+2. **Real-cluster chaos** — a smoke-sized model on :class:`PDCluster` with
+   a decode node killed mid-generation plus one corrupted transfer. Every
+   request must finish with tokens bit-identical to a monolithic greedy
+   reference (token-exact recovery: the emitted prefix is teacher-forced
+   through the replacement node's prefill), each streaming handle must see
+   every token exactly once, and the block audit must come back clean.
+
+CLI (CI contract, same as the other gated benchmarks)::
+
+    PYTHONPATH=src python -m benchmarks.fault_tolerance --json --check
+    PYTHONPATH=src python -m benchmarks.fault_tolerance --history
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.faults import FaultSpec
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.obs import history
+from repro.serving.api import FlowKVClient
+from repro.serving.cluster import PDCluster
+from repro.serving.request import SamplingParams
+from repro.sim.scenarios import get_scenario
+
+MODES = ("sim", "cluster")
+ROUTING = "load_aware"
+
+# real-cluster chaos shape (see tests/test_fault_tolerance.py for the
+# per-fault unit variants; this is the combined smoke)
+NUM_REQUESTS = 4
+NEW_TOKENS = 10
+CRASH_AT = 4.0          # mid-decode for this workload (~9 fault-free cycles)
+CRASH_NODE = 1          # a decode node (1 prefill + 2 decode below)
+HEARTBEAT_TIMEOUT = 2.0
+
+
+def _prompts(cfg, n: int = NUM_REQUESTS, seed: int = 5) -> List[List[int]]:
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(0, cfg.vocab_size, size=rng.randint(5, 30)))
+            for _ in range(n)]
+
+
+def bench_sim() -> Dict[str, float]:
+    """Failure scenario vs its fault-free twin: goodput ratio + audits."""
+    sc = get_scenario("failure")
+    chaos = sc.run(ROUTING)
+    clean = dataclasses.replace(sc, faults=()).run(ROUTING)
+    unfinished = (chaos["offered"] - chaos["finished"] - chaos["rejected"])
+    return {
+        "goodput_faulty": chaos["goodput"],
+        "goodput_clean": clean["goodput"],
+        "goodput_ratio": chaos["goodput"] / max(1e-9, clean["goodput"]),
+        "unfinished": float(unfinished),
+        "leaked_blocks": chaos["leaked_blocks"],
+        "fault_kills": chaos["fault_kills"],
+        "transfer_retries": chaos["transfer_retries"],
+        "degraded_to_recompute": chaos["degraded_to_recompute"],
+        "recoveries": chaos["recoveries"],
+        "p95_ttft_s_faulty": chaos["p95_ttft_s"],
+        "p95_ttft_s_clean": clean["p95_ttft_s"],
+    }
+
+
+def bench_cluster() -> Dict[str, float]:
+    """Kill a decode node mid-generation on the real engine; the recovered
+    tokens must be bit-identical to a monolithic greedy reference and each
+    streaming handle must observe every token exactly once."""
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)
+    refs = {tuple(p): [int(x) for x in T.greedy_generate(
+        params, cfg, jnp.asarray([p], jnp.int32), NEW_TOKENS)[0]]
+        for p in prompts}
+
+    faults = [FaultSpec("node_crash", at=CRASH_AT, node_id=CRASH_NODE),
+              FaultSpec("transfer_corrupt", at=0.0, count=1)]
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=2,
+                        num_blocks=128, faults=faults,
+                        heartbeat_timeout_cycles=HEARTBEAT_TIMEOUT)
+    client = FlowKVClient.from_cluster(cluster)
+    handles = [client.submit(list(p),
+                             SamplingParams(max_new_tokens=NEW_TOKENS))
+               for p in prompts]
+
+    # drive every stream round-robin so the exactly-once property is
+    # exercised ACROSS the crash, not observed after the fact
+    streams: Dict[int, List[int]] = {h.request_id: [] for h in handles}
+    gens = {h.request_id: h.tokens(max_cycles=400) for h in handles}
+    done: set = set()
+    while len(done) < len(handles):
+        for h in handles:
+            if h.request_id in done:
+                continue
+            try:
+                streams[h.request_id].append(next(gens[h.request_id]))
+            except StopIteration:
+                done.add(h.request_id)
+
+    divergence = 0
+    stream_mismatch = 0
+    for h in handles:
+        req = h.request
+        key = tuple(req.prompt_tokens[:req.client_prompt_len]
+                    if req.client_prompt_len else req.prompt_tokens)
+        if req.output_tokens != refs[key]:
+            divergence += 1
+        if streams[h.request_id] != req.output_tokens:
+            stream_mismatch += 1
+
+    s = cluster.stats()
+    cluster.assert_no_leaks()
+    return {
+        "token_divergence": float(divergence),
+        "stream_mismatch": float(stream_mismatch),
+        "finished": s["finished"],
+        "fault_kills": s["fault_kills"],
+        "transfer_retries": s["transfer_retries"],
+        "recoveries": s["recoveries"],
+        "replayed_tokens": float(sum(h.stats()["replayed_tokens"]
+                                     for h in handles)),
+        "leaked_blocks": s["leaked_blocks"],
+        "cycles": cluster.clock,
+    }
+
+
+def bench(modes=MODES) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for mode in modes:
+        t0 = time.perf_counter()
+        out[mode] = bench_sim() if mode == "sim" else bench_cluster()
+        out[mode]["wall_s"] = time.perf_counter() - t0
+    return out
+
+
+def rows(stats: Optional[Dict[str, Dict[str, float]]] = None) -> List[str]:
+    stats = stats or bench()
+    lines = []
+    if "sim" in stats:
+        s = stats["sim"]
+        lines.append(
+            f"faults/sim_ab,{s['wall_s'] * 1e6:.0f},"
+            f"goodput_ratio={s['goodput_ratio']:.3f}"
+            f";goodput={s['goodput_faulty']:.3f}"
+            f";clean={s['goodput_clean']:.3f}"
+            f";kills={s['fault_kills']:.0f}"
+            f";retries={s['transfer_retries']:.0f}"
+            f";recoveries={s['recoveries']:.0f}"
+            f";degraded={s['degraded_to_recompute']:.0f}"
+            f";unfinished={s['unfinished']:.0f}"
+            f";leaked={s['leaked_blocks']:.0f}")
+    if "cluster" in stats:
+        c = stats["cluster"]
+        lines.append(
+            f"faults/cluster_chaos,{c['wall_s'] * 1e6:.0f},"
+            f"token_divergence={c['token_divergence']:.0f}"
+            f";stream_mismatch={c['stream_mismatch']:.0f}"
+            f";recoveries={c['recoveries']:.0f}"
+            f";replayed={c['replayed_tokens']:.0f}"
+            f";retries={c['transfer_retries']:.0f}"
+            f";leaked={c['leaked_blocks']:.0f}"
+            f";cycles={c['cycles']:.0f}")
+    return lines
+
+
+def check(stats: Dict[str, Dict[str, float]]) -> None:
+    """The chaos gate (ISSUE 8 acceptance)."""
+    if "sim" in stats:
+        s = stats["sim"]
+        assert s["goodput_ratio"] >= 0.7, (
+            f"goodput under faults collapsed: ratio {s['goodput_ratio']:.3f}"
+            f" < 0.7")
+        assert s["unfinished"] == 0, (
+            f"{s['unfinished']:.0f} offered requests never terminated")
+        assert s["leaked_blocks"] == 0, (
+            f"{s['leaked_blocks']:.0f} KV blocks leaked under chaos")
+        assert s["fault_kills"] >= 1 and s["transfer_retries"] >= 1, (
+            "failure scenario did not actually exercise faults")
+    if "cluster" in stats:
+        c = stats["cluster"]
+        assert c["token_divergence"] == 0, (
+            f"{c['token_divergence']:.0f} requests diverged from the "
+            f"fault-free reference after recovery")
+        assert c["stream_mismatch"] == 0, (
+            f"{c['stream_mismatch']:.0f} streaming handles violated "
+            f"exactly-once delivery")
+        assert c["finished"] == NUM_REQUESTS
+        assert c["leaked_blocks"] == 0
+        assert c["recoveries"] >= 1, "the crash never forced a recovery"
+        assert c["transfer_retries"] >= 1, "the corruption was never caught"
+
+
+def history_metrics(stats: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    s, c = stats["sim"], stats["cluster"]
+    return {
+        "goodput_ratio": s["goodput_ratio"],
+        "token_divergence": c["token_divergence"],
+        "leaked_blocks": s["leaked_blocks"] + c["leaked_blocks"],
+        "unfinished": s["unfinished"],
+        "fault_kills": s["fault_kills"] + c["fault_kills"],
+        "recoveries": s["recoveries"] + c["recoveries"],
+        "transfer_retries": s["transfer_retries"] + c["transfer_retries"],
+        "degraded_to_recompute": s["degraded_to_recompute"],
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on chaos-gate violations (CI)")
+    ap.add_argument("--history", action="store_true",
+                    help="append headline metrics to BENCH_faults.json")
+    ap.add_argument("--only", choices=MODES, default=None)
+    args = ap.parse_args(argv)
+
+    modes = (args.only,) if args.only else MODES
+    stats = bench(modes)
+
+    if args.json:
+        print(json.dumps(stats, indent=2, sort_keys=True))
+    else:
+        for line in rows(stats):
+            print(line)
+
+    if args.check:
+        check(stats)
+        print("fault-tolerance gates passed", file=sys.stderr)
+    if args.history:
+        if args.only:
+            raise SystemExit("--history needs both modes (no --only)")
+        history.record("faults", history_metrics(stats))
+        print(f"recorded to {history.bench_path('faults')}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

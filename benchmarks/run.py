@@ -11,6 +11,7 @@
     prefix  benchmarks/prefix_reuse.py       prefix-cache hit rate vs prefill compute
     scen    benchmarks/scenarios.py          scheduling scenarios (load-aware vs baselines)
     chunk   benchmarks/chunked_prefill.py    chunked prefill + layerwise overlap A/B
+    faults  benchmarks/fault_tolerance.py    chaos A/B + token-exact crash recovery
     roof    benchmarks/roofline.py           dry-run roofline table
 
 ``python -m benchmarks.run [--full] [--only table3,fig4,...]``
@@ -39,7 +40,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full RPS grids (paper-complete, slower)")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,decode,prefix,scen,chunk,roof")
+                    help="comma-separated subset: table1,table2,table3,fig1,fig4,fig5,decode,prefix,scen,chunk,faults,roof")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -91,6 +92,10 @@ def main() -> None:
     if want("chunk"):
         from benchmarks import chunked_prefill
         for r in chunked_prefill.rows():
+            print(r)
+    if want("faults"):
+        from benchmarks import fault_tolerance
+        for r in fault_tolerance.rows():
             print(r)
     if want("roof"):
         from benchmarks import roofline

@@ -186,5 +186,18 @@ class BlockManager:
         assert dict(counts) == self._refcount, (
             f"refcount drift: tables={dict(counts)} refcounts={self._refcount}")
 
+    def assert_no_leaks(self, live_request_ids) -> None:
+        """Fault-path audit: beyond the structural invariants, every table
+        must belong to a request the cluster still considers live — a table
+        for a finished/failed/cancelled request is a leaked allocation (the
+        kill-mid-transfer bug class: partially-written dst blocks billed as
+        valid after their request was requeued elsewhere)."""
+        self.check_invariants()
+        live = set(live_request_ids)
+        leaked = [rid for rid in self._table if rid not in live]
+        assert not leaked, (
+            f"leaked block tables for dead requests {leaked}: "
+            f"{ {rid: self._table[rid] for rid in leaked} }")
+
 
 __all__ = ["BlockManager", "OutOfBlocksError"]

@@ -225,26 +225,68 @@ class GlobalController:
             self.nodes[node_id].last_heartbeat = now
 
     def detect_failures(self, now: float) -> List[int]:
-        """Mark dead nodes, drain their requests into the retry queue."""
+        """Mark STALE nodes dead, drain their requests into the retry queue.
+
+        Liveness is pure staleness against ``heartbeat_timeout`` — there is
+        no sentinel stamp; a killed node simply stops heartbeating and falls
+        over this threshold like a genuinely crashed one would. Each drained
+        request is stamped ``recovery_start`` (its failover clock starts
+        here) and gets a ``failure`` span when a tracer is attached.
+        """
         failed = []
         for node in self.nodes.values():
             if node.alive and now - node.last_heartbeat > self.heartbeat_timeout:
                 node.alive = False
                 failed.append(node.node_id)
                 drained = node.scheduler.drain_for_failure()
+                for req in drained:
+                    self._stamp_failure(req, now, node.node_id,
+                                        "heartbeat_timeout")
                 self.retry_queue.extend(drained)
                 self.prefix_index.evict_node(node.node_id)
                 self._log("failover",
                           f"node {node.node_id} dead; requeued {len(drained)} requests")
         return failed
 
+    def _stamp_failure(self, req: Request, now: float, node_id: int,
+                       reason: str) -> None:
+        """Start a request's recovery clock + emit its ``failure`` span."""
+        if req.recovery_start is None:
+            req.recovery_start = now
+            if self.tracer is not None:
+                req.recovery_start_wall = self.tracer.wall()
+        if self.tracer is not None:
+            wall = self.tracer.wall()
+            self.tracer.emit(
+                req.request_id, "failure",
+                start_cycle=float(now), end_cycle=float(now),
+                start_wall_s=wall, end_wall_s=wall, node_id=node_id,
+                attrs={"reason": reason, "retries": req.retries,
+                       "tokens_kept": len(req.output_tokens)})
+
     def reroute_retries(self) -> int:
-        """Re-dispatch requests drained from failed nodes."""
+        """Re-dispatch requests drained from failed nodes.
+
+        Only FAILED requests are still owed a reroute (a client cancel in
+        the retry queue flips the state and is dropped here). An unroutable
+        request stays queued for a later cycle instead of being silently
+        discarded — with zero alive nodes the queue simply waits.
+        """
         n = 0
-        while self.retry_queue:
-            req = self.retry_queue.pop()
-            if self.route_request(req) is not None:
-                n += 1
+        pending = list(self.retry_queue)
+        self.retry_queue = []
+        while pending:
+            req = pending.pop()
+            if req.state is not RequestState.FAILED:
+                continue
+            if self.route_request(req) is None:
+                self.retry_queue.append(req)
+                self.retry_queue.extend(r for r in reversed(pending)
+                                        if r.state is RequestState.FAILED)
+                break
+            n += 1
+            if self.on_admit is not None:
+                self.on_admit(req)
         return n
 
     # -- overload admission gate ---------------------------------------------------------

@@ -437,6 +437,45 @@ class TransferEngine:
         return executor(src_cache, dst_cache, src_pages, dst_pages)
 
 
+# ---------------------------------------------------------------------------
+# Payload integrity: per-plan checksums over the pages a plan moves
+# ---------------------------------------------------------------------------
+def payload_digest(pool: jax.Array, spec: L.KVCacheSpec,
+                   page_ids: np.ndarray) -> bytes:
+    """blake2b digest of the given flat pages of a pool.
+
+    The pool is viewed as ``(num_pages, spec.payload)`` — the same flat-page
+    view the fused executor gathers/scatters through — so a digest over a
+    plan's page ids covers exactly the bytes that plan moves, regardless of
+    layout (FLOWKV vs VLLM page orderings index the same view differently).
+    """
+    import hashlib
+    flat = np.asarray(pool).reshape(-1, spec.payload)
+    return hashlib.blake2b(np.ascontiguousarray(flat[page_ids]).tobytes(),
+                           digest_size=16).digest()
+
+
+def verify_transfer(plan: TransferPlan, src_spec: L.KVCacheSpec,
+                    src_pool: jax.Array, dst_spec: L.KVCacheSpec,
+                    dst_pool: jax.Array) -> bool:
+    """Post-dispatch integrity check: did the dst pages land bit-identical?
+
+    Digests the plan's source pages and destination pages (each through its
+    own layout's page ordering, which pairs row-for-row by construction) and
+    compares. An empty plan trivially verifies. This is the receiver-side
+    checksum a real transport would carry per message; here both pools are
+    addressable so the check is exact, not probabilistic framing.
+    """
+    table = plan.to_descriptors()
+    if len(table) == 0:
+        return True
+    src_digest = payload_digest(src_pool, src_spec,
+                                table.page_ids(src_spec, "src"))
+    dst_digest = payload_digest(dst_pool, dst_spec,
+                                table.page_ids(dst_spec, "dst"))
+    return src_digest == dst_digest
+
+
 def transfer_request(src_spec: L.KVCacheSpec, src_cache: jax.Array, src_blocks: Sequence[int],
                      dst_spec: L.KVCacheSpec, dst_cache: jax.Array, dst_blocks: Sequence[int],
                      schedule: Schedule = "flowkv",

@@ -3,8 +3,8 @@
 Every gated benchmark (``--json``/``--check`` CLI contract) can also append
 its headline metrics to a schema-versioned history file at the repo root —
 ``BENCH_transfer.json``, ``BENCH_decode.json``, ``BENCH_scenarios.json``,
-``BENCH_prefix.json``, ``BENCH_breakdown.json``, ``BENCH_chunked.json`` —
-via its ``--history``
+``BENCH_prefix.json``, ``BENCH_breakdown.json``, ``BENCH_chunked.json``,
+``BENCH_faults.json`` — via its ``--history``
 flag. The files are committed, so the repo carries its own perf trajectory:
 each PR's CI run appends one entry, and ``tools/bench_history.py --check``
 fails the build when the newest entry regresses against the committed
@@ -107,6 +107,20 @@ AREAS: Dict[str, Dict[str, MetricSpec]] = {
         "flowkv_xfer_frac": MetricSpec("le", 0.0),
         "blockwise_xfer_frac": MetricSpec("info"),
         "flowkv_over_blockwise_xfer": MetricSpec("le", 0.0),
+    },
+    "faults": {
+        # chaos A/B (benchmarks/fault_tolerance.py): the failure scenario
+        # vs its fault-free twin. Goodput under faults must stay a bounded
+        # fraction of fault-free; divergence/leak counters are structural
+        # zeros — any drift is a recovery-correctness bug, not noise.
+        "goodput_ratio": MetricSpec("ge", 0.05),
+        "token_divergence": MetricSpec("exact"),
+        "leaked_blocks": MetricSpec("exact"),
+        "unfinished": MetricSpec("exact"),
+        "fault_kills": MetricSpec("exact"),
+        "recoveries": MetricSpec("info"),
+        "transfer_retries": MetricSpec("info"),
+        "degraded_to_recompute": MetricSpec("info"),
     },
 }
 

@@ -32,12 +32,14 @@ import pathlib
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
-TRACE_SCHEMA_VERSION = 2
+TRACE_SCHEMA_VERSION = 3
 
 # Schema history: v1 had the six lifecycle span kinds; v2 (chunked prefill +
 # layerwise overlap) added the fine-grained ``prefill_chunk`` and
-# ``transfer_layer_window`` kinds. v2 is additive, so v1 traces still read.
-SUPPORTED_SCHEMAS = (1, 2)
+# ``transfer_layer_window`` kinds; v3 (fault tolerance) added the
+# ``failure`` / ``transfer_retry`` / ``recovery`` kinds. Each bump is
+# additive, so v1 and v2 traces still read.
+SUPPORTED_SCHEMAS = (1, 2, 3)
 
 # The span taxonomy (docs/observability.md). Producers are free to add new
 # names — consumers must treat this as open — but these are the request
@@ -45,8 +47,13 @@ SUPPORTED_SCHEMAS = (1, 2)
 # and ``transfer_layer_window`` are sub-spans of ``prefill`` / ``transfer``:
 # one per interleaved prompt chunk, one per layer-window sub-plan on the
 # wire, so captured traces show the overlap instead of one opaque span.
+# The fault kinds: ``failure`` marks a request drained off a dead node (or a
+# transfer degraded to recompute), ``transfer_retry`` one failed/corrupt
+# transfer attempt about to back off, ``recovery`` the failure-to-resumed
+# interval (attrs carry replayed token counts).
 SPAN_NAMES = ("queue", "admission", "prefill", "prefill_chunk", "transfer",
-              "transfer_layer_window", "decode", "prefix_fetch")
+              "transfer_layer_window", "decode", "prefix_fetch",
+              "failure", "transfer_retry", "recovery")
 
 
 @dataclasses.dataclass

@@ -40,8 +40,12 @@ from repro.models.common import ModelConfig
 from repro.serving.cluster import PDCluster
 from repro.serving.request import Request, RequestState, SamplingParams
 
+# FAILED is deliberately NOT terminal: a failed request sits in the
+# controller's retry queue and will be rerouted (token-exact recovery), so
+# streaming handles keep driving the cluster through a failover instead of
+# ending the stream mid-retry.
 TERMINAL_STATES = (RequestState.FINISHED, RequestState.CANCELLED,
-                   RequestState.FAILED, RequestState.REJECTED)
+                   RequestState.REJECTED)
 
 
 class RequestHandle:
@@ -146,6 +150,16 @@ class RequestHandle:
             "retries": self._req.retries,
             "retry_after_s": self._req.retry_after,
             "reject_reason": self._req.reject_reason,
+            # fault tolerance: did this request survive a failover, how many
+            # transfer attempts were retried, how many already-emitted tokens
+            # the recovery re-prefilled, and what the failover cost — on the
+            # driving clock (recovery_s) and in real seconds (wall).
+            "recovered": self._req.recoveries > 0,
+            "recoveries": self._req.recoveries,
+            "transfer_retries": self._req.transfer_retries,
+            "replayed_tokens": self._req.replayed_tokens,
+            "recovery_s": self._req.recovery_s,
+            "recovery_wall_s": self._req.recovery_wall_s,
         })
         return d
 

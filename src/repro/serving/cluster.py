@@ -22,7 +22,9 @@ from repro.core.scheduler.global_controller import (AdmissionDecision,
                                                     AdmissionPolicy,
                                                     GlobalController, ModelCost,
                                                     NodeHandle)
-from repro.core.transfer import TransferEngine, backend_for_engine
+from repro.core.transfer import (TransferEngine, backend_for_engine,
+                                 verify_transfer)
+from repro.faults import as_injector
 from repro.models.common import ModelConfig
 from repro.serving.engine import NodeEngine
 from repro.serving.request import Request, RequestState
@@ -43,6 +45,13 @@ class TransferRecord:
     # the total time on the wire
     hidden_s: float = 0.0
     num_windows: int = 1
+    src_node: int = -1
+    dst_node: int = -1
+    # "ok" | "aborted_dst_dead" (dst died mid-stream; retried to a new dst
+    # next cycle) | "degraded" (every retry failed; recomputed on the decode
+    # node). Latency aggregates only count "ok" records.
+    status: str = "ok"
+    retries: int = 0            # failed attempts absorbed by THIS transfer
 
 
 class PDCluster:
@@ -58,10 +67,26 @@ class PDCluster:
                  prefix_reuse: bool = True, tracer=None,
                  chunked_prefill: bool = True,
                  prefill_chunk_tokens: Optional[int] = None,
-                 layer_window: int = 0):
+                 layer_window: int = 0,
+                 faults=None,
+                 heartbeat_timeout_cycles: float = 10.0,
+                 transfer_max_retries: int = 3,
+                 transfer_backoff_cycles: float = 0.5):
         self.cfg = cfg
         self.transfer_schedule = transfer_schedule
         self.target = target
+        # Fault plane: an optional repro.faults.FaultInjector (or spec list /
+        # capture meta dict) drives deterministic chaos — node crashes applied
+        # at the top of step(), transfer fail/corrupt verdicts per attempt,
+        # bandwidth degradation, heartbeat suppression. None = no faults.
+        self.faults = as_injector(faults)
+        # Transfer hardening: every fused dispatch is checksum-verified; a
+        # failed/corrupt attempt retries with exponential backoff (priced
+        # into the transfer's exposed latency), and after
+        # transfer_max_retries + 1 failed attempts the request degrades to
+        # recompute-on-the-decode-node instead of wedging the sending queue.
+        self.transfer_max_retries = transfer_max_retries
+        self.transfer_backoff_cycles = transfer_backoff_cycles
         # Layerwise transfer/compute overlap: layer_window > 0 streams each
         # P->D transfer as ceil(L / layer_window) per-layer-window sub-plans
         # (own fused dispatch each), so completed layers' KV is on the wire
@@ -88,7 +113,8 @@ class PDCluster:
                                            role_flip=role_flip,
                                            admission=admission,
                                            layer_window=layer_window,
-                                           num_layers=n_attn)
+                                           num_layers=n_attn,
+                                           heartbeat_timeout=heartbeat_timeout_cycles)
         self.controller.tracer = tracer
         self.clock = 0.0
         self.submitted = 0
@@ -97,6 +123,11 @@ class PDCluster:
         self.finished: List[Request] = []
         self.cancelled: List[Request] = []
         self.rejected: List[Request] = []
+        # fleet-level fault counters (stats())
+        self.fault_kills = 0
+        self.transfer_retry_count = 0
+        self.degraded_to_recompute = 0
+        self.recoveries = 0
 
         for i in range(num_prefill + num_decode):
             role = "prefill" if i < num_prefill else "decode"
@@ -163,6 +194,13 @@ class PDCluster:
         transport itself.
         """
         src = self.engines[req.prefill_node]
+        # Failover re-target: the decode node chosen at routing time may
+        # have died while the request prefilled. Re-pick BEFORE planning so
+        # the dst-side registration lands on a live pool.
+        if req.decode_node in self._dead or \
+                not self.controller.nodes[req.decode_node].alive:
+            nd = self._pick_decode_node(exclude={req.decode_node})
+            req.decode_node = nd if nd is not None else src.node_id
         dst = self.engines[req.decode_node]
         req.transfer_start = self.clock
         req.transfer_start_wall = time.monotonic()
@@ -192,17 +230,31 @@ class PDCluster:
         job = backend.plan(req, src, dst)
         hidden = 0.0
         windows = 1
+        retries_before = req.transfer_retries
         if self.layer_window > 0 and job.plan is not None and \
                 job.plan.num_layers > self.layer_window:
-            latency, hidden = self._transfer_windowed(req, src, dst, job,
-                                                      profile)
+            outcome, latency, hidden = self._transfer_windowed(
+                req, src, dst, job, profile)
             windows = -(-job.plan.num_layers // self.layer_window)
+            if outcome != "ok":
+                self._abort_transfer(req, src, dst, job, outcome,
+                                     req.transfer_retries - retries_before)
+                return
         else:
-            backend.execute(job, src, dst)
-            latency = backend.price(job, profile)
+            penalty = self._attempt_unit(
+                req, src, dst, lambda: backend.execute(job, src, dst),
+                job.plan)
+            if penalty is None:
+                self._abort_transfer(req, src, dst, job, "exhausted",
+                                     req.transfer_retries - retries_before)
+                return
+            latency = backend.price(job, profile) * self._bandwidth_factor() \
+                + penalty
         self.transfers.append(TransferRecord(
             req.request_id, job.schedule, job.num_calls, job.num_bytes, latency,
-            job.num_dispatches, hidden_s=hidden, num_windows=windows))
+            job.num_dispatches, hidden_s=hidden, num_windows=windows,
+            src_node=src.node_id, dst_node=dst.node_id,
+            retries=req.transfer_retries - retries_before))
         req.transfer_end = self.clock + latency
         req.transfer_end_wall = time.monotonic()
         req.transfer_calls = job.num_calls
@@ -217,13 +269,158 @@ class PDCluster:
                        "dispatches": job.num_dispatches,
                        "bytes": job.num_bytes, "est_latency_s": latency,
                        "hidden_s": hidden, "windows": windows,
-                       "dst_node": dst.node_id})
+                       "dst_node": dst.node_id,
+                       "retries": req.transfer_retries - retries_before})
         # The prompt's KV now lives on the DECODE node; sending_done below
         # frees the prefill-side blocks (and invalidates their entries), so
         # the index entry is re-homed to where the KV actually is.
         self._rehome_prefix(req, dst.node_id, list(job.dst_blocks))
         src.scheduler.sending_done(req)
         dst.scheduler.enqueue_decode(req)
+
+    # -- transfer hardening (retry / integrity / degradation) -------------------------
+    def _bandwidth_factor(self) -> float:
+        return self.faults.bandwidth_factor(self.clock) \
+            if self.faults is not None else 1.0
+
+    def _pick_decode_node(self, exclude=()) -> Optional[int]:
+        """Least-loaded live decode node (any live node as fallback)."""
+        cands = [n for n in self.controller.nodes.values()
+                 if n.alive and n.node_id not in self._dead
+                 and n.node_id not in exclude]
+        if not cands:
+            return None
+        decode = [n for n in cands if n.role == "decode"] or cands
+        return min(decode,
+                   key=lambda n: len(n.scheduler.decode.running)).node_id
+
+    def _attempt_unit(self, req: Request, src: NodeEngine, dst: NodeEngine,
+                      execute, plan) -> Optional[float]:
+        """Run one transfer unit (a full plan, or one layer-window sub-plan)
+        under the fault injector with post-dispatch integrity checking.
+
+        Every executed dispatch is checksum-verified (src pages vs dst pages
+        through the plan's descriptor table); a failed or corrupt attempt
+        retries with exponential backoff. Returns the latency penalty the
+        retries accrued, or None when all ``transfer_max_retries + 1``
+        attempts failed (caller degrades to recompute). An injected "fail"
+        drops the attempt before any bytes move; an injected "corrupt" lands
+        the payload then flips one destination element, so the checksum —
+        not the injector — is what catches it, and the clean retry's
+        re-execution overwrites (repairs) the damage.
+        """
+        penalty = 0.0
+        verifiable = (plan is not None and src.kv is not None
+                      and dst.kv is not None)
+        for attempt in range(self.transfer_max_retries + 1):
+            fault = self.faults.transfer_attempt(self.clock) \
+                if self.faults is not None else None
+            corrupting = fault == "corrupt" and verifiable
+            if fault is not None and not corrupting:
+                ok = False          # dropped on the wire: nothing reached dst
+            else:
+                execute()
+                if corrupting:
+                    self._corrupt_dst(dst, plan)
+                ok = verify_transfer(plan, src.kv.spec, src.kv.pool,
+                                     dst.kv.spec, dst.kv.pool) \
+                    if verifiable else True
+            if ok:
+                return penalty
+            req.transfer_retries += 1
+            self.transfer_retry_count += 1
+            backoff = self.transfer_backoff_cycles * (2.0 ** attempt)
+            penalty += backoff
+            if self.tracer is not None:
+                wall = self.tracer.wall()
+                self.tracer.emit(
+                    req.request_id, "transfer_retry",
+                    start_cycle=self.clock, end_cycle=self.clock + backoff,
+                    start_wall_s=wall, end_wall_s=wall, node_id=src.node_id,
+                    attrs={"attempt": attempt, "fault": fault or "checksum",
+                           "backoff_s": backoff})
+        return None
+
+    def _corrupt_dst(self, dst: NodeEngine, plan) -> None:
+        """Injected in-flight corruption: flip one element of the first page
+        this plan wrote on the destination (so the checksum genuinely
+        mismatches against the source pages)."""
+        table = plan.to_descriptors()
+        if len(table) == 0:
+            return
+        spec = dst.kv.spec
+        pid = int(table.page_ids(spec, "dst")[0])
+        pool = dst.kv.pool
+        flat = pool.reshape(-1, spec.payload)
+        dst.kv.pool = flat.at[pid, 0].add(1.0).reshape(pool.shape)
+
+    def _abort_transfer(self, req: Request, src: NodeEngine, dst: NodeEngine,
+                        job, reason: str, retries: int) -> None:
+        """A transfer could not complete. Two cases:
+
+        * ``dst_dead`` — the destination died mid-stream. Partial dst state
+          is already freed; the request STAYS in the sending queue, so next
+          cycle's drain re-picks a live destination and re-plans (the source
+          still holds the full KV).
+        * ``exhausted`` — every retry of some dispatch failed. Degrade to
+          recompute: drop both sides' blocks and re-prefill (token-exact)
+          on the decode node, pricing recovery as real prefill compute.
+        """
+        status = "aborted_dst_dead" if reason == "dst_dead" else "degraded"
+        self.transfers.append(TransferRecord(
+            req.request_id, job.schedule, job.num_calls, job.num_bytes, 0.0,
+            job.num_dispatches, src_node=src.node_id, dst_node=dst.node_id,
+            status=status, retries=retries))
+        if reason == "dst_dead":
+            if dst.scheduler.bm.owns(req.request_id):
+                dst.scheduler.bm.free(req.request_id)
+            return
+        self._degrade_to_recompute(req, src, dst)
+
+    def _degrade_to_recompute(self, req: Request, src: NodeEngine,
+                              dst: NodeEngine) -> None:
+        """Retry-exhausted transfer: stop moving KV, recompute it instead.
+
+        Frees the partially-written dst registration AND the src blocks,
+        then re-enqueues the request as a fresh prefill on the decode node
+        (or the source if the destination is gone) — recovery re-prefills
+        prompt + already-emitted tokens teacher-forced, so the stream stays
+        token-exact, and the cost is honest prefill compute on that node.
+        """
+        if dst.scheduler.bm.owns(req.request_id):
+            dst.scheduler.bm.free(req.request_id)
+        src.scheduler.sending_done(req, free=True)
+        self.degraded_to_recompute += 1
+        target = dst if (dst.node_id not in self._dead and
+                         self.controller.nodes[dst.node_id].alive) else src
+        self.controller._stamp_failure(req, self.clock, target.node_id,
+                                       "transfer_retries_exhausted")
+        req.reset_for_retry()
+        req.prefill_node = target.node_id
+        req.decode_node = target.node_id
+        target.scheduler.enqueue_prefill(req)
+
+    def _finish_recovery(self, req: Request, node_id: int) -> None:
+        """Close the failure→re-prefilled window (the request is live again,
+        its replayed tokens recomputed token-exactly): accumulate the
+        failover cost on both clocks and emit the ``recovery`` span."""
+        req.recovery_s += self.clock - req.recovery_start
+        wall = time.monotonic()
+        if req.recovery_start_wall is not None:
+            req.recovery_wall_s = (req.recovery_wall_s or 0.0) + \
+                (wall - req.recovery_start_wall)
+        req.recoveries += 1
+        self.recoveries += 1
+        if self.tracer is not None:
+            self.tracer.emit(
+                req.request_id, "recovery",
+                start_cycle=req.recovery_start, end_cycle=self.clock,
+                start_wall_s=req.recovery_start_wall, end_wall_s=wall,
+                node_id=node_id,
+                attrs={"replayed_tokens": req.replayed_tokens,
+                       "retries": req.retries})
+        req.recovery_start = None
+        req.recovery_start_wall = None
 
     def _prefill_tail_s(self, req: Request) -> float:
         """Compute window available for hiding transfer: the duration of
@@ -237,20 +434,41 @@ class PDCluster:
             tokens * self.controller.model_cost.flops_per_token)
 
     def _transfer_windowed(self, req: Request, src: NodeEngine,
-                           dst: NodeEngine, job, profile) -> Tuple[float, float]:
+                           dst: NodeEngine, job, profile
+                           ) -> Tuple[str, float, float]:
         """Execute one P->D transfer as per-layer-window sub-plans (each its
         own fused descriptor-table dispatch) and price the pipeline:
         window w goes on the wire as soon as its layers finish prefilling,
         so only the spill past the end of prefill is exposed latency.
-        Returns ``(exposed_s, hidden_s)``; mutates ``job``'s call/dispatch
-        counts to the windowed totals (more, smaller calls — the cost side
-        of overlap, priced honestly)."""
+        Returns ``(status, exposed_s, hidden_s)``; status "dst_dead" means
+        the destination died between sub-plans (its partially-written blocks
+        are freed here — the kill-mid-transfer leak class), "exhausted"
+        means some sub-plan failed every retry. Mutates ``job``'s
+        call/dispatch counts to the windowed totals (more, smaller calls —
+        the cost side of overlap, priced honestly; retried dispatches
+        count too)."""
         subs = job.plan.split_layer_windows(self.layer_window)
         engine_t = TransferEngine(src.kv.spec, dst.kv.spec)
+        bw = self._bandwidth_factor()
         lats = []
+        penalty = 0.0
         for sub in subs:
-            dst.kv.import_plan(engine_t, sub, src.kv.pool)
-            lats.append(sub.latency(profile))
+            if req.decode_node in self._dead or \
+                    not self.controller.nodes[dst.node_id].alive:
+                # mid-stream death: windows already imported landed in a
+                # dead pool — drop the partial registration so those blocks
+                # are neither billed nor ever advertised as resident
+                if dst.scheduler.bm.owns(req.request_id):
+                    dst.scheduler.bm.free(req.request_id)
+                return "dst_dead", 0.0, 0.0
+            p = self._attempt_unit(
+                req, src, dst,
+                lambda s=sub: dst.kv.import_plan(engine_t, s, src.kv.pool),
+                sub)
+            if p is None:
+                return "exhausted", 0.0, 0.0
+            penalty += p
+            lats.append(sub.latency(profile) * bw)
         job.num_dispatches = engine_t.num_dispatches
         job.num_calls = sum(sub.num_calls for sub in subs)
         L = job.plan.num_layers
@@ -275,7 +493,7 @@ class PDCluster:
                     attrs={"layer_lo": lo, "layer_hi": hi,
                            "bytes": sub.total_bytes, "est_latency_s": lat,
                            "hidden": finish <= prefill_s})
-        return exposed, hidden
+        return "ok", exposed + penalty, hidden
 
     def _rehome_prefix(self, req: Request, node_id: int,
                        blocks: List[int]) -> None:
@@ -352,12 +570,18 @@ class PDCluster:
 
     # -- main loop -------------------------------------------------------------------
     def step(self) -> None:
-        """One cluster cycle: controller + every node + transfers."""
+        """One cluster cycle: faults due + controller + every node + transfers."""
         self.clock += 1.0
+        if self.faults is not None:
+            for spec in self.faults.due(self.clock):
+                if spec.node_id not in self._dead:
+                    self.kill_node(spec.node_id)
         for nid, engine in self.engines.items():
             if nid in self._dead or not self.controller.nodes[nid].alive:
                 continue
-            self.controller.heartbeat(nid, self.clock)
+            if self.faults is None or \
+                    not self.faults.heartbeat_suppressed(nid, self.clock):
+                self.controller.heartbeat(nid, self.clock)
             if self.prefix_reuse and engine.supports_prefix_reuse:
                 self._fetch_pending_prefixes(engine)
             # engine stamps prefill_start / first_token_time (the first token
@@ -365,6 +589,10 @@ class PDCluster:
             pre_done, finished = engine.step(now=self.clock)
             for req in pre_done:
                 req.prefill_end = self.clock
+                if req.recovery_start is not None:
+                    # re-prefill after a failure completed: the request is
+                    # caught up (replayed tokens recomputed token-exactly)
+                    self._finish_recovery(req, nid)
                 if self.tracer is not None:
                     # queue span closes when prefill started (stamped by the
                     # engine); emitted here because the engine does not see
@@ -426,6 +654,13 @@ class PDCluster:
             return False
         for engine in self.engines.values():
             engine.release(req)
+        # a FAILED request may be parked controller-side awaiting reroute —
+        # cancellation must beat the reroute, not race it
+        for q in (self.controller.retry_queue, self.controller.deferred):
+            try:
+                q.remove(req)
+            except ValueError:
+                pass
         req.state = RequestState.CANCELLED
         req.finish_time = self.clock
         req.finish_wall = time.monotonic()
@@ -444,9 +679,13 @@ class PDCluster:
         Every paged-KV allocation on the dead node is released immediately —
         the controller's drain only frees requests still sitting in the
         scheduler queues, so without this the dead pool reports phantom
-        utilization after checkpoint/restore or pool reuse."""
+        utilization after checkpoint/restore or pool reuse.
+
+        Note the node simply STOPS heartbeating — detection is pure
+        staleness against ``heartbeat_timeout_cycles``, no sentinel stamp —
+        so the detection latency the controller pays is the real knob."""
         self._dead.add(node_id)
-        self.controller.nodes[node_id].last_heartbeat = -1e9
+        self.fault_kills += 1
         engine = self.engines[node_id]
         engine.scheduler.bm.release_all()
         engine.states.clear()
@@ -456,8 +695,42 @@ class PDCluster:
         from repro.serving.checkpoint import cluster_state
         return cluster_state(self)
 
+    # -- leak auditing ------------------------------------------------------------------
+    def live_request_ids(self) -> set:
+        """Cluster-wide live set: every request still in ANY node's queues
+        or parked controller-side. The union matters: a SENDING request's
+        dst-side registration lives on the destination bm while the request
+        itself sits in the SOURCE's sending queue."""
+        live = set()
+        for engine in self.engines.values():
+            s = engine.scheduler
+            for sub in (s.prefill, s.decode):
+                for q in (sub.waiting, sub.running, sub.swapped, sub.sending):
+                    live.update(r.request_id for r in q)
+        live.update(r.request_id for r in self.controller.retry_queue)
+        live.update(r.request_id for r in self.controller.deferred)
+        return live
+
+    def audit_blocks(self) -> int:
+        """Count leaked block tables fleet-wide (0 on a healthy cluster),
+        checking each allocator's structural invariants on the way."""
+        live = self.live_request_ids()
+        leaked = 0
+        for engine in self.engines.values():
+            bm = engine.scheduler.bm
+            bm.check_invariants()
+            leaked += sum(1 for rid in bm._table if rid not in live)
+        return leaked
+
+    def assert_no_leaks(self) -> None:
+        """Hard audit (tests / chaos gate): raise on any leaked table."""
+        live = self.live_request_ids()
+        for engine in self.engines.values():
+            engine.scheduler.bm.assert_no_leaks(live)
+
     def stats(self) -> Dict[str, float]:
-        kv_xfers = [t for t in self.transfers if t.kind == "kv"]
+        kv_xfers = [t for t in self.transfers
+                    if t.kind == "kv" and t.status == "ok"]
         lat = [t.est_latency_s for t in kv_xfers]
         calls = [t.num_calls for t in kv_xfers]
         disp = [t.num_dispatches for t in kv_xfers]
@@ -499,4 +772,12 @@ class PDCluster:
             "decode_compile_variants": len(set().union(
                 *(e._decode_cache_keys for e in self.engines.values()))),
             "events": len(self.controller.events),
+            # fault plane: injected kills, failed transfer attempts retried,
+            # transfers that gave up and recomputed, completed failovers —
+            # and the leak audit (must stay 0.0, chaos or not)
+            "fault_kills": self.fault_kills,
+            "transfer_retries": self.transfer_retry_count,
+            "degraded_to_recompute": self.degraded_to_recompute,
+            "recoveries": self.recoveries,
+            "leaked_blocks": float(self.audit_blocks()),
         }

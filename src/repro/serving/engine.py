@@ -222,9 +222,13 @@ class NodeEngine:
                                           cache["v"][:, 0], chunk)
                 else:
                     self.states[req.request_id] = jax.tree.map(lambda x: x, cache)
-            if final:
+            if final and not req.output_tokens:
                 # only the last chunk's last position is the real next-token
-                # distribution; intermediate chunks' logits are discarded
+                # distribution; intermediate chunks' logits are discarded.
+                # A RECOVERY prefill (reset_for_retry folded emitted tokens
+                # into the prompt) re-predicts a token the client already
+                # has — output_tokens is non-empty, so the duplicate append
+                # is skipped and decode resumes from the kept token.
                 req.output_tokens.append(int(jnp.argmax(logits[0])))
             self.prefill_tokens_computed += chunk
             if self.tracer is not None:

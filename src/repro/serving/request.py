@@ -106,6 +106,22 @@ class Request:
     decode_dispatches: int = 0     # device dispatches those cycles issued
     #                                (1/step zero-gather; O(batch)/step oracle)
 
+    # --- fault tolerance (set on failover / transfer retry) ----------------------
+    # The prompt length the CLIENT submitted. Recovery rewrites prompt_tokens
+    # to prompt + already-emitted tokens (teacher-forced re-prefill), so the
+    # original boundary must be remembered the first time that happens.
+    client_prompt_len: Optional[int] = None
+    # Emitted tokens folded back into the prompt by the last recovery; they
+    # are counted once in prompt_len AND once in num_output, so total_len
+    # subtracts them out.
+    replayed_tokens: int = 0
+    transfer_retries: int = 0      # failed/corrupt transfer attempts retried
+    recoveries: int = 0            # completed failovers (recovery span emitted)
+    recovery_start: Optional[float] = None        # set at failure detection,
+    recovery_start_wall: Optional[float] = None   # cleared when work resumes
+    recovery_s: float = 0.0                       # accumulated recovery time
+    recovery_wall_s: Optional[float] = None
+
     # -- derived ----------------------------------------------------------------
     @property
     def prompt_len(self) -> int:
@@ -117,7 +133,9 @@ class Request:
 
     @property
     def total_len(self) -> int:
-        return self.prompt_len + self.num_output
+        # replayed tokens live in BOTH prompt_tokens (recovery re-prefill)
+        # and output_tokens (exactly-once client delivery): count them once.
+        return self.prompt_len + self.num_output - self.replayed_tokens
 
     def num_blocks(self, block_size: int) -> int:
         return -(-self.total_len // block_size)
@@ -192,9 +210,30 @@ class Request:
         self.prefix_block_ids = []
 
     def reset_for_retry(self) -> None:
-        """Return the request to WAITING after a node failure (fault path)."""
-        self.state = RequestState.WAITING
-        self.output_tokens.clear()
+        """Requeue after a node failure — WITHOUT losing emitted tokens.
+
+        Token-exact recovery: tokens already delivered to the client cannot
+        be un-sent, so the retry must regenerate the same continuation. All
+        generated tokens except the newest are folded into the prompt
+        (teacher-forced re-prefill through the ordinary suffix path); the
+        newest token is re-predicted by the recovery prefill's final forward
+        (the engine skips the duplicate append) and decode resumes from it.
+        ``output_tokens`` is kept verbatim, so the streaming handle's
+        emitted-counter delivers each token exactly once across a failover.
+        """
+        if self.client_prompt_len is None:
+            self.client_prompt_len = self.prompt_len
+        if self.output_tokens:
+            self.prompt_tokens = (self.prompt_tokens[:self.client_prompt_len]
+                                  + self.output_tokens[:-1])
+            self.replayed_tokens = len(self.output_tokens) - 1
+            self.prefix_chain_cache = None    # prompt changed: re-hash
+        else:
+            self.first_token_time = None
+            self.first_token_wall = None
+        # FAILED while parked in the retry queue (so a client cancel is
+        # distinguishable there); enqueue_prefill flips it back to WAITING.
+        self.state = RequestState.FAILED
         self.block_ids = []
         self.prefill_node = None
         self.decode_node = None
@@ -204,10 +243,8 @@ class Request:
         self.transfer_start = self.transfer_end = None
         self.prefill_start_wall = self.prefill_end_wall = None
         self.transfer_start_wall = self.transfer_end_wall = None
-        self.first_token_wall = None
         self.transfer_calls = self.transfer_dispatches = None
         self.decode_steps = self.decode_dispatches = 0
-        self.first_token_time = None
         self.retry_after = None
         self.reject_reason = None
         self.retries += 1

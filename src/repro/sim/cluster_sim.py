@@ -34,6 +34,7 @@ from repro.core.costmodel import (MOONCAKE_RDMA, NCCL_ENI, IPC,
                                   select_route)
 from repro.core.layout import KVCacheSpec
 from repro.core.transfer import TransferPlanner, get_backend
+from repro.faults import as_injector
 from repro.models.common import ModelConfig
 from repro.serving.request import Request, RequestState
 from repro.sim.events import EventQueue
@@ -158,11 +159,29 @@ class ClusterSim:
                  prefix_reuse: Optional[bool] = None,
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk_tokens: Optional[int] = None,
-                 layer_window: int = 0):
+                 layer_window: int = 0,
+                 faults=None,
+                 heartbeat_timeout: float = 10.0):
         self.cfg = cfg
         self.spec = system_spec(kind)
         self.kind = kind
         self.same_host = same_host
+        # Fault plane (mirrors PDCluster): a repro.faults.FaultInjector (or
+        # spec list / capture-meta dict) schedules node crashes on the event
+        # clock, verdicts transfer attempts, degrades bandwidth and
+        # suppresses heartbeats. The sim's transfer faults are PRICED-only
+        # (virtual data plane): a failed/corrupt attempt adds the retry
+        # backoff to the wire latency — the same control-flow path the real
+        # cluster takes, minus the actual bytes.
+        self.faults = as_injector(faults)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.transfer_max_retries = 3
+        self.transfer_backoff_s = 0.05
+        self._dead: set = set()      # killed nodes stop heartbeating/working
+        self.fault_kills = 0
+        self.transfer_retry_count = 0
+        self.degraded_to_recompute = 0
+        self.recoveries = 0
         # chunked_prefill / prefill_chunk_tokens override the system spec's
         # baseline bit per run (A/B: lockstep vs sarathi-chunked on the SAME
         # system); layer_window > 0 prices layerwise transfer/compute
@@ -202,7 +221,8 @@ class ClusterSim:
                                            admission=admission,
                                            actions_enabled=not passive,
                                            layer_window=layer_window,
-                                           num_layers=n_attn)
+                                           num_layers=n_attn,
+                                           heartbeat_timeout=heartbeat_timeout)
         # deferred admissions re-routed inside controller.step need their
         # target node's event loop poked (event-driven runtime)
         self.controller.on_admit = lambda req: self._poke(req.prefill_node)
@@ -315,9 +335,7 @@ class ClusterSim:
 
         def recheck():
             self._recheck_scheduled = False
-            for nid, handle in self.controller.nodes.items():
-                if handle.alive:   # idle != dead (failure injection is explicit)
-                    self.controller.heartbeat(nid, self.eq.now)
+            self._heartbeat_all(self.eq.now)
             self.controller.step(self.eq.now)
             self._collect_rejected()
             if self.controller.deferred:
@@ -332,6 +350,51 @@ class ClusterSim:
         self._poll_scheduled[node_id] = True
         node = self.nodes[node_id]
         self.eq.push(max(self.eq.now, node.busy_until), lambda: self._cycle(node_id))
+
+    # -- fault plane --------------------------------------------------------------------
+    def _heartbeat_all(self, now: float) -> None:
+        """Refresh every HEALTHY node's heartbeat (idle != dead in the sim —
+        failure is explicit), skipping killed and suppressed nodes so
+        staleness detection can actually fire on them."""
+        for nid, handle in self.controller.nodes.items():
+            if handle.alive and nid not in self._dead and \
+                    (self.faults is None or
+                     not self.faults.heartbeat_suppressed(nid, now)):
+                self.controller.heartbeat(nid, now)
+
+    def kill_node(self, node_id: int) -> None:
+        """Node death on the event clock: it stops heartbeating and working
+        (no sentinel stamp — detection is pure staleness), its pool is
+        released, and a failure-check event is scheduled past the heartbeat
+        timeout so detection fires even on an otherwise-idle cluster."""
+        self._dead.add(node_id)
+        self.fault_kills += 1
+        self.nodes[node_id].bm.release_all()
+        self.eq.push(self.eq.now + self.heartbeat_timeout + 1e-6,
+                     self._failure_check)
+
+    def _failure_check(self) -> None:
+        """Heartbeat the healthy fleet, then let the controller's staleness
+        scan drain + reroute whatever went quiet."""
+        self._heartbeat_all(self.eq.now)
+        self.controller.step(self.eq.now)
+        self._collect_rejected()
+
+    def _finish_recovery(self, req: Request, node_id: int, now: float) -> None:
+        """Close the failure→re-prefilled window (same semantics as
+        PDCluster._finish_recovery, sim clock only)."""
+        req.recovery_s += now - req.recovery_start
+        req.recoveries += 1
+        self.recoveries += 1
+        if self.tracer is not None:
+            self.tracer.emit(
+                req.request_id, "recovery",
+                start_cycle=req.recovery_start, end_cycle=now,
+                node_id=node_id,
+                attrs={"replayed_tokens": req.replayed_tokens,
+                       "retries": req.retries})
+        req.recovery_start = None
+        req.recovery_start_wall = None
 
     # -- prefix fetch (mirrors PDCluster._fetch_prefix, priced) ----------------------
     def _fetch_pending_prefixes(self, node: SimNode) -> None:
@@ -383,8 +446,10 @@ class ClusterSim:
                            "bytes": plan.total_bytes,
                            "est_latency_s": latency})
             dst = self.nodes[nid]
-            if not self.controller.nodes[nid].alive:
+            if nid in self._dead or not self.controller.nodes[nid].alive:
                 dst.bm.free(req.request_id)   # node died mid-fetch
+                self.controller._stamp_failure(req, self.eq.now, nid,
+                                               "node_died_mid_fetch")
                 req.reset_for_retry()
                 self.controller.retry_queue.append(req)
                 return
@@ -411,9 +476,11 @@ class ClusterSim:
         self._poll_scheduled[node_id] = False
         node = self.nodes[node_id]
         handle = self.controller.nodes[node_id]
-        if not handle.alive:
+        if not handle.alive or node_id in self._dead:
             return
-        self.controller.heartbeat(node_id, self.eq.now)
+        if self.faults is None or \
+                not self.faults.heartbeat_suppressed(node_id, self.eq.now):
+            self.controller.heartbeat(node_id, self.eq.now)
         if self.prefix_reuse:
             self._fetch_pending_prefixes(node)
         decision = node.scheduler.schedule()
@@ -448,6 +515,9 @@ class ClusterSim:
                      lambda: self._complete(node_id, decision))
 
     def _complete(self, node_id: int, decision) -> None:
+        if node_id in self._dead or not self.controller.nodes[node_id].alive:
+            return   # killed mid-batch: the in-flight work is lost (the
+            #          failure drain requeues its requests token-exactly)
         node = self.nodes[node_id]
         now = self.eq.now
         # prefill completions
@@ -467,11 +537,16 @@ class ClusterSim:
                            "final": offset + executed == req.prompt_len})
             if node.scheduler.prefill_progressed(req, chunk):
                 req.prefill_end = now
-                req.output_tokens.append(0)   # first token (virtual)
+                # recovery re-prefill already HAS its tokens (kept across
+                # reset_for_retry) — same final-append guard as the engine
+                if not req.output_tokens:
+                    req.output_tokens.append(0)   # first token (virtual)
                 # the first token is EMITTED here, by prefill — TTFT must not
                 # include the transfer (same fix as the real cluster)
                 if req.first_token_time is None:
                     req.first_token_time = now
+                if req.recovery_start is not None:
+                    self._finish_recovery(req, node_id, now)
                 if self.tracer is not None:
                     self.tracer.emit(
                         req.request_id, "queue",
@@ -518,17 +593,51 @@ class ClusterSim:
                 self.finished.append(req)
         # keep heartbeats fresh for all healthy nodes (failure injection is
         # explicit in this simulator; idle != dead)
-        for nid, handle in self.controller.nodes.items():
-            if handle.alive:
-                self.controller.heartbeat(nid, now)
+        self._heartbeat_all(now)
         self.controller.step(now)
         self._collect_rejected()   # deferred admissions the gate gave up on
         self._poke(node_id)
 
     # -- transfer ----------------------------------------------------------------------
+    def _pick_decode_node(self, exclude=()) -> Optional[int]:
+        """Least-loaded live decode node (any live node as fallback)."""
+        cands = [n for n in self.controller.nodes.values()
+                 if n.alive and n.node_id not in self._dead
+                 and n.node_id not in exclude]
+        if not cands:
+            return None
+        decode = [n for n in cands if n.role == "decode"] or cands
+        return min(decode,
+                   key=lambda n: len(n.scheduler.decode.running)).node_id
+
+    def _degrade_to_recompute(self, req: Request, src: SimNode, dst: SimNode,
+                              now: float) -> None:
+        """Retry-exhausted transfer (mirror of the real cluster): drop both
+        sides' blocks and re-prefill token-exactly on the decode node."""
+        if dst.bm.owns(req.request_id):
+            dst.bm.free(req.request_id)
+        src.scheduler.sending_done(req, free=True)
+        self.degraded_to_recompute += 1
+        alive = dst.node_id not in self._dead and \
+            self.controller.nodes[dst.node_id].alive
+        target = dst if alive else src
+        self.controller._stamp_failure(req, now, target.node_id,
+                                       "transfer_retries_exhausted")
+        req.reset_for_retry()
+        req.prefill_node = target.node_id
+        req.decode_node = target.node_id
+        target.scheduler.enqueue_prefill(req)
+        self._poke(target.node_id)
+
     def _start_transfer(self, req: Request, now: float) -> None:
         src = self.nodes[req.prefill_node]
         dst_id = req.decode_node if req.decode_node is not None else req.prefill_node
+        # failover re-target: the routed decode node may have died while
+        # the request prefilled
+        if dst_id in self._dead or not self.controller.nodes[dst_id].alive:
+            nd = self._pick_decode_node(exclude={dst_id})
+            dst_id = nd if nd is not None else req.prefill_node
+            req.decode_node = dst_id
         dst = self.nodes[dst_id]
         if not src.bm.owns(req.request_id):
             return   # request was drained/requeued (failover) mid-transfer
@@ -560,9 +669,39 @@ class ClusterSim:
             self.eq.push(now + 0.01, lambda: self._start_transfer(req, self.eq.now))
             return
         backend.execute(job, src, dst)
+        # transfer faults, PRICED: the virtual data plane cannot corrupt real
+        # bytes, so fail and corrupt verdicts are identical here — each failed
+        # attempt adds its exponential backoff to the wire latency, and
+        # exhausting every retry degrades to recompute-on-the-decode-node
+        # (the same control path PDCluster takes with real checksums).
+        penalty = 0.0
+        exhausted = False
+        if self.faults is not None:
+            for attempt in range(self.transfer_max_retries + 1):
+                fault = self.faults.transfer_attempt(now)
+                if fault is None:
+                    break
+                req.transfer_retries += 1
+                self.transfer_retry_count += 1
+                backoff = self.transfer_backoff_s * (2.0 ** attempt)
+                penalty += backoff
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        req.request_id, "transfer_retry",
+                        start_cycle=now, end_cycle=now + backoff,
+                        node_id=src.node_id,
+                        attrs={"attempt": attempt, "fault": fault,
+                               "backoff_s": backoff})
+            else:
+                exhausted = True
+        if exhausted:
+            self._degrade_to_recompute(req, src, dst, now)
+            return
         profile = (self.spec.transfer_intra if self.same_host
                    else self.spec.transfer_inter)
-        latency = backend.price(job, profile)
+        bw = self.faults.bandwidth_factor(now) if self.faults is not None \
+            else 1.0
+        latency = backend.price(job, profile) * bw
         hidden = 0.0
         windows = 1
         if self.layer_window > 0 and job.plan is not None and \
@@ -572,7 +711,7 @@ class ClusterSim:
             # through the shared pipeline recurrence; only the spill past
             # the producing prefill tail is exposed.
             subs = job.plan.split_layer_windows(self.layer_window)
-            lats = [sub.latency(profile) for sub in subs]
+            lats = [sub.latency(profile) * bw for sub in subs]
             ends = [sub.layer_span[1] for sub in subs]
             L = job.plan.num_layers
             prefill_s = src.prefill_duration(
@@ -596,6 +735,7 @@ class ClusterSim:
                                "bytes": sub.total_bytes,
                                "est_latency_s": lat,
                                "hidden": finish <= prefill_s})
+        latency += penalty   # retry backoffs are exposed wire time
         req.transfer_start = now
         req.transfer_calls = job.num_calls
         req.transfer_dispatches = job.num_dispatches
@@ -610,6 +750,26 @@ class ClusterSim:
             self.spec.transfer_blocking * latency
 
         def arrive():
+            if req.state is not RequestState.SENDING:
+                # drained (src death) or cancelled while on the wire: the
+                # dst-side registration is a partial arrival — drop it
+                # instead of billing blocks to a request that left
+                if dst.bm.owns(req.request_id):
+                    dst.bm.free(req.request_id)
+                return
+            if dst.node_id in self._dead or \
+                    not self.controller.nodes[dst.node_id].alive:
+                # dst died while the KV was in flight: free both sides and
+                # requeue — recovery re-prefills token-exactly elsewhere
+                if dst.bm.owns(req.request_id):
+                    dst.bm.free(req.request_id)
+                src.scheduler.sending_done(req, free=True)
+                self.controller._stamp_failure(req, self.eq.now, dst.node_id,
+                                               "dst_died_in_flight")
+                req.reset_for_retry()
+                self.controller.retry_queue.append(req)
+                self._failure_check()   # reroute now (heartbeats refreshed)
+                return
             req.transfer_end = self.eq.now
             if self.tracer is not None:
                 self.tracer.emit(
@@ -632,6 +792,19 @@ class ClusterSim:
 
     # -- run ---------------------------------------------------------------------------
     def run(self, requests: List[Request], t_max: float = 10_000.0) -> Dict[str, float]:
+        if self.faults is not None:
+            # rewind the injector (same instance re-runs identically) and put
+            # its scheduled faults on the event clock: crashes kill at their
+            # time; heartbeat-loss windows get a staleness check past the
+            # timeout so detection fires even on an idle cluster.
+            self.faults.reset()
+            for spec in self.faults.crash_specs():
+                self.eq.push(spec.at,
+                             (lambda nid: lambda: self.kill_node(nid))(
+                                 spec.node_id))
+            for spec in self.faults.heartbeat_loss_specs():
+                self.eq.push(spec.at + self.heartbeat_timeout + 1e-6,
+                             self._failure_check)
         for req in requests:
             self.eq.push(req.arrival_time, (lambda r: (lambda: self._route(r)))(req))
         self.eq.run_until(t_max)
@@ -682,4 +855,40 @@ class ClusterSim:
                 (sum(self.transfer_hidden) + sum(self.transfer_latencies)) > 0
                 else 0.0),
             "events": len(self.controller.events),
+            # fault plane (same keys as PDCluster.stats)
+            "fault_kills": self.fault_kills,
+            "transfer_retries": self.transfer_retry_count,
+            "degraded_to_recompute": self.degraded_to_recompute,
+            "recoveries": self.recoveries,
+            "leaked_blocks": float(self.audit_blocks()),
         }
+
+    # -- leak auditing ------------------------------------------------------------------
+    def live_request_ids(self) -> set:
+        """Cluster-wide live set (see PDCluster.live_request_ids): a SENDING
+        request's dst registration lives on the destination bm while the
+        request queues on the source."""
+        live = set()
+        for node in self.nodes.values():
+            s = node.scheduler
+            for sub in (s.prefill, s.decode):
+                for q in (sub.waiting, sub.running, sub.swapped, sub.sending):
+                    live.update(r.request_id for r in q)
+        live.update(r.request_id for r in self.controller.retry_queue)
+        live.update(r.request_id for r in self.controller.deferred)
+        return live
+
+    def audit_blocks(self) -> int:
+        """Count leaked block tables fleet-wide (0 on a healthy run)."""
+        live = self.live_request_ids()
+        leaked = 0
+        for node in self.nodes.values():
+            node.bm.check_invariants()
+            leaked += sum(1 for rid in node.bm._table if rid not in live)
+        return leaked
+
+    def assert_no_leaks(self) -> None:
+        """Hard audit (tests / chaos gate): raise on any leaked table."""
+        live = self.live_request_ids()
+        for node in self.nodes.values():
+            node.bm.assert_no_leaks(live)

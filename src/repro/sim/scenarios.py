@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
 from repro.core.scheduler.global_controller import AdmissionPolicy
+from repro.faults import FaultInjector, FaultSpec
 from repro.sim.cluster_sim import ClusterSim
 from repro.sim.hardware import A100, H20, L20, HardwareProfile
 from repro.sim.workload import WorkloadSpec, generate, generate_mixture
@@ -50,6 +51,11 @@ class Scenario:
     t_max: float = 50_000.0
     seed: int = 0
     model: str = "llama31-8b"
+    # chaos: FaultSpecs scheduled on the sim clock (a FRESH seeded injector
+    # per build, so re-running a scenario re-fires identical faults) and the
+    # staleness window for declaring a quiet node dead
+    faults: Tuple[FaultSpec, ...] = ()
+    heartbeat_timeout: float = 10.0
 
     def requests(self):
         if len(self.specs) == 1:
@@ -76,6 +82,9 @@ class Scenario:
             routing=routing,
             role_flip=self.role_flip and load_aware,
             admission=self.admission if load_aware else None,
+            faults=FaultInjector(self.faults, seed=self.seed)
+            if self.faults else None,
+            heartbeat_timeout=self.heartbeat_timeout,
         )
 
     def run(self, routing: str) -> Dict[str, float]:
@@ -137,6 +146,25 @@ SCENARIOS: Dict[str, Scenario] = {
     # decode, one A100 on each side. Capability normalization keeps the
     # weak cards from silently saturating and the strong cards from
     # starving; gate: everything finishes and NO node is starved.
+    # Fault tolerance: moderate load on a 2P2D fleet with a prefill node
+    # crashing mid-run, a flaky transfer link (failures + corruption caught
+    # by checksums) and a degraded-bandwidth window. Gate
+    # (benchmarks/fault_tolerance.py): goodput stays within a bounded
+    # fraction of the fault-free A/B of this same scenario, every
+    # non-cancelled request terminates, zero blocks leak.
+    "failure": Scenario(
+        name="failure",
+        description="2P2D under node crash + flaky/degraded transfers — "
+                    "token-exact recovery and bounded goodput loss",
+        num_prefill=2, num_decode=2, rps=1.0, ttft_slo_s=30.0,
+        specs=(_IN_1K,), num_requests=100,
+        faults=(FaultSpec("node_crash", at=20.0, node_id=0),
+                FaultSpec("transfer_fail", at=5.0, count=3),
+                FaultSpec("transfer_corrupt", at=10.0, count=3),
+                FaultSpec("degraded_bandwidth", at=15.0, duration=20.0,
+                          factor=4.0)),
+        heartbeat_timeout=2.0,
+    ),
     "heterogeneous": Scenario(
         name="heterogeneous",
         description="mixed A100/L20 prefill + A100/H20 decode fleet — "

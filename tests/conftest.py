@@ -1,7 +1,26 @@
 import os
 import sys
 
+import pytest
+
 # src-layout import path (tests run as `PYTHONPATH=src pytest tests/`, but be
 # robust when invoked without it). NOTE: no XLA_FLAGS here — smoke tests and
 # benches must see 1 device; only launch/dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled XLA executables after each test module.
+
+    The suite compiles one scan variant per distinct (model, prompt length)
+    pair; with everything kept alive, XLA's CPU backend eventually segfaults
+    inside backend_compile once enough executables have accumulated in one
+    process (the crashing test moves with total compile load, independent of
+    which modules run). Per-module eviction keeps the working set bounded;
+    within a module the cache still amortizes compiles across tests.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

@@ -1,0 +1,345 @@
+"""Fault-tolerant serving plane: deterministic fault injection, transfer
+retry/backoff with integrity checks, token-exact crash recovery
+(``src/repro/faults/``, the fault paths in ``serving/cluster.py`` and
+``sim/cluster_sim.py``)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.faults import FaultInjector, FaultSpec, as_injector
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.obs.replay import capture, per_request_stats, replay
+from repro.obs.tracing import attach_tracer, read_trace
+from repro.serving.api import FlowKVClient
+from repro.serving.cluster import PDCluster
+from repro.serving.request import RequestState, SamplingParams
+from repro.sim.cluster_sim import ClusterSim
+from repro.sim.scenarios import get_scenario
+from repro.sim.workload import SIMULATED, generate
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n=3, seed=5):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(0, cfg.vocab_size, size=rng.randint(5, 30)))
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def chaos_case(small_model):
+    """ONE prompt set + greedy reference shared by every chaos test.
+
+    Each distinct prompt length compiles a fresh XLA prefill variant;
+    sharing the workload keeps this module's compile count (and the whole
+    suite's XLA footprint) bounded."""
+    cfg, _, params = small_model
+    prompts = _prompts(cfg)
+    refs = {tuple(p): [int(x) for x in T.greedy_generate(
+        params, cfg, jnp.asarray([p], jnp.int32), 8)[0]] for p in prompts}
+    return prompts, refs
+
+
+def _run_chaos(cfg, params, prompts, faults, *, num_prefill=1, num_decode=2,
+               steps=8, max_cycles=400, **kw):
+    """Submit ``prompts``, drive every stream round-robin to completion, and
+    return (cluster, handles, streams)."""
+    cluster = PDCluster(cfg, params, num_prefill=num_prefill,
+                        num_decode=num_decode, num_blocks=128,
+                        faults=faults, heartbeat_timeout_cycles=2.0, **kw)
+    client = FlowKVClient.from_cluster(cluster)
+    handles = [client.submit(list(p), SamplingParams(max_new_tokens=steps))
+               for p in prompts]
+    streams = {h.request_id: [] for h in handles}
+    gens = {h.request_id: h.tokens(max_cycles=max_cycles) for h in handles}
+    done = set()
+    while len(done) < len(handles):
+        for h in handles:
+            if h.request_id in done:
+                continue
+            try:
+                streams[h.request_id].append(next(gens[h.request_id]))
+            except StopIteration:
+                done.add(h.request_id)
+    return cluster, handles, streams
+
+
+def _assert_token_exact(handles, refs, streams=None):
+    for h in handles:
+        req = h.request
+        key = tuple(req.prompt_tokens[:req.client_prompt_len]
+                    if req.client_prompt_len else req.prompt_tokens)
+        assert req.state is RequestState.FINISHED
+        assert req.output_tokens == refs[key], (
+            f"request {req.request_id} diverged after recovery")
+        if streams is not None:
+            assert streams[h.request_id] == req.output_tokens, (
+                f"request {req.request_id} stream violated exactly-once")
+
+
+# -- fault injector ----------------------------------------------------------------
+def test_injector_is_deterministic_and_replayable():
+    inj = FaultInjector([FaultSpec("node_crash", at=3.0, node_id=1),
+                         FaultSpec("transfer_fail", at=0.0, rate=0.3),
+                         FaultSpec("degraded_bandwidth", at=5.0,
+                                   duration=2.0, factor=4.0)], seed=7)
+    run1 = [inj.transfer_attempt(float(t)) for t in range(20)]
+    inj.reset()
+    run2 = [inj.transfer_attempt(float(t)) for t in range(20)]
+    assert run1 == run2                       # seeded rate stream replays
+    assert any(f == "fail" for f in run1)
+    inj.reset()
+    assert [s.node_id for s in inj.due(3.5)] == [1]
+    assert inj.due(3.5) == []                 # one-shot: fires once
+    assert inj.bandwidth_factor(6.0) == 4.0
+    assert inj.bandwidth_factor(8.0) == 1.0   # window closed
+    # meta round-trip rebuilds an equivalent injector (replay path)
+    clone = as_injector(inj.to_meta())
+    clone.reset()
+    assert [clone.transfer_attempt(float(t)) for t in range(20)] == run1
+
+
+# -- real cluster: crash recovery ---------------------------------------------------
+def test_mid_prefill_kill_token_identity(small_model, chaos_case):
+    """A prefill node dying mid-prefill reroutes its requests and the final
+    tokens match the monolithic reference (nothing was half-prefixed)."""
+    cfg, _, params = small_model
+    prompts, refs = chaos_case
+    cluster, handles, streams = _run_chaos(
+        cfg, params, prompts,
+        [FaultSpec("node_crash", at=1.0, node_id=0)],
+        num_prefill=2, num_decode=1)
+    _assert_token_exact(handles, refs, streams)
+    assert cluster.stats()["fault_kills"] == 1
+    cluster.assert_no_leaks()
+
+
+def test_mid_decode_kill_exactly_once(small_model, chaos_case):
+    """Killing a decode node mid-generation: recovery teacher-forces the
+    emitted prefix, the stream sees every token exactly once (no replays,
+    no gaps), and tokens are bit-identical to fault-free."""
+    cfg, _, params = small_model
+    prompts, refs = chaos_case
+    cluster, handles, streams = _run_chaos(
+        cfg, params, prompts,
+        [FaultSpec("node_crash", at=4.0, node_id=1)])
+    _assert_token_exact(handles, refs, streams)
+    s = cluster.stats()
+    assert s["recoveries"] >= 1, "the crash landed after all decodes"
+    recovered = [h for h in handles if h.stats()["recovered"]]
+    assert recovered
+    for h in recovered:
+        assert h.stats()["replayed_tokens"] >= 1
+        assert h.stats()["recovery_s"] > 0.0
+    cluster.assert_no_leaks()
+
+
+def test_corruption_caught_retried_and_repaired(small_model, chaos_case):
+    """A corrupted payload is caught by the per-plan checksum (never by
+    luck), retried once, and the clean re-import repairs the pages."""
+    cfg, _, params = small_model
+    all_prompts, refs = chaos_case
+    prompts = all_prompts[:2]
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=128,
+                        faults=[FaultSpec("transfer_corrupt", at=0.0,
+                                          count=1)])
+    rec = attach_tracer(cluster)
+    client = FlowKVClient.from_cluster(cluster)
+    handles = [client.submit(list(p), SamplingParams(max_new_tokens=8))
+               for p in prompts]
+    for h in handles:
+        h.result(max_cycles=300)
+    _assert_token_exact(handles, refs)
+    assert cluster.stats()["transfer_retries"] == 1
+    assert sum(h.stats()["transfer_retries"] for h in handles) == 1
+    retry_spans = rec.by_name("transfer_retry")
+    assert len(retry_spans) == 1
+    assert retry_spans[0].attrs["fault"] == "corrupt"
+    assert retry_spans[0].attrs["backoff_s"] > 0.0
+    assert not rec.by_name("failure")         # retry succeeded: no failover
+    cluster.assert_no_leaks()
+
+
+def test_retry_exhaustion_degrades_to_recompute(small_model, chaos_case):
+    """When every retry of a transfer fails, the request falls back to a
+    full prefill recompute on the decode node — and still lands the exact
+    reference tokens."""
+    cfg, _, params = small_model
+    all_prompts, refs = chaos_case
+    prompts = all_prompts[:1]
+    cluster, handles, _ = _run_chaos(
+        cfg, params, prompts,
+        # one fault per attempt: exhausts max_retries+1 attempts
+        [FaultSpec("transfer_fail", at=0.0, count=4)],
+        num_prefill=1, num_decode=1)
+    _assert_token_exact(handles, refs)
+    s = cluster.stats()
+    assert s["degraded_to_recompute"] == 1
+    assert s["transfer_retries"] == 4
+    assert handles[0].stats()["recovered"]
+    cluster.assert_no_leaks()
+
+
+def test_kill_dst_mid_windowed_transfer_no_leak(small_model, chaos_case):
+    """The decode node dying BETWEEN layer-window sub-plans must not leak
+    the partially-imported dst blocks; the transfer restarts cleanly on a
+    replacement node."""
+    cfg, _, params = small_model
+    all_prompts, refs = chaos_case
+    prompts = all_prompts[:1]
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=2,
+                        num_blocks=128, layer_window=1,
+                        heartbeat_timeout_cycles=2.0)
+    client = FlowKVClient.from_cluster(cluster)
+
+    state = {"killed": None}
+    for nid, eng in cluster.engines.items():
+        if eng.node_id == 0:
+            continue
+        orig = eng.kv.import_plan
+
+        def wrapper(engine_t, plan, src_pool, _orig=orig, _nid=nid):
+            out = _orig(engine_t, plan, src_pool)
+            if state["killed"] is None:       # die after the FIRST window
+                state["killed"] = _nid
+                cluster.kill_node(_nid)
+            return out
+
+        eng.kv.import_plan = wrapper
+
+    h = client.submit(prompts[0], SamplingParams(max_new_tokens=8))
+    h.result(max_cycles=400)
+    assert state["killed"] is not None, "layer-window path never ran"
+    _assert_token_exact([h], refs)
+    assert h.request.decode_node != state["killed"]
+    aborted = [t for t in cluster.transfers
+               if t.status == "aborted_dst_dead"]
+    assert aborted, "dead-dst abort path never triggered"
+    assert cluster.stats()["leaked_blocks"] == 0
+    cluster.assert_no_leaks()
+
+
+def test_cancel_while_failed_in_retry_queue(small_model, chaos_case):
+    """Cancelling a request parked controller-side (FAILED, unroutable)
+    must beat the reroute: terminal CANCELLED, empty retry queue, zero
+    blocks held anywhere."""
+    cfg, _, params = small_model
+    prompts, _ = chaos_case
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=128, heartbeat_timeout_cycles=2.0)
+    client = FlowKVClient.from_cluster(cluster)
+    h = client.submit(prompts[0], SamplingParams(max_new_tokens=32))
+    for _ in range(4):                        # reach decode
+        cluster.step()
+    cluster.kill_node(0)
+    cluster.kill_node(1)                      # whole fleet gone: unroutable
+    for _ in range(6):                        # past the staleness window
+        cluster.step()
+    assert h.request.state is RequestState.FAILED
+    assert h.request in cluster.controller.retry_queue
+    assert h.cancel()
+    assert h.request.state is RequestState.CANCELLED
+    assert h.request not in cluster.controller.retry_queue
+    assert cluster.audit_blocks() == 0
+    assert list(h.tokens()) == h.request.output_tokens  # stream terminates
+    cluster.assert_no_leaks()
+
+
+@pytest.mark.parametrize("allocator", ["flowkv", "freelist"])
+def test_no_leaks_after_chaos_both_allocators(small_model, chaos_case,
+                                              allocator):
+    """Full chaos (kill + corruption) leaves every surviving allocator with
+    its invariants intact and zero orphaned tables."""
+    cfg, _, params = small_model
+    prompts, refs = chaos_case
+    cluster, handles, _ = _run_chaos(
+        cfg, params, prompts,
+        [FaultSpec("node_crash", at=4.0, node_id=1),
+         FaultSpec("transfer_corrupt", at=0.0, count=1)],
+        allocator=allocator)
+    _assert_token_exact(handles, refs)
+    assert cluster.audit_blocks() == 0
+    cluster.assert_no_leaks()                 # invariants + liveness sweep
+    for nid, eng in cluster.engines.items():
+        if nid in cluster._dead:
+            continue
+        bm = eng.scheduler.bm
+        assert bm.num_free == bm.num_blocks   # everything returned
+
+
+def test_heartbeat_staleness_knob(small_model):
+    """Liveness is pure staleness against ``heartbeat_timeout_cycles`` —
+    no sentinel stamp. A quiet node stays alive inside the window and is
+    declared dead only once it falls over the threshold."""
+    cfg, _, params = small_model
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=64, heartbeat_timeout_cycles=3.0)
+    cluster.step()
+    cluster.step()
+    cluster.kill_node(1)
+    node = cluster.controller.nodes[1]
+    assert node.last_heartbeat == 2.0         # real stamp, not a sentinel
+    cluster.step()                            # staleness 1.0 < 3.0
+    assert node.alive
+    cluster.step()                            # 2.0
+    cluster.step()                            # 3.0 — not strictly over yet
+    assert node.alive
+    cluster.step()                            # 4.0 > 3.0: dead
+    assert not node.alive
+
+
+# -- sim: scenario gate + replay ----------------------------------------------------
+def test_sim_failure_scenario_meets_chaos_gate():
+    sc = get_scenario("failure")
+    chaos = sc.run("load_aware")
+    clean = dataclasses.replace(sc, faults=()).run("load_aware")
+    assert chaos["fault_kills"] == 1
+    assert chaos["transfer_retries"] >= 1
+    assert chaos["offered"] == chaos["finished"] + chaos["rejected"]
+    assert chaos["leaked_blocks"] == 0
+    assert chaos["goodput"] >= 0.7 * clean["goodput"]
+
+
+def test_sim_chaos_run_is_deterministic():
+    sc = get_scenario("failure")
+    s1 = sc.run("load_aware")
+    s2 = sc.run("load_aware")                 # fresh injector per build
+    assert s1 == s2
+
+
+def test_capture_replay_roundtrips_faults(tmp_path):
+    """A chaos capture replays bit-identically: the faults meta rebuilds
+    the same seeded injector, so crashes and retries re-fire in place."""
+    cfg = get_config("llama31-8b")
+    wl = dataclasses.replace(SIMULATED["1k"], num_requests=10)
+    reqs = generate(wl, rps=2.0, seed=3)
+    sim = ClusterSim(cfg, "flowkv", num_prefill=2, num_decode=2,
+                     faults=[FaultSpec("node_crash", at=2.0, node_id=0),
+                             FaultSpec("transfer_fail", at=0.0, count=2)],
+                     heartbeat_timeout=1.0)
+    path = tmp_path / "chaos.jsonl"
+    stats, _ = capture(sim, reqs, path=path, meta={"config": "llama31-8b"})
+    assert stats["fault_kills"] == 1
+    trace = read_trace(path)
+    assert trace.meta["faults"]["specs"]      # chaos is part of the capture
+    assert trace.meta["heartbeat_timeout"] == 1.0
+    r1 = replay(path)
+    r2 = replay(path)
+    assert r1["per_request"] == r2["per_request"]
+    assert r1["stats"] == r2["stats"]
+    assert r1["stats"]["fault_kills"] == stats["fault_kills"]
+    assert r1["stats"]["transfer_retries"] == stats["transfer_retries"]
+    # and the replay reproduces the ORIGINAL chaos run, not merely itself
+    assert r1["per_request"] == per_request_stats(reqs)

@@ -96,6 +96,13 @@ def check(stats: Dict[str, Dict[str, Dict[str, float]]]) -> None:
         if name == "normal":
             assert la["finished"] == la["offered"], \
                 f"normal: only {la['finished']}/{la['offered']} finished"
+        if name == "multiturn":
+            assert la["prefix_tokens_reused"] > 0, \
+                "multiturn: conversation history was never reused"
+            assert la["tier_promoted_blocks"] > 0, \
+                "multiturn: the host tier never promoted anything"
+            assert la["leaked_blocks"] == 0, \
+                f"multiturn: {la['leaked_blocks']} leaked blocks"
 
 
 def history_metrics(stats: Dict[str, Dict[str, Dict[str, float]]]

@@ -108,6 +108,19 @@ TPU_DCN = TransportProfile(  # cross-pod, over data-center network
     fixed_s=5e-4,
 )
 
+# --- tiered KV store (Mooncake direction) -------------------------------------
+HOST_DRAM = TransportProfile(
+    # Host-DRAM tier leg: pageable-host staging + pinning + page re-layout
+    # on the way back into the pool. Deliberately SLOWER than every wire
+    # profile ``select_route`` can return (IPC 23.5, NCCL_ENI 9.2, ICI 50,
+    # DCN 25 GB/s) so the router's tier lattice holds by construction:
+    # HBM-local < HBM-remote < DRAM-local < DRAM-remote < recompute.
+    name="host_dram",
+    per_call_s=150e-6,         # pin + descriptor-table staging per dispatch
+    bandwidth_Bps=6.0e9,       # pageable H2D/D2H effective bandwidth
+    fixed_s=3e-4,
+)
+
 PROFILES: Dict[str, TransportProfile] = {
     p.name: p
     for p in (
@@ -119,6 +132,7 @@ PROFILES: Dict[str, TransportProfile] = {
         MOONCAKE_RDMA,
         TPU_ICI,
         TPU_DCN,
+        HOST_DRAM,
     )
 }
 
@@ -232,6 +246,27 @@ def estimate_overlapped_transfer_s(profile: TransportProfile, num_bytes: int,
         prev = end
     exposed, _ = layer_window_overlap(lats, ends, num_layers, prefill_s)
     return exposed
+
+
+def tier_fetch_latency(route: TransportProfile, hbm_bytes: int,
+                       dram_bytes: int, remote: bool = True) -> float:
+    """Price a tier-aware prefix fetch as its fused-dispatch legs.
+
+    ``dram_bytes`` of the prefix sit in the source's host tier and must be
+    PROMOTED first (one host->HBM descriptor-table dispatch on the
+    :data:`HOST_DRAM` leg); then, when the source is ``remote``, the whole
+    prefix (``hbm_bytes + dram_bytes``) crosses the wire as one more fused
+    dispatch on ``route``. A local hit with no DRAM blocks is free (the
+    blocks are shared, nothing moves), which is what keeps the lattice
+    HBM-local < HBM-remote < DRAM-local < DRAM-remote.
+    """
+    latency = 0.0
+    if dram_bytes > 0:
+        latency += HOST_DRAM.latency(num_calls=1, num_bytes=int(dram_bytes))
+    if remote:
+        latency += route.latency(num_calls=1,
+                                 num_bytes=int(hbm_bytes + dram_bytes))
+    return latency
 
 
 def select_route(same_host: bool, target: str = "gpu") -> TransportProfile:

@@ -15,12 +15,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.costmodel import (TransportProfile,
                                   estimate_overlapped_transfer_s,
                                   predicted_chunked_ttft_s, predicted_ttft_s,
-                                  select_route)
+                                  select_route, tier_fetch_latency)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.scheduler.load_score import (Thresholds, classify_regime,
                                              cluster_scores, node_score)
 from repro.core.scheduler.metrics import NodeStatus, normalize
-from repro.serving.prefix_cache import PrefixCacheIndex
+from repro.serving.prefix_cache import TIER_HBM, PrefixCacheIndex
 from repro.serving.request import Request, RequestState
 from repro.sim.hardware import HardwareProfile
 
@@ -417,16 +417,19 @@ class GlobalController:
         return chain
 
     def shareable_prefix(self, node_id: int, req: Request,
-                         hashes=None) -> Tuple[int, List[int]]:
+                         hashes=None) -> Tuple[int, List[int], List[str]]:
         """A node's SHAREABLE prefix for ``req``: full blocks only, capped so
         at least one suffix token is always computed (the last prompt token's
-        forward emits the first output token)."""
+        forward emits the first output token). Returns ``(hit_tokens,
+        block_ids, tiers)`` — ``tiers[i]`` names the tier backing
+        ``block_ids[i]`` (``"hbm"`` pool blocks are directly shareable,
+        ``"dram"`` host blocks must be promoted first)."""
         if hashes is None:
             hashes = self._chain_for(req)
         m = self.prefix_index.lookup(node_id, req.prompt_tokens, hashes)
         bs = self.prefix_index.block_size
         nb = min(len(m.block_ids), max(0, req.prompt_len - 1) // bs)
-        return nb * bs, m.block_ids[:nb]
+        return nb * bs, m.block_ids[:nb], m.tiers[:nb]
 
     def resolve_local_prefix(self, node_id: int, req: Request,
                              block_alive: Callable[[int], bool]) -> List[int]:
@@ -435,10 +438,21 @@ class GlobalController:
         semantics cannot drift): re-stamp the request with the reuse THIS
         node can actually deliver and return the shareable block ids.
         ``block_alive`` is the node's own liveness check (belt and braces —
-        index drift past the on_free invalidation would be a bug)."""
-        hit, blocks = self.shareable_prefix(node_id, req)
-        if blocks and not all(block_alive(b) for b in blocks):
-            hit, blocks = 0, []
+        index drift past the on_free invalidation would be a bug).
+
+        Only the leading HBM-backed, live run is shareable: a ``dram``
+        entry mid-chain means the runtime's promote pass has not (or could
+        not) lift it back into the pool, so the match truncates there —
+        reuse degrades, it never dereferences a host block as a pool block.
+        """
+        hit, blocks, tiers = self.shareable_prefix(node_id, req)
+        nb = 0
+        for b, t in zip(blocks, tiers):
+            if t != TIER_HBM or not block_alive(b):
+                break
+            nb += 1
+        blocks = blocks[:nb]
+        hit = min(hit, nb * self.prefix_index.block_size)
         req.num_cached_prefix_tokens = hit
         req.prefix_src_node = node_id if hit else None
         req.prefix_block_ids = list(blocks)
@@ -475,26 +489,37 @@ class GlobalController:
         probe = self.prefix_index.has_entries and \
             any(n.supports_prefix_reuse for n in pnodes)
         hashes = self._chain_for(req) if probe else []
-        remote_best: Tuple[int, List[int], Optional[int]] = (0, [], None)
+        remote_best: Tuple[int, List[int], List[str], Optional[int]] = (0, [], [], None)
         if probe:
             for nid, _ in self.prefix_index.best_nodes(req.prompt_tokens, hashes):
                 if nid in self.nodes and self.nodes[nid].alive:
-                    hit, blocks = self.shareable_prefix(nid, req, hashes)
+                    hit, blocks, tiers = self.shareable_prefix(nid, req, hashes)
                     if hit > remote_best[0]:
-                        remote_best = (hit, blocks, nid)
+                        remote_best = (hit, blocks, tiers, nid)
         best = None   # (ttft, node, hit, src_node, blocks)
+        bs = self.prefix_index.block_size
         for n in pnodes:
-            local_hit, local_blocks = (self.shareable_prefix(n.node_id, req, hashes)
-                                       if probe and n.supports_prefix_reuse else (0, []))
-            t = self._ttft_estimate(n, req, hit=local_hit)
+            local_hit, local_blocks, local_tiers = (
+                self.shareable_prefix(n.node_id, req, hashes)
+                if probe and n.supports_prefix_reuse else (0, [], []))
+            # DRAM-backed local blocks must be promoted before reuse: price
+            # the host->HBM leg so a DRAM-local plan ranks between
+            # HBM-remote and recompute (the tier lattice).
+            dram_local = sum(1 for t in local_tiers if t != TIER_HBM) * bs
+            t = self._ttft_estimate(n, req, hit=local_hit) + \
+                tier_fetch_latency(select_route(True, self.target),
+                                   0, int(self.model_cost.kv_bytes_per_token
+                                          * dram_local), remote=False)
             cand = (t, n, local_hit, n.node_id if local_hit else None, local_blocks)
             if best is None or cand[0] < best[0]:
                 best = cand
-            r_hit, r_blocks, r_nid = remote_best
+            r_hit, r_blocks, r_tiers, r_nid = remote_best
             if (n.supports_prefix_reuse and r_nid is not None
                     and r_nid != n.node_id and r_hit > local_hit):
+                dram_remote = sum(1 for x in r_tiers if x != TIER_HBM) * bs
                 t = self._ttft_estimate(n, req, hit=r_hit) + \
-                    self._prefix_fetch_estimate(self.nodes[r_nid], n, r_hit)
+                    self._prefix_fetch_estimate(self.nodes[r_nid], n, r_hit,
+                                                dram_tokens=dram_remote)
                 if t < best[0]:
                     best = (t, n, r_hit, r_nid, r_blocks)
         _, p_best, hit, src, blocks = best
@@ -521,12 +546,47 @@ class GlobalController:
         hit = req.num_cached_prefix_tokens
         ok = src is not None and src.alive and hit > 0
         if ok:
-            live, blocks = self.shareable_prefix(src.node_id, req)
-            ok = live >= hit and blocks[:len(req.prefix_block_ids)] == \
-                list(req.prefix_block_ids)
+            live, blocks, tiers = self.shareable_prefix(src.node_id, req)
+            k = len(req.prefix_block_ids)
+            # DRAM entries in the stamped range mean promotion has not run
+            # (or failed): the pool->pool fetch cannot address host blocks,
+            # so the plan is stale until re-stamped post-promotion.
+            ok = (live >= hit
+                  and blocks[:k] == list(req.prefix_block_ids)
+                  and all(t == TIER_HBM for t in tiers[:k]))
         if not ok:
             req.clear_prefix_plan()
         return ok
+
+    def refresh_prefix_plan(self, req: Request) -> bool:
+        """Re-stamp a REMOTE prefix plan from the live index, after the
+        source's promote pass may have re-pointed chain entries at fresh
+        pool blocks (demote->promote changes physical ids, so the routed
+        stamp goes stale even though the KV is present and correct).
+
+        Keeps the plan honest rather than bigger: the refreshed hit is
+        capped at the routed hit (pricing already happened), and only the
+        leading HBM-backed run is kept. Clears the plan (returns False)
+        when nothing shareable remains.
+        """
+        src = self.nodes.get(req.prefix_src_node)
+        if src is None or not src.alive or req.num_cached_prefix_tokens <= 0:
+            req.clear_prefix_plan()
+            return False
+        live, blocks, tiers = self.shareable_prefix(src.node_id, req)
+        bs = self.prefix_index.block_size
+        nb = 0
+        cap = req.num_cached_prefix_tokens // bs
+        for b, t in zip(blocks[:cap], tiers[:cap]):
+            if t != TIER_HBM:
+                break
+            nb += 1
+        if nb == 0:
+            req.clear_prefix_plan()
+            return False
+        req.num_cached_prefix_tokens = nb * bs
+        req.prefix_block_ids = list(blocks[:nb])
+        return True
 
     def rehome_prefix(self, req: Request, node_id: int,
                       blocks: Sequence[int]) -> None:
@@ -541,12 +601,17 @@ class GlobalController:
                                list(blocks)[:full_nb])
 
     def _prefix_fetch_estimate(self, src: NodeHandle, dst: NodeHandle,
-                               hit_tokens: int) -> float:
+                               hit_tokens: int, dram_tokens: int = 0) -> float:
         """Latency of pulling a resident prefix src -> dst: ONE fused
-        descriptor-table dispatch, priced like any other KV transfer."""
+        descriptor-table dispatch over the wire, plus (when part of the
+        prefix sits in the source's host tier) ONE promote dispatch on the
+        HOST_DRAM leg first — the tier-aware fetch price."""
         profile = select_route(src.host_id == dst.host_id, self.target)
-        nbytes = self.model_cost.kv_bytes_per_token * hit_tokens
-        return profile.latency(num_calls=1, num_bytes=int(nbytes))
+        bpt = self.model_cost.kv_bytes_per_token
+        return tier_fetch_latency(
+            profile,
+            hbm_bytes=int(bpt * (hit_tokens - dram_tokens)),
+            dram_bytes=int(bpt * dram_tokens), remote=True)
 
     def _ttft_estimate(self, node: NodeHandle, req: Request,
                        hit: Optional[int] = None) -> float:
@@ -568,7 +633,7 @@ class GlobalController:
         not re-counting prefill work already done).
         """
         if hit is None:
-            hit, _ = self.shareable_prefix(node.node_id, req)
+            hit, _, _ = self.shareable_prefix(node.node_id, req)
         sched = node.scheduler
         hw = node.hardware
         fpt = self.model_cost.flops_per_token

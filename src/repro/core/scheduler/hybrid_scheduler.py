@@ -283,7 +283,7 @@ class HybridScheduler:
                 # the fetch-time ``num_cached_prefix_tokens`` stamp
                 extra = self.bm.blocks_needed(req.prompt_len + 1) \
                     - len(self.bm.get(req.request_id))
-                if extra > self.bm.num_free:
+                if extra > self.bm.free_capacity:
                     break   # KV pool full — leave in waiting
             else:
                 if self.resolve_prefix is not None:
@@ -301,7 +301,7 @@ class HybridScheduler:
                 else:
                     req.num_cached_prefix_tokens = 0
                 if not self.bm.can_allocate(req.prompt_len + 1,
-                                            shared_blocks=len(prefix_blocks)):
+                                            shared_block_ids=prefix_blocks):
                     break   # KV pool full — leave in waiting
             new_tokens = req.prompt_len - req.num_cached_prefix_tokens
             chunk = min(new_tokens, self._chunk_cap(budget)) \

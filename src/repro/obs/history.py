@@ -4,7 +4,7 @@ Every gated benchmark (``--json``/``--check`` CLI contract) can also append
 its headline metrics to a schema-versioned history file at the repo root —
 ``BENCH_transfer.json``, ``BENCH_decode.json``, ``BENCH_scenarios.json``,
 ``BENCH_prefix.json``, ``BENCH_breakdown.json``, ``BENCH_chunked.json``,
-``BENCH_faults.json`` — via its ``--history``
+``BENCH_tiered.json``, ``BENCH_faults.json`` — via its ``--history``
 flag. The files are committed, so the repo carries its own perf trajectory:
 each PR's CI run appends one entry, and ``tools/bench_history.py --check``
 fails the build when the newest entry regresses against the committed
@@ -107,6 +107,20 @@ AREAS: Dict[str, Dict[str, MetricSpec]] = {
         "flowkv_xfer_frac": MetricSpec("le", 0.0),
         "blockwise_xfer_frac": MetricSpec("info"),
         "flowkv_over_blockwise_xfer": MetricSpec("le", 0.0),
+    },
+    "tiered": {
+        # multiturn-scenario A/B (benchmarks/tiered_kv.py): the host-DRAM
+        # tier must keep beating the HBM-only pool on p95 TTFT and prefix
+        # hit rate, with structurally zero leaked blocks on either tier.
+        "p95_ttft_speedup": MetricSpec("ge", 0.02),
+        "tiered_hit_rate": MetricSpec("ge", 0.02),
+        "hbm_hit_rate": MetricSpec("info"),
+        "tiered_p95_ttft_s": MetricSpec("le", 0.05),
+        "leaked_blocks": MetricSpec("exact"),
+        "demoted_blocks": MetricSpec("info"),
+        "promoted_blocks": MetricSpec("info"),
+        "engine_promoted_blocks": MetricSpec("exact"),
+        "engine_wall_s": MetricSpec("info"),
     },
     "faults": {
         # chaos A/B (benchmarks/fault_tolerance.py): the failure scenario

@@ -32,14 +32,15 @@ import pathlib
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
-TRACE_SCHEMA_VERSION = 3
+TRACE_SCHEMA_VERSION = 4
 
 # Schema history: v1 had the six lifecycle span kinds; v2 (chunked prefill +
 # layerwise overlap) added the fine-grained ``prefill_chunk`` and
 # ``transfer_layer_window`` kinds; v3 (fault tolerance) added the
-# ``failure`` / ``transfer_retry`` / ``recovery`` kinds. Each bump is
-# additive, so v1 and v2 traces still read.
-SUPPORTED_SCHEMAS = (1, 2, 3)
+# ``failure`` / ``transfer_retry`` / ``recovery`` kinds; v4 (tiered KV)
+# added ``tier_demote`` / ``tier_promote``. Each bump is additive, so
+# older traces still read.
+SUPPORTED_SCHEMAS = (1, 2, 3, 4)
 
 # The span taxonomy (docs/observability.md). Producers are free to add new
 # names — consumers must treat this as open — but these are the request
@@ -51,9 +52,14 @@ SUPPORTED_SCHEMAS = (1, 2, 3)
 # transfer degraded to recompute), ``transfer_retry`` one failed/corrupt
 # transfer attempt about to back off, ``recovery`` the failure-to-resumed
 # interval (attrs carry replayed token counts).
+# The tier kinds: ``tier_demote`` is one fused pool->host plan moving cold
+# prefix blocks to DRAM under capacity pressure (trace_id -1: demotion is
+# pressure-driven, not owned by any one request); ``tier_promote`` one fused
+# host->pool plan bringing a prefix back for the request it serves.
 SPAN_NAMES = ("queue", "admission", "prefill", "prefill_chunk", "transfer",
               "transfer_layer_window", "decode", "prefix_fetch",
-              "failure", "transfer_retry", "recovery")
+              "failure", "transfer_retry", "recovery",
+              "tier_demote", "tier_promote")
 
 
 @dataclasses.dataclass

@@ -143,6 +143,13 @@ class NodeEngine:
         # recompute); the runtime consults this before wiring the node into
         # the reuse plane (resolver hook + index recording).
         self.supports_prefix_reuse = self.paged and self.model.prefill_suffix is not None
+        # Optional repro.serving.host_tier.TierManager, attached by the
+        # cluster when host_tier_blocks > 0 (paged, reuse-capable engines
+        # only): the node's host-DRAM tier for demoted prefix blocks. The
+        # engine itself never branches on it — demotion hangs off
+        # bm.on_evict and promotion runs from the cluster's pre-admission
+        # pass — but checkpoint/teardown tooling finds it here.
+        self.tier = None
         self.prefill_tokens_computed = 0   # prompt tokens actually forwarded
         self.prefix_hits = 0               # prefills that reused a resident prefix
         self.prefix_tokens_reused = 0      # prompt tokens NOT recomputed

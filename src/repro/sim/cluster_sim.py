@@ -28,7 +28,7 @@ from repro.core.scheduler.global_controller import (AdmissionPolicy,
                                                     NodeHandle)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.block_manager import BlockManager, OutOfBlocksError
-from repro.core.costmodel import (MOONCAKE_RDMA, NCCL_ENI, IPC,
+from repro.core.costmodel import (HOST_DRAM, MOONCAKE_RDMA, NCCL_ENI, IPC,
                                   VLLM_MERGE_ENI, VLLM_MERGE_INTRA,
                                   TransportProfile, layer_window_overlap,
                                   select_route)
@@ -36,6 +36,7 @@ from repro.core.layout import KVCacheSpec
 from repro.core.transfer import TransferPlanner, get_backend
 from repro.faults import as_injector
 from repro.models.common import ModelConfig
+from repro.serving.host_tier import TierManager
 from repro.serving.request import Request, RequestState
 from repro.sim.events import EventQueue
 from repro.sim.hardware import A100, HardwareProfile
@@ -157,6 +158,7 @@ class ClusterSim:
                  role_flip: bool = False,
                  admission: Optional[AdmissionPolicy] = None,
                  prefix_reuse: Optional[bool] = None,
+                 host_tier_blocks: int = 0,
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  layer_window: int = 0,
@@ -245,6 +247,13 @@ class ClusterSim:
         if prefix_reuse is None:
             prefix_reuse = self.spec.load_aware and self.routing == "load_aware"
         self.prefix_reuse = prefix_reuse
+        # Host-DRAM tier mirror: the SAME TierManager class the real cluster
+        # wires (kv=None = bookkeeping-only pools), so demote/promote
+        # decisions and span sequences are identical by construction. The
+        # priced legs are the promote latencies (HOST_DRAM profile) charged
+        # where the real cluster pays the host->HBM copy.
+        self.host_tier_blocks = host_tier_blocks
+        self.tiers: Dict[int, TierManager] = {}
         for i, (role, hw) in enumerate(roles):
             node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
                            max_batch_tokens, chunked_prefill=chunked_prefill,
@@ -261,6 +270,13 @@ class ClusterSim:
                  self.controller.prefix_index.invalidate_blocks(nid, blocks))
             if prefix_reuse:
                 node.scheduler.resolve_prefix = self._make_resolver(node)
+                if host_tier_blocks > 0:
+                    self.tiers[i] = TierManager(
+                        i, node.bm, self.controller.prefix_index,
+                        self.kv_spec, host_tier_blocks, kv=None,
+                        schedule=self.spec.schedule,
+                        get_tracer=lambda: self.tracer,
+                        get_clock=lambda: self.eq.now).attach()
         if self.spec.colocated:
             for node in self.nodes.values():
                 node.scheduler.set_priority("both")
@@ -369,6 +385,12 @@ class ClusterSim:
         timeout so detection fires even on an otherwise-idle cluster."""
         self._dead.add(node_id)
         self.fault_kills += 1
+        # the host tier dies with the node: detach the demotion hook BEFORE
+        # the pool teardown (nowhere to demote to), then drop its entries
+        self.nodes[node_id].bm.on_evict = None
+        tm = self.tiers.get(node_id)
+        if tm is not None:
+            tm.clear()
         self.nodes[node_id].bm.release_all()
         self.eq.push(self.eq.now + self.heartbeat_timeout + 1e-6,
                      self._failure_check)
@@ -396,6 +418,26 @@ class ClusterSim:
         req.recovery_start = None
         req.recovery_start_wall = None
 
+    # -- tier promotion (mirrors PDCluster._promote_pending, priced) -----------------
+    def _promote_pending(self, node: SimNode) -> float:
+        """Lift the head-of-line waiting request's LOCAL host-tier prefix
+        back into the pool before this node schedules; returns the priced
+        host->HBM latency (charged against this node's compute stream —
+        where the real cluster pays the actual copy)."""
+        tm = self.tiers.get(node.node_id)
+        if tm is None or not node.scheduler.prefill.waiting:
+            return 0.0
+        req = node.scheduler.prefill.waiting[0]
+        if node.bm.owns(req.request_id):
+            return 0.0
+        if req.prefix_src_node is not None and \
+                req.prefix_src_node != node.node_id:
+            return 0.0   # remote plan: promotion happens at the SOURCE node
+        if tm.promote_match(req.prompt_tokens, trace_id=req.request_id,
+                            profile=HOST_DRAM):
+            return tm.last_promote_latency_s
+        return 0.0
+
     # -- prefix fetch (mirrors PDCluster._fetch_prefix, priced) ----------------------
     def _fetch_pending_prefixes(self, node: SimNode) -> None:
         """Start the remote-prefix pull for this node's next admission.
@@ -414,12 +456,25 @@ class ClusterSim:
                 node.bm.owns(req.request_id):
             return
         src = self.nodes.get(src_id)
-        hit = req.num_cached_prefix_tokens
         if src is None:
             req.clear_prefix_plan()
             return
+        # Source-side promotion first (same ordering as the real cluster):
+        # demote->promote changes physical ids, so the routed block list is
+        # refreshed before validation. The host->HBM leg is a priced serial
+        # prelude to the wire fetch.
+        promote_s = 0.0
+        src_tm = self.tiers.get(src_id)
+        if src_tm is not None and \
+                src_tm.promote_match(req.prompt_tokens,
+                                     trace_id=req.request_id,
+                                     profile=HOST_DRAM):
+            promote_s = src_tm.last_promote_latency_s
+            if not self.controller.refresh_prefix_plan(req):
+                return   # nothing shareable survived promotion
         if not self.controller.validate_prefix_plan(req):
             return   # stale plan cleared by the shared validator
+        hit = req.num_cached_prefix_tokens
         if not node.bm.can_allocate(hit):
             return   # destination pool full — retry next cycle
         dst_blocks = node.bm.allocate(req.request_id, hit)
@@ -427,7 +482,7 @@ class ClusterSim:
                                 req.prefix_block_ids, dst_blocks)
         profile = (self.spec.transfer_intra if self.same_host
                    else self.spec.transfer_inter)
-        latency = plan.latency(profile)
+        latency = plan.latency(profile) + promote_s
         self.prefix_fetches += 1
         self.prefix_fetch_dispatches.append(plan.num_dispatches)
         req.prefix_fetch_dispatches = plan.num_dispatches
@@ -481,10 +536,14 @@ class ClusterSim:
         if self.faults is None or \
                 not self.faults.heartbeat_suppressed(node_id, self.eq.now):
             self.controller.heartbeat(node_id, self.eq.now)
+        promote_s = 0.0
         if self.prefix_reuse:
+            promote_s = self._promote_pending(node)
             self._fetch_pending_prefixes(node)
         decision = node.scheduler.schedule()
-        duration = 0.0
+        # a local promote is a serial host->HBM copy ahead of this cycle's
+        # compute (the real engine blocks on the actual dispatch)
+        duration = promote_s
         if decision.prefill_batch:
             tokens = decision.num_prefill_tokens
             duration += node.prefill_duration(tokens)
@@ -509,6 +568,9 @@ class ClusterSim:
         if not decision.prefill_batch and not decision.decode_batch:
             node.scheduler.last_compute_util = 0.0
             node.scheduler.last_bandwidth_util = 0.0
+            if promote_s:
+                node.busy_until = max(node.busy_until,
+                                      self.eq.now + promote_s)
             return   # idle: next arrival/transfer will poke us
         node.busy_until = self.eq.now + duration
         self.eq.push(node.busy_until,
@@ -855,6 +917,17 @@ class ClusterSim:
                 (sum(self.transfer_hidden) + sum(self.transfer_latencies)) > 0
                 else 0.0),
             "events": len(self.controller.events),
+            # tier plane (same keys as PDCluster.stats)
+            "tier_demoted_blocks": sum(
+                t.demoted_blocks for t in self.tiers.values()),
+            "tier_promoted_blocks": sum(
+                t.promoted_blocks for t in self.tiers.values()),
+            "tier_host_resident": sum(
+                t.host.num_resident for t in self.tiers.values()),
+            "cached_reused": sum(
+                n.bm.cached_reused for n in self.nodes.values()),
+            "cached_evicted": sum(
+                n.bm.cached_evicted for n in self.nodes.values()),
             # fault plane (same keys as PDCluster.stats)
             "fault_kills": self.fault_kills,
             "transfer_retries": self.transfer_retry_count,
@@ -884,6 +957,9 @@ class ClusterSim:
         leaked = 0
         for node in self.nodes.values():
             node.bm.check_invariants()
+            tm = self.tiers.get(node.node_id)
+            if tm is not None and node.node_id not in self._dead:
+                tm.check_invariants()
             leaked += sum(1 for rid in node.bm._table if rid not in live)
         return leaked
 

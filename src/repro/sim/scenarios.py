@@ -26,7 +26,8 @@ from repro.core.scheduler.global_controller import AdmissionPolicy
 from repro.faults import FaultInjector, FaultSpec
 from repro.sim.cluster_sim import ClusterSim
 from repro.sim.hardware import A100, H20, L20, HardwareProfile
-from repro.sim.workload import WorkloadSpec, generate, generate_mixture
+from repro.sim.workload import (WorkloadSpec, generate,
+                                generate_conversations, generate_mixture)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,8 +57,25 @@ class Scenario:
     # staleness window for declaring a quiet node dead
     faults: Tuple[FaultSpec, ...] = ()
     heartbeat_timeout: float = 10.0
+    # multi-turn chat (turns > 1): num_requests counts CONVERSATIONS, each
+    # re-submitting its growing history every think_time_s; specs[0] shapes
+    # the first turn (mean_input) and the per-turn output (mean_output)
+    turns: int = 1
+    think_time_s: float = 2.0
+    user_turn_tokens: int = 128
+    # pool shape: small pools + a host tier make the demote/promote plane
+    # load-bearing instead of idle (tiered KV scenario)
+    blocks_per_node: int = 8192
+    host_tier_blocks: int = 0
 
     def requests(self):
+        if self.turns > 1:
+            return generate_conversations(
+                self.num_requests, self.turns, rps=self.rps,
+                first_turn_tokens=self.specs[0].mean_input,
+                user_turn_tokens=self.user_turn_tokens,
+                output_tokens=self.specs[0].mean_output,
+                think_time_s=self.think_time_s, seed=self.seed)
         if len(self.specs) == 1:
             spec = dataclasses.replace(self.specs[0],
                                        num_requests=self.num_requests)
@@ -85,6 +103,8 @@ class Scenario:
             faults=FaultInjector(self.faults, seed=self.seed)
             if self.faults else None,
             heartbeat_timeout=self.heartbeat_timeout,
+            blocks_per_node=self.blocks_per_node,
+            host_tier_blocks=self.host_tier_blocks,
         )
 
     def run(self, routing: str) -> Dict[str, float]:
@@ -107,6 +127,7 @@ _PREFILL_HEAVY = WorkloadSpec("imbalance-prefill", 10240, 32)
 _DECODE_HEAVY = WorkloadSpec("imbalance-decode", 512, 384)
 _OVERLOAD = WorkloadSpec("overload-10k", 10240, 256)
 _HET = WorkloadSpec("het-4k", 4096, 256)
+_CHAT = WorkloadSpec("chat-turn", 1024, 128)
 
 SCENARIOS: Dict[str, Scenario] = {
     # Balanced traffic on a balanced fleet: every policy should clear this;
@@ -164,6 +185,19 @@ SCENARIOS: Dict[str, Scenario] = {
                 FaultSpec("degraded_bandwidth", at=15.0, duration=20.0,
                           factor=4.0)),
         heartbeat_timeout=2.0,
+    ),
+    # Multi-turn chat on deliberately small HBM pools: every turn re-submits
+    # the growing conversation history, and between turns capacity pressure
+    # demotes the cold history to the host-DRAM tier. The tiered store wins
+    # by promoting it back (one fused dispatch) instead of recomputing;
+    # benchmarks/tiered_kv.py A/Bs this same scenario tiered vs HBM-only.
+    "multiturn": Scenario(
+        name="multiturn",
+        description="multi-turn conversations on small HBM pools — the "
+                    "host-DRAM tier turns history recompute into promotion",
+        num_prefill=1, num_decode=1, rps=0.5, ttft_slo_s=10.0,
+        specs=(_CHAT,), num_requests=16, turns=4, think_time_s=4.0,
+        blocks_per_node=384, host_tier_blocks=4096,
     ),
     "heterogeneous": Scenario(
         name="heterogeneous",

@@ -63,6 +63,47 @@ def generate(spec: WorkloadSpec, rps: float, seed: int = 0,
     return out
 
 
+def generate_conversations(num_conversations: int, turns: int, rps: float,
+                           *, first_turn_tokens: int = 1024,
+                           user_turn_tokens: int = 128,
+                           output_tokens: int = 128,
+                           think_time_s: float = 2.0, seed: int = 0,
+                           vocab_size: int = 32000) -> List[Request]:
+    """Multi-turn chat traffic: turn ``k``'s prompt is turn ``k-1``'s prompt
+    + its generated output + a fresh user message.
+
+    This is the workload the tiered KV store exists for — every turn
+    re-submits the whole conversation history, so the shared prefix GROWS
+    per turn and stays valuable across the think-time gap (long enough for
+    capacity pressure to demote it to host DRAM between turns).
+
+    Conversation STARTS are a Poisson process at ``rps``; turns within a
+    conversation are spaced ``think_time_s`` apart. The simulator emits
+    token id 0 for every generated token, so histories append ``[0] *
+    output_tokens`` — digest-exact with what the virtual decode produced.
+    """
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / max(rps, 1e-9), size=num_conversations)
+    starts = np.cumsum(gaps)
+    out: List[Request] = []
+    for c in range(num_conversations):
+        history = rng.randint(0, vocab_size,
+                              size=first_turn_tokens).tolist()
+        t = float(starts[c])
+        for _ in range(turns):
+            out.append(Request(
+                prompt_tokens=list(history),
+                sampling=SamplingParams(max_new_tokens=output_tokens),
+                arrival_time=t,
+            ))
+            history = (history + [0] * output_tokens +
+                       rng.randint(0, vocab_size,
+                                   size=user_turn_tokens).tolist())
+            t += think_time_s
+    out.sort(key=lambda r: r.arrival_time)
+    return out
+
+
 def generate_mixture(specs: Sequence[WorkloadSpec], weights: Sequence[float],
                      rps: float, num_requests: int, seed: int = 0,
                      vocab_size: int = 32000) -> List[Request]:

@@ -126,7 +126,9 @@ def test_cancel_frees_blocks_on_decode_node(small_model):
     for eng in client.cluster.engines.values():
         assert not eng.scheduler.bm.owns(h.request_id)
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 64, "cancel leaked blocks"
+        # refcount-zero blocks PARK in the LRU cache (reusable, not leaked):
+        # free_capacity is the no-leak audit, num_free alone undercounts
+        assert eng.scheduler.bm.free_capacity == 64, "cancel leaked blocks"
     assert not h.cancel()                          # idempotent: already terminal
     # the stream ends cleanly instead of hanging
     assert list(h.tokens()) == h.request.output_tokens
@@ -156,7 +158,7 @@ def test_cancel_queued_request_before_prefill(small_model):
     assert h1.result() == ref1
     for eng in client.cluster.engines.values():
         assert not eng.scheduler.bm.owns(h2.request_id)
-        assert eng.scheduler.bm.num_free == 64
+        assert eng.scheduler.bm.free_capacity == 64
     # run() compat wrapper terminates even when some requests were cancelled
     assert client.cluster.submitted == 2
     assert len(client.cluster.finished) + len(client.cluster.cancelled) == 2
@@ -189,7 +191,7 @@ def test_set_role_flip_keeps_generation_token_correct(small_model):
     # no leaks across the flip
     for eng in client.cluster.engines.values():
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 128
+        assert eng.scheduler.bm.free_capacity == 128
 
 
 def test_checkpoint_restores_roles_and_cancelled(tmp_path, small_model):
@@ -351,7 +353,7 @@ def test_overload_burst_rejected_with_retry_after(small_model):
     assert client.cluster.submitted == len(prompts)
     for eng in client.cluster.engines.values():
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 128
+        assert eng.scheduler.bm.free_capacity == 128
     # back-off honored -> resubmission of the same prompts is admitted
     for _ in range(3):
         client.step()
@@ -412,7 +414,7 @@ def test_decode_preemption_spill_resume_token_identical(small_model):
         assert h.request.retries == 0          # spill is not the fault path
     for eng in client.cluster.engines.values():
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 3, "spill/resume leaked blocks"
+        assert eng.scheduler.bm.free_capacity == 3, "spill/resume leaked blocks"
         assert not eng.spilled, "saved spill was never consumed"
 
 
@@ -443,7 +445,7 @@ def test_cancel_while_swapped_discards_spill(small_model):
     client.drain(max_cycles=400)
     for eng in client.cluster.engines.values():
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 3
+        assert eng.scheduler.bm.free_capacity == 3
 
 
 def test_stats_expose_transfer_dispatch_counts(small_model):

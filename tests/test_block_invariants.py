@@ -1,0 +1,215 @@
+"""Property-based invariant suite for the block/tier plane.
+
+Random interleavings of the full op vocabulary — allocate / share / free /
+grow (ensure_capacity) / demote (cache reclaim through the tier hook) /
+promote / rehome / release_all — against a BlockManager + GlobalPrefixIndex
++ TierManager stack, on BOTH allocators. After EVERY op the whole plane is
+audited:
+
+* ``BlockManager.check_invariants`` — refcounts mirror tables; free +
+  tabled + cached tiles the pool; cached and refcounted sets disjoint;
+* ``BlockManager.assert_no_leaks`` — no table outlives its request;
+* ``TierManager.check_invariants`` — host-resident == index-DRAM-backed;
+* tier disjointness/exhaustiveness — every backed index entry lives in
+  EXACTLY one tier, HBM entries point at live pool blocks, DRAM entries at
+  resident host blocks, and the two backmaps mirror the forward map.
+
+``hypothesis`` is optional (guarded import, like ``test_allocator.py``):
+without it a deterministic seeded-random fallback still drives >= 200
+interleavings per allocator.
+"""
+import random
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import layout as L
+from repro.core.block_manager import BlockManager
+from repro.serving.host_tier import TierManager
+from repro.serving.prefix_cache import (GlobalPrefixIndex, TIER_DRAM,
+                                        TIER_HBM)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BLOCK = 4
+POOL = 32
+HOST = 16          # small on purpose: promotion must survive host evictions
+NODE = 0
+OPS = ("alloc", "share", "free", "grow", "demote", "promote", "rehome",
+       "release_all")
+SPEC = L.KVCacheSpec(num_layers=2, num_blocks=POOL, block_size=BLOCK,
+                     num_kv_heads=2, head_dim=8, dtype=jnp.float32)
+
+
+class _Plane:
+    """One node's block/tier plane plus the model state the audit needs."""
+
+    def __init__(self, allocator: str):
+        self.bm = BlockManager(POOL, BLOCK, allocator=allocator)
+        self.index = GlobalPrefixIndex(BLOCK)
+        self.bm.on_free = \
+            lambda blocks: self.index.invalidate_blocks(NODE, blocks)
+        self.tm = TierManager(NODE, self.bm, self.index, SPEC, HOST,
+                              kv=None).attach()
+        self.live = {}          # rid -> prompt token list (indexed prefix)
+        self.tokens = {}        # rid -> current table token count
+        self.prompts = []       # every prompt ever inserted (promote targets)
+        self.next_rid = 0
+        self.next_token = 1
+
+
+def _fresh_prompt(p: _Plane, ntok: int):
+    out = list(range(p.next_token, p.next_token + ntok))
+    p.next_token += ntok
+    return out
+
+
+def _admit(p: _Plane, prompt, prefix_blocks=()):
+    rid, ntok = p.next_rid, len(prompt)
+    p.next_rid += 1
+    p.bm.allocate(rid, ntok, prefix_blocks=prefix_blocks)
+    p.index.insert(NODE, prompt, p.bm.get(rid))
+    p.live[rid] = prompt
+    p.tokens[rid] = ntok
+    p.prompts.append(prompt)
+    del p.prompts[:-40]          # bounded promote-target history
+
+
+def _step(p: _Plane, rng: random.Random, op: str) -> None:
+    if op == "alloc":
+        ntok = rng.randint(1, 6) * BLOCK
+        if p.bm.can_allocate(ntok):
+            _admit(p, _fresh_prompt(p, ntok))
+    elif op == "share":
+        if not p.live:
+            return
+        donor = p.live[rng.choice(list(p.live))]
+        m = p.index.lookup(NODE, donor)
+        lead = []                # only a leading HBM run is shareable
+        for b, t in zip(m.block_ids, m.tiers):
+            if t != TIER_HBM or not p.bm.block_alive(b):
+                break
+            lead.append(b)
+        if not lead:
+            return
+        k = rng.randint(1, len(lead))
+        extra = rng.randint(0, 2) * BLOCK
+        ntok = k * BLOCK + extra
+        if p.bm.can_allocate(ntok, shared_blocks=k,
+                             shared_block_ids=lead[:k]):
+            prompt = donor[:k * BLOCK] + _fresh_prompt(p, extra)
+            _admit(p, prompt, prefix_blocks=lead[:k])
+    elif op == "free":
+        if p.live:
+            rid = rng.choice(list(p.live))
+            p.bm.free(rid)
+            del p.live[rid], p.tokens[rid]
+    elif op == "grow":
+        if not p.live:
+            return
+        rid = rng.choice(list(p.live))
+        extra = rng.randint(1, 2)
+        if extra <= p.bm.free_capacity:
+            p.tokens[rid] += extra * BLOCK
+            p.bm.ensure_capacity(rid, p.tokens[rid])
+    elif op == "demote":
+        p.bm.reclaim_cache(rng.randint(1, POOL // 4))
+    elif op == "promote":
+        if p.prompts:
+            p.tm.promote_match(rng.choice(p.prompts))
+    elif op == "rehome":
+        # a transfer landing: an old prompt re-inserts on fresh blocks,
+        # re-pointing its digests (and orphaning any DRAM backing)
+        if p.prompts:
+            prompt = rng.choice(p.prompts)
+            if p.bm.can_allocate(len(prompt)):
+                _admit(p, prompt)
+    elif op == "release_all":
+        p.bm.release_all()
+        p.live.clear()
+        p.tokens.clear()
+    else:                        # pragma: no cover - op vocabulary drift
+        raise AssertionError(op)
+
+
+def _audit(p: _Plane) -> None:
+    p.bm.check_invariants()
+    p.bm.assert_no_leaks(list(p.live))
+    p.tm.check_invariants()
+    by_hash = p.index._node_hashes.get(NODE, {})
+    hbm = p.index._node_blocks.get(NODE, {})
+    dram = p.index._node_host_blocks.get(NODE, {})
+    # backmaps mirror the forward map, one tier per digest
+    for b, h in hbm.items():
+        assert by_hash.get(h) == (TIER_HBM, b), (b, h)
+        assert p.bm.block_alive(b), f"index advertises dead pool block {b}"
+    for b, h in dram.items():
+        assert by_hash.get(h) == (TIER_DRAM, b), (b, h)
+        assert b in p.tm.host._lru, f"index advertises evicted host block {b}"
+    # disjoint and exhaustive: every backed digest is in exactly one tier
+    backed = {h for h, e in by_hash.items() if e is not None}
+    assert not set(hbm.values()) & set(dram.values()), "digest in both tiers"
+    assert backed == set(hbm.values()) | set(dram.values()), (
+        "backed entries not tiled by the two tier backmaps")
+
+
+def _run_interleaving(allocator: str, ops, seed: int) -> None:
+    p = _Plane(allocator)
+    rng = random.Random(seed)
+    for op in ops:
+        _step(p, rng, op)
+        _audit(p)
+    # teardown leaves a clean pool (host tier may stay resident by design)
+    p.bm.release_all()
+    p.live.clear()
+    _audit(p)
+    assert p.bm.num_free == POOL
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _traces(draw):
+        return draw(st.lists(st.sampled_from(OPS), min_size=1, max_size=60))
+
+    @pytest.mark.parametrize("allocator", ["flowkv", "vllm"])
+    @given(ops=_traces(), seed=st.integers(0, 10_000))
+    @settings(max_examples=200, deadline=None)
+    def test_block_tier_invariants(allocator, ops, seed):
+        _run_interleaving(allocator, ops, seed)
+else:
+    def test_hypothesis_property_suite():
+        pytest.importorskip("hypothesis")   # records the skip reason
+
+
+# -- deterministic fallback: >= 200 seeded interleavings per allocator --------
+@pytest.mark.parametrize("allocator", ["flowkv", "vllm"])
+def test_block_tier_invariants_deterministic(allocator):
+    rng = random.Random(7)
+    for trial in range(200):
+        ops = [rng.choice(OPS) for _ in range(rng.randint(1, 60))]
+        _run_interleaving(allocator, ops, trial)
+
+
+def test_every_op_reachable():
+    """The trace driver must actually exercise the whole vocabulary (a
+    guard against the suite silently degenerating into alloc/free only)."""
+    hit = set()
+    rng = random.Random(11)
+    p = _Plane("flowkv")
+    for _ in range(4000):
+        op = rng.choice(OPS)
+        before = (p.tm.demoted_blocks, p.tm.promoted_blocks,
+                  p.bm.cached_reused, len(p.live))
+        _step(p, rng, op)
+        after = (p.tm.demoted_blocks, p.tm.promoted_blocks,
+                 p.bm.cached_reused, len(p.live))
+        if before != after or op in ("free", "release_all", "demote"):
+            hit.add(op)
+    assert hit >= {"alloc", "share", "free", "demote", "promote",
+                   "rehome", "release_all"}, hit
+    assert p.tm.demoted_blocks > 0 and p.tm.promoted_blocks > 0
+    assert p.tm.host_evicted_blocks > 0, "host LRU eviction never exercised"

@@ -123,4 +123,4 @@ def test_block_manager_no_leaks_after_run(small_model):
     cluster.run(reqs, max_cycles=80)
     for eng in cluster.engines.values():
         eng.scheduler.bm.check_invariants()
-        assert eng.scheduler.bm.num_free == 64, "leaked blocks after completion"
+        assert eng.scheduler.bm.free_capacity == 64, "leaked blocks after completion"

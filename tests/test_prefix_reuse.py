@@ -180,11 +180,17 @@ def test_refcount_free_ordering(allocator, donor_first):
     assert bm.block_alive(donor[0]) and bm.block_alive(donor[1])
     bm.free(order[1])
     bm.check_invariants()
-    assert bm.num_free == 16 and sorted(set(freed)) == sorted(set(freed))
+    # refcount zero no longer frees: the blocks PARK in the LRU cache with
+    # pages intact (revivable prefix hits) until capacity pressure
+    assert freed == [] and bm.free_capacity == 16
+    assert bm.block_alive(donor[0]) and bm.is_cached(donor[0])
+    bm.reclaim_cache()
+    bm.check_invariants()
+    assert bm.num_free == 16 and sorted(freed) == sorted(set(freed))
     assert not bm.block_alive(donor[0])
 
 
-def test_on_free_fires_only_at_refcount_zero():
+def test_on_free_fires_only_at_physical_reclaim():
     freed = []
     bm = BlockManager(8, 4, "flowkv")
     bm.on_free = freed.extend
@@ -193,6 +199,9 @@ def test_on_free_fires_only_at_refcount_zero():
     bm.free(1)
     assert freed == []                    # still held by request 2
     bm.free(2)
+    assert freed == []                    # refcount zero -> parked, not freed
+    assert all(bm.is_cached(b) for b in a)
+    bm.reclaim_cache()                    # pressure: pages actually recycle
     assert sorted(freed) == sorted(set(freed)) and len(freed) == 3
 
 
@@ -361,11 +370,15 @@ def test_stale_residency_rehomes_to_decode_node(small_model):
     assert idx.lookup(0, donor).num_tokens == 0        # P-side entry died
     m = idx.lookup(1, donor)
     assert m.num_tokens == 64 and len(m.block_ids) == 2
-    # ... and dies again when decode finishes (blocks free -> invalidated)
+    # ... and SURVIVES decode finishing: the freed blocks park in the LRU
+    # cache with pages intact, so the prefix stays advertised (the re-hit
+    # satellite) until capacity pressure physically reclaims them
     for _ in range(40):
         cluster.step()
         if cluster.finished:
             break
+    assert idx.lookup(1, donor).num_tokens == 64
+    cluster.engines[1].scheduler.bm.reclaim_cache()
     assert idx.lookup(1, donor).num_tokens == 0
 
 
@@ -401,7 +414,7 @@ def test_cancel_while_shared_no_leak(small_model):
     ref = _reference(cfg, params, [followers[0]], steps=5)
     assert list(cluster.finished[0].output_tokens) == ref[tuple(followers[0])]
     bm.check_invariants()
-    assert bm.num_free == bm.num_blocks
+    assert bm.free_capacity == bm.num_blocks
 
 
 # ---------------------------------------------------------------------------

@@ -376,7 +376,7 @@ def test_decode_preemption_spills_and_resumes_via_hooks():
     assert bm.owns(a.request_id)
     s.decode_finished(a)
     bm.check_invariants()
-    assert bm.num_free == 4, "spill/resume leaked blocks"
+    assert bm.free_capacity == 4, "spill/resume leaked blocks"
 
 
 def test_discard_hook_fires_on_cancel_and_drain():
@@ -404,4 +404,4 @@ def test_scheduler_drain_for_failure_frees_blocks():
     assert r in drained
     assert not bm.owns(r.request_id)
     bm.check_invariants()
-    assert bm.num_free == 64
+    assert bm.free_capacity == 64

@@ -147,7 +147,7 @@ def test_overload_scenario_gate_smoke():
 
 def test_scenario_registry_complete():
     assert set(SCENARIOS) == {"normal", "imbalance", "overload",
-                              "heterogeneous"}
+                              "heterogeneous", "failure", "multiturn"}
     for name, sc in SCENARIOS.items():
         assert sc.name == name and sc.description
     with pytest.raises(ValueError, match="unknown scenario"):

@@ -1,0 +1,440 @@
+"""Tiered KV store: bit-identity, remote-DRAM fetch, fault paths, parity.
+
+The reproduction-critical property of the host-DRAM tier: movement between
+tiers is MOVE semantics over the same fused descriptor-table data plane as
+P->D transfers, so a demote -> promote round trip must be bit-identical to
+KV that never left the pool — decoding is deterministic argmax, so any
+drift in the copy plans shows up as a wrong token, not a tolerance miss.
+
+Covers the satellite contracts:
+
+* demote -> promote round trip bit-identical at the page level (direct
+  ``TierManager`` + ``PagedKVCache``) and token-identical end to end;
+* remote-DRAM prefix fetch (source-side promote + fused pool->pool pull)
+  matches the local-hit and recompute outputs;
+* cancel-while-demoting and crash-during-promote (``repro.faults``) leave
+  zero leaked blocks on EITHER tier;
+* the free -> re-hit regression: refcount-zero prefixes stay cached (LRU)
+  until capacity pressure, so a re-request after its last holder finished
+  still hits;
+* sim/real parity — ClusterSim and PDCluster make the same tier-routing
+  decision and emit matching ``tier_demote``/``tier_promote`` span
+  sequences on a shared workload (PR 7 parity pattern).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import layout as L
+from repro.core.block_manager import BlockManager
+from repro.faults import FaultSpec
+from repro.models.api import get_model
+from repro.obs.tracing import attach_tracer
+from repro.serving.cluster import PDCluster
+from repro.serving.host_tier import TierManager
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix_cache import (GlobalPrefixIndex, TIER_DRAM,
+                                        TIER_HBM)
+from repro.serving.request import Request, SamplingParams
+from repro.sim.cluster_sim import ClusterSim
+from repro.sim.hardware import A100, TPU_V5E
+
+WEAK = dataclasses.replace(TPU_V5E, peak_flops=1e6)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _drain(cluster, want, max_steps=400):
+    for _ in range(max_steps):
+        cluster.step()
+        if len(cluster.finished) + len(cluster.cancelled) >= want:
+            return
+    raise AssertionError(
+        f"stalled: {len(cluster.finished)}+{len(cluster.cancelled)}/{want}")
+
+
+def _audit(cluster):
+    assert cluster.audit_blocks() == 0
+    cluster.assert_no_leaks()
+    for tm in cluster.tiers.values():
+        if tm.node_id not in cluster._dead:
+            tm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# page-level bit identity: demote -> promote round trip
+# ---------------------------------------------------------------------------
+
+def test_demote_promote_roundtrip_bit_identical():
+    """The KV pages that come back from host DRAM are the exact pages that
+    went down — even after the vacated pool blocks are overwritten."""
+    spec = L.KVCacheSpec(num_layers=2, num_blocks=8, block_size=4,
+                         num_kv_heads=2, head_dim=8, dtype=jnp.float32)
+    kv = PagedKVCache(spec)
+    bm = BlockManager(spec.num_blocks, spec.block_size)
+    index = GlobalPrefixIndex(spec.block_size)
+    bm.on_free = lambda blocks: index.invalidate_blocks(0, blocks)
+    tm = TierManager(0, bm, index, spec, host_blocks=8, kv=kv).attach()
+
+    prompt = list(range(12))               # 3 full blocks
+    blocks = bm.allocate(1, len(prompt))
+    index.insert(0, prompt, blocks)
+    fill = jnp.arange(kv.pool.size, dtype=jnp.float32).reshape(kv.pool.shape)
+    kv.pool = fill
+    want = np.asarray(fill[jnp.asarray(blocks)])
+
+    bm.free(1)
+    bm.reclaim_cache()                     # capacity pressure -> demote
+    assert tm.demoted_blocks == 3 and tm.host.num_resident == 3
+    m = index.lookup(0, prompt)
+    assert m.tiers == [TIER_DRAM] * 3
+    # scribble over the vacated pool blocks: the KV must live in DRAM now
+    kv.pool = kv.pool.at[jnp.asarray(blocks)].set(-1.0)
+
+    assert tm.promote_match(prompt) == 3
+    assert tm.host.num_resident == 0       # move semantics: DRAM side freed
+    m = index.lookup(0, prompt)
+    assert m.tiers == [TIER_HBM] * 3
+    got = np.asarray(kv.pool[jnp.asarray(m.block_ids)])
+    np.testing.assert_array_equal(got, want)
+    # promoted destinations are CACHED blocks (no request owns them) and a
+    # later allocate() revives them like any other hit
+    assert all(bm.is_cached(b) for b in m.block_ids)
+    bm.check_invariants()
+    tm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end token identity on real compute
+# ---------------------------------------------------------------------------
+
+def _play(cfg, params, prompts, **kw):
+    """One conversation: prompts submitted strictly one after another."""
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=0,
+                        num_blocks=16, hardware=WEAK,
+                        max_batch_tokens=4096, **kw)
+    reqs = []
+    for p in prompts:
+        r = Request(prompt_tokens=list(p),
+                    sampling=SamplingParams(max_new_tokens=6))
+        cluster.submit(r)
+        reqs.append(r)
+        _drain(cluster, len(reqs))
+    _audit(cluster)
+    return cluster, reqs
+
+
+def test_engine_roundtrip_token_identity(small_model):
+    """turn1 parks its prefix; churn demotes it; turn2 promotes it back —
+    and every output token matches both a never-demoted run (big pool, no
+    tier) and a reuse-off run (cold compute)."""
+    cfg, params = small_model
+    rng = np.random.RandomState(0)
+    turn1 = rng.randint(0, cfg.vocab_size, size=256).tolist()
+    churn = rng.randint(0, cfg.vocab_size, size=320).tolist()
+    turn2 = turn1 + rng.randint(0, cfg.vocab_size, size=48).tolist()
+    convo = [turn1, churn, turn2]
+
+    tiered, treqs = _play(cfg, params, convo, host_tier_blocks=64)
+    s = tiered.stats()
+    assert s["tier_demoted_blocks"] > 0, "pool pressure never demoted"
+    assert s["tier_promoted_blocks"] > 0, "turn 2 never promoted"
+    assert treqs[2].num_cached_prefix_tokens >= 256, \
+        "turn 2 did not reuse the promoted history"
+
+    cold, creqs = _play(cfg, params, convo, prefix_reuse=False)
+    never, nreqs = _play(cfg, params, convo)   # reuse on, HBM-only, no churn
+    for t, c, n in zip(treqs, creqs, nreqs):
+        assert t.output_tokens == c.output_tokens, \
+            "demote->promote changed tokens vs cold compute"
+        assert t.output_tokens == n.output_tokens, \
+            "tiered run diverged from the never-demoted run"
+
+
+# ---------------------------------------------------------------------------
+# remote-DRAM fetch: source-side promote + fused pool->pool pull
+# ---------------------------------------------------------------------------
+
+def test_remote_dram_fetch_matches_local_hit_and_recompute(small_model):
+    """A prefix demoted on a REMOTE node still serves a hit: the source
+    promotes (DRAM -> pool), the plan refreshes, and the fetch pulls the
+    promoted pool blocks — token-identically to a local hit and to
+    recompute."""
+    cfg, params = small_model
+    rng = np.random.RandomState(4)
+    prefix = rng.randint(0, cfg.vocab_size, size=128).tolist()
+    donor = prefix + rng.randint(0, cfg.vocab_size, size=8).tolist()
+    follower = prefix + rng.randint(0, cfg.vocab_size, size=40).tolist()
+
+    def remote(**kw):
+        cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                            num_blocks=64, hardware=WEAK,
+                            max_batch_tokens=4096,
+                            host_tier_blocks=kw.pop("host", 64), **kw)
+        r0 = Request(prompt_tokens=list(donor),
+                     sampling=SamplingParams(max_new_tokens=8))
+        cluster.submit(r0)
+        _drain(cluster, 1)
+        # capacity pressure on the DECODE node (where the prefix re-homed):
+        # everything index-backed demotes to its host tier
+        cluster.engines[1].scheduler.bm.reclaim_cache()
+        r1 = Request(prompt_tokens=list(follower),
+                     sampling=SamplingParams(max_new_tokens=6))
+        cluster.submit(r1)
+        _drain(cluster, 2)
+        _audit(cluster)
+        return cluster, r1
+
+    cluster, r1 = remote()
+    src_tm = cluster.tiers[1]
+    assert src_tm.demoted_blocks >= 4, "reclaim never demoted the prefix"
+    assert src_tm.promoted_blocks >= 4, "the fetch never promoted at source"
+    assert r1.num_cached_prefix_tokens >= 128
+    fetches = [t for t in cluster.transfers if t.kind == "prefix_fetch"]
+    assert fetches and all(t.num_dispatches == 1 for t in fetches), \
+        "remote-DRAM fetch is not one fused dispatch"
+
+    # local hit: single hybrid node, nothing demoted, same prompts
+    local = PDCluster(cfg, params, num_prefill=1, num_decode=0,
+                      num_blocks=64, hardware=WEAK, max_batch_tokens=4096)
+    l0 = Request(prompt_tokens=list(donor),
+                 sampling=SamplingParams(max_new_tokens=8))
+    local.submit(l0)
+    _drain(local, 1)
+    l1 = Request(prompt_tokens=list(follower),
+                 sampling=SamplingParams(max_new_tokens=6))
+    local.submit(l1)
+    _drain(local, 2)
+    assert l1.num_cached_prefix_tokens >= 128
+
+    # recompute: reuse off entirely
+    cold = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                     num_blocks=64, hardware=WEAK, max_batch_tokens=4096,
+                     prefix_reuse=False)
+    c0 = Request(prompt_tokens=list(donor),
+                 sampling=SamplingParams(max_new_tokens=8))
+    cold.submit(c0)
+    _drain(cold, 1)
+    c1 = Request(prompt_tokens=list(follower),
+                 sampling=SamplingParams(max_new_tokens=6))
+    cold.submit(c1)
+    _drain(cold, 2)
+
+    assert r1.output_tokens == l1.output_tokens == c1.output_tokens, \
+        "remote-DRAM fetch diverged from local hit / recompute"
+
+
+# ---------------------------------------------------------------------------
+# fault paths: zero leaked blocks on either tier
+# ---------------------------------------------------------------------------
+
+def test_cancel_while_demoting_no_leak(small_model):
+    """Cancel a request whose prefix plan points at blocks being demoted
+    that same window: nothing leaks on either tier, and the demoted prefix
+    still serves the NEXT request via promotion."""
+    cfg, params = small_model
+    rng = np.random.RandomState(7)
+    prefix = rng.randint(0, cfg.vocab_size, size=128).tolist()
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=0,
+                        num_blocks=32, hardware=WEAK,
+                        max_batch_tokens=4096, host_tier_blocks=64)
+    donor = Request(prompt_tokens=list(prefix),
+                    sampling=SamplingParams(max_new_tokens=6))
+    cluster.submit(donor)
+    _drain(cluster, 1)
+
+    victim = Request(prompt_tokens=prefix + [1, 2, 3],
+                     sampling=SamplingParams(max_new_tokens=6))
+    cluster.submit(victim)                 # waiting, plan -> local blocks
+    cluster.engines[0].scheduler.bm.reclaim_cache()   # demotes under it
+    assert cluster.tiers[0].demoted_blocks >= 4
+    assert cluster.cancel(victim)
+    for _ in range(4):
+        cluster.step()
+    _audit(cluster)
+
+    # the tier survived the cancel: a fresh request still promotes and hits
+    retry = Request(prompt_tokens=prefix + [4, 5, 6],
+                    sampling=SamplingParams(max_new_tokens=6))
+    cluster.submit(retry)
+    _drain(cluster, 2)
+    assert cluster.tiers[0].promoted_blocks >= 4
+    assert retry.num_cached_prefix_tokens >= 128
+    # and cancelling mid-decode afterwards stays leak-free too
+    late = Request(prompt_tokens=prefix + [7, 8, 9],
+                   sampling=SamplingParams(max_new_tokens=32))
+    cluster.submit(late)
+    for _ in range(40):
+        cluster.step()
+        if any(late.request_id == r.request_id
+               for e in cluster.engines.values()
+               for r in e.scheduler.decode.running):
+            break
+    assert cluster.cancel(late)
+    for _ in range(4):
+        cluster.step()
+    _audit(cluster)
+
+
+def test_crash_during_promote_no_leak(small_model):
+    """The source node dies in the window between routing (plan points at
+    its DRAM-resident prefix) and the promote+fetch: the plan degrades to
+    recompute, outputs stay correct, zero blocks leak on either tier.
+
+    Deterministic two-run pattern (PR 8): a dry run measures the clock at
+    which the follower is waiting on the remote plan; the armed run crashes
+    the source exactly then via ``repro.faults``."""
+    cfg, params = small_model
+    rng = np.random.RandomState(9)
+    prefix = rng.randint(0, cfg.vocab_size, size=128).tolist()
+    donor = prefix + rng.randint(0, cfg.vocab_size, size=8).tolist()
+    follower = prefix + rng.randint(0, cfg.vocab_size, size=40).tolist()
+
+    def play(faults=None, crash_probe=False):
+        cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                            num_blocks=64, hardware=WEAK,
+                            max_batch_tokens=4096, host_tier_blocks=64,
+                            faults=faults, heartbeat_timeout_cycles=2.0)
+        r0 = Request(prompt_tokens=list(donor),
+                     sampling=SamplingParams(max_new_tokens=8))
+        cluster.submit(r0)
+        _drain(cluster, 1)
+        cluster.engines[1].scheduler.bm.reclaim_cache()   # prefix -> DRAM
+        r1 = Request(prompt_tokens=list(follower),
+                     sampling=SamplingParams(max_new_tokens=6))
+        cluster.submit(r1)
+        if crash_probe:
+            return cluster.clock           # the fetch would run NEXT step
+        _drain(cluster, 2, max_steps=600)
+        return cluster, r1
+
+    t_crash = play(crash_probe=True) + 1.0
+    cluster, r1 = play(faults=(FaultSpec("node_crash", at=t_crash,
+                                         node_id=1),))
+    assert 1 in cluster._dead, "the armed crash never fired"
+    assert cluster.tiers[1].promoted_blocks == 0, \
+        "promotion ran on a dead node"
+    assert cluster.tiers[1].host.num_resident == 0, \
+        "dead node's host tier still resident"
+    assert not cluster.controller.prefix_index._node_host_blocks.get(1), \
+        "index still advertises the dead node's DRAM"
+    _audit(cluster)
+
+    # recompute fallback is token-correct: compare to a fault-free cold run
+    cold = PDCluster(cfg, params, num_prefill=1, num_decode=0,
+                     num_blocks=64, hardware=WEAK, max_batch_tokens=4096,
+                     prefix_reuse=False)
+    c1 = Request(prompt_tokens=list(follower),
+                 sampling=SamplingParams(max_new_tokens=6))
+    cold.submit(c1)
+    _drain(cold, 1)
+    assert r1.output_tokens == c1.output_tokens, \
+        "crash-degraded recompute changed tokens"
+
+
+# ---------------------------------------------------------------------------
+# regression: refcount-zero prefixes stay cached until pressure
+# ---------------------------------------------------------------------------
+
+def test_refcount_zero_prefix_rehits_after_free(small_model):
+    """The satellite fix: ``BlockManager.free`` must PARK refcount-zero
+    shared-prefix blocks (LRU), not free them — a re-request arriving after
+    the last holder finished still hits instead of recomputing."""
+    cfg, params = small_model
+    rng = np.random.RandomState(13)
+    prefix = rng.randint(0, cfg.vocab_size, size=96).tolist()
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=0,
+                        num_blocks=64, hardware=WEAK, max_batch_tokens=4096)
+    donor = Request(prompt_tokens=list(prefix),
+                    sampling=SamplingParams(max_new_tokens=4))
+    cluster.submit(donor)
+    _drain(cluster, 1)
+    bm = cluster.engines[0].scheduler.bm
+    assert not bm._table, "donor's table survived its finish"
+    assert bm.num_cached >= 3, "finished donor's blocks were not parked"
+
+    late = Request(prompt_tokens=prefix + rng.randint(
+        0, cfg.vocab_size, size=16).tolist(),
+        sampling=SamplingParams(max_new_tokens=4))
+    cluster.submit(late)
+    _drain(cluster, 2)
+    assert late.num_cached_prefix_tokens >= 96, \
+        "re-request after free missed the parked prefix"
+    assert bm.cached_reused >= 3, "the hit did not revive cached blocks"
+    s = cluster.stats()
+    assert s["prefix_tokens_reused"] >= 96
+    _audit(cluster)
+
+
+# ---------------------------------------------------------------------------
+# sim/real parity: tier-routing decisions and span sequences
+# ---------------------------------------------------------------------------
+
+def _tier_spans(rec):
+    return [(s.name, s.node_id, s.attrs["num_blocks"]) for s in rec.spans
+            if s.name in ("tier_demote", "tier_promote")]
+
+
+def test_sim_matches_engine_tier_decisions(small_model):
+    """ClusterSim and PDCluster, same config / pool shape / prompts: the
+    churn-driven demotion and the follower's source-side promotion must
+    produce the same tier-routing decision (fetch the promoted prefix from
+    the decode node, same hit length) and the same
+    ``tier_demote``/``tier_promote`` span sequence."""
+    cfg, params = small_model
+    rng = np.random.RandomState(21)
+    donor = rng.randint(0, cfg.vocab_size, size=128).tolist()
+    churn = rng.randint(0, cfg.vocab_size, size=416).tolist()
+    follower = donor + rng.randint(0, cfg.vocab_size, size=64).tolist()
+    new_tokens = (8, 4, 4)
+
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=16, hardware=WEAK, max_batch_tokens=4096,
+                        host_tier_blocks=64)
+    rec_real = attach_tracer(cluster)
+    rreqs = []
+    for p, n in zip((donor, churn, follower), new_tokens):
+        r = Request(prompt_tokens=list(p),
+                    sampling=SamplingParams(max_new_tokens=n))
+        cluster.submit(r)
+        rreqs.append(r)
+        _drain(cluster, len(rreqs))
+    _audit(cluster)
+
+    weak_p = dataclasses.replace(A100, peak_flops=1e7)
+    sim = ClusterSim(cfg, "flowkv", num_prefill=1, num_decode=1,
+                     hw_prefill=weak_p, hw_decode=weak_p,
+                     blocks_per_node=16, host_tier_blocks=64)
+    rec_sim = attach_tracer(sim)
+    sreqs = [Request(prompt_tokens=list(p),
+                     sampling=SamplingParams(max_new_tokens=n),
+                     arrival_time=t)
+             for (p, n), t in zip(zip((donor, churn, follower), new_tokens),
+                                  (0.0, 400.0, 800.0))]
+    sstats = sim.run(list(sreqs), t_max=500_000)
+    sim.audit_blocks()
+
+    # same tier-routing decision: the follower reuses the same hit length,
+    # served by a remote fetch of the decode node's promoted prefix
+    assert rreqs[2].num_cached_prefix_tokens == \
+        sreqs[2].num_cached_prefix_tokens > 0, (
+        rreqs[2].num_cached_prefix_tokens,
+        sreqs[2].num_cached_prefix_tokens)
+    assert cluster.stats()["prefix_fetches"] == \
+        sstats["prefix_fetches"] >= 1
+    # same span sequence: (name, node, blocks), in order
+    real_spans, sim_spans = _tier_spans(rec_real), _tier_spans(rec_sim)
+    assert real_spans == sim_spans, (
+        f"tier span streams diverge:\n real={real_spans}\n  sim={sim_spans}")
+    assert any(n == "tier_demote" for n, _, _ in real_spans)
+    assert any(n == "tier_promote" for n, _, _ in real_spans)

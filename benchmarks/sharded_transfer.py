@@ -1,0 +1,232 @@
+"""Sharded serving — mesh-parallel engines + per-shard-pair fused transfer.
+
+Two sections:
+
+* **engine** — a real ``PDCluster`` (smoke model, real JAX compute) runs the
+  SAME prompts under three shard topologies (TP=2 -> TP=1, TP=1 -> TP=2,
+  TP=2 -> TP=2) plus the unsharded TP=1 -> TP=1 reference. Gates:
+
+  - every topology's output tokens are BIT-IDENTICAL to the single-device
+    greedy reference (``token_mismatches == 0``);
+  - each cross-degree transfer costs exactly one fused dispatch per
+    overlapping shard pair — ``tp_src + tp_dst - gcd(tp_src, tp_dst)``,
+    which for the 1->N / N->1 shapes equals ``tp_src * tp_dst`` literally;
+  - transfer BYTES are conserved: a sharded hop moves exactly the bytes the
+    unsharded reference transfer moves (``transfer_byte_mismatches == 0``).
+
+* **sim** — the ``sharded_heterogeneous`` scenario (TP=4 70B-class prefill
+  node feeding TP=1 decode nodes on the deterministic discrete-event sim):
+  every transfer prices the 4-pair dispatch structure, nothing starves,
+  nothing leaks.
+
+CLI: ``python -m benchmarks.sharded_transfer [--json] [--check] [--history]``
+(``--check`` is the CI ``sharded-smoke`` gate; ``--history`` appends the
+headline metrics to ``BENCH_sharded.json`` via ``repro.obs.history``.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.costmodel import sharded_transfer_calls
+from repro.models import transformer as T
+from repro.models.api import get_model
+from repro.serving.cluster import PDCluster
+from repro.serving.request import Request, SamplingParams
+from repro.sim.scenarios import get_scenario
+
+ARCH = "qwen3-1.7b"
+NUM_PROMPTS = 3
+NEW_TOKENS = 4
+TOPOLOGIES = (("tp2_to_tp1", 2, 1), ("tp1_to_tp2", 1, 2), ("tp2_to_tp2", 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# engine: real cluster across shard topologies, gated on identity + structure
+# ---------------------------------------------------------------------------
+def _prompts(cfg) -> List[List[int]]:
+    rng = np.random.RandomState(0)
+    return [rng.randint(0, cfg.vocab_size, size=int(n)).tolist()
+            for n in rng.randint(8, 24, size=NUM_PROMPTS)]
+
+
+def _run(cfg, params, prompts, tp_src: int, tp_dst: int) -> Dict[str, object]:
+    cluster = PDCluster(cfg, params, num_prefill=1, num_decode=1,
+                        num_blocks=128,
+                        tp_degrees={0: tp_src, 1: tp_dst})
+    reqs = [Request(prompt_tokens=list(p),
+                    sampling=SamplingParams(max_new_tokens=NEW_TOKENS))
+            for p in prompts]
+    done = cluster.run(reqs, max_cycles=120)
+    assert len(done) == len(prompts), (tp_src, tp_dst, len(done))
+    outputs = {tuple(r.prompt_tokens): [int(t) for t in r.output_tokens]
+               for r in done}
+    xfers = [t for t in cluster.transfers if t.kind == "kv"]
+    return {
+        "outputs": outputs,
+        "dispatches_per_transfer": sorted({t.num_dispatches for t in xfers}),
+        "transfer_bytes": sorted(t.num_bytes for t in xfers),
+        "shard_dispatches": cluster.stats()["shard_dispatches"],
+        "leaked_blocks": cluster.stats()["leaked_blocks"],
+    }
+
+
+def _bench_engine() -> Dict[str, object]:
+    cfg = get_smoke_config(ARCH)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)
+    refs = {tuple(p): [int(x) for x in
+                       T.greedy_generate(params, cfg,
+                                         jnp.asarray([p], jnp.int32),
+                                         NEW_TOKENS)[0]]
+            for p in prompts}
+    t0 = time.perf_counter()
+    baseline = _run(cfg, params, prompts, 1, 1)
+    out: Dict[str, object] = {"leaked_blocks": baseline["leaked_blocks"]}
+    token_mismatches = sum(
+        1 for p in prompts if baseline["outputs"][tuple(p)] != refs[tuple(p)])
+    byte_mismatches = 0
+    for label, tp_src, tp_dst in TOPOLOGIES:
+        r = _run(cfg, params, prompts, tp_src, tp_dst)
+        token_mismatches += sum(
+            1 for p in prompts if r["outputs"][tuple(p)] != refs[tuple(p)])
+        # bytes conserved: the shard-pair lowering partitions the reference
+        # transfer's bytes exactly, so the per-request totals must match
+        byte_mismatches += int(
+            r["transfer_bytes"] != baseline["transfer_bytes"])
+        expected = sharded_transfer_calls(tp_src, tp_dst)
+        out[label] = {
+            "tp_src": tp_src, "tp_dst": tp_dst,
+            "dispatches_per_transfer": r["dispatches_per_transfer"],
+            "expected_dispatches": expected,
+            # for 1->N / N->1 shapes the pair count is literally the product
+            "product_rule_holds": (
+                min(tp_src, tp_dst) > 1
+                or expected == tp_src * tp_dst),
+            "shard_dispatches": r["shard_dispatches"],
+        }
+        out["leaked_blocks"] += r["leaked_blocks"]
+    out["token_mismatches"] = token_mismatches
+    out["transfer_byte_mismatches"] = byte_mismatches
+    out["wall_s"] = time.perf_counter() - t0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sim: sharded_heterogeneous scenario (TP=4 prefill -> TP=1 decode)
+# ---------------------------------------------------------------------------
+def _bench_sim() -> Dict[str, float]:
+    sc = get_scenario("sharded_heterogeneous")
+    stats = sc.run("load_aware")
+    stats["expected_dispatches"] = sharded_transfer_calls(4, 1)
+    return stats
+
+
+def bench() -> Dict[str, object]:
+    return {"engine": _bench_engine(), "sim": _bench_sim()}
+
+
+def rows(stats=None) -> List[str]:
+    stats = stats or bench()
+    e = stats["engine"]
+    out = []
+    for label, _, _ in TOPOLOGIES:
+        t = e[label]
+        out.append(
+            f"sharded/engine/{label},{e['wall_s'] * 1e6:.0f},"
+            f"dispatches={t['dispatches_per_transfer']}"
+            f";expected={t['expected_dispatches']}"
+            f";shard_dispatches={t['shard_dispatches']}")
+    out.append(
+        f"sharded/engine/gates,{e['wall_s'] * 1e6:.0f},"
+        f"token_mismatches={e['token_mismatches']}"
+        f";byte_mismatches={e['transfer_byte_mismatches']}"
+        f";leaked={e['leaked_blocks']}")
+    s = stats["sim"]
+    out.append(
+        f"sharded/sim/heterogeneous,0,"
+        f"mean_dispatches={s['mean_transfer_dispatches']:.1f}"
+        f";goodput={s['goodput']:.3f};starved={s['starved_nodes']}"
+        f";max_tp={s['max_tp_degree']}")
+    return out
+
+
+def check(stats: Dict[str, object]) -> None:
+    """CI gate: identity, dispatch structure and byte conservation."""
+    e = stats["engine"]
+    assert e["token_mismatches"] == 0, (
+        f"{e['token_mismatches']} sharded outputs diverged from the "
+        f"single-device greedy reference")
+    assert e["transfer_byte_mismatches"] == 0, (
+        "sharded transfers moved different byte totals than the unsharded "
+        "reference")
+    assert e["leaked_blocks"] == 0, e["leaked_blocks"]
+    for label, tp_src, tp_dst in TOPOLOGIES:
+        t = e[label]
+        expected = tp_src + tp_dst - math.gcd(tp_src, tp_dst)
+        assert t["dispatches_per_transfer"] == [expected], (
+            f"{label}: per-transfer dispatches {t['dispatches_per_transfer']} "
+            f"!= one per shard pair ({expected})")
+        assert t["product_rule_holds"], label
+        # the cluster counter tallies lands on SHARDED destination pools, so
+        # it is legitimately 0 when the decode side is unsharded (tp_dst=1)
+        if tp_dst > 1:
+            assert t["shard_dispatches"] > 0, label
+    s = stats["sim"]
+    assert s["mean_transfer_dispatches"] == s["expected_dispatches"], (
+        s["mean_transfer_dispatches"], s["expected_dispatches"])
+    assert s["finished"] == s["offered"], (s["finished"], s["offered"])
+    assert s["starved_nodes"] == 0, s["starved_nodes"]
+    assert s["leaked_blocks"] == 0, s["leaked_blocks"]
+
+
+def history_metrics(stats: Dict[str, object]) -> Dict[str, float]:
+    """Sharded-plane headlines for BENCH_sharded.json (repro.obs.history)."""
+    e = stats["engine"]
+    return {
+        "dispatches_tp2_to_tp1": float(
+            e["tp2_to_tp1"]["dispatches_per_transfer"][0]),
+        "dispatches_tp1_to_tp2": float(
+            e["tp1_to_tp2"]["dispatches_per_transfer"][0]),
+        "dispatches_tp2_to_tp2": float(
+            e["tp2_to_tp2"]["dispatches_per_transfer"][0]),
+        "token_mismatches": float(e["token_mismatches"]),
+        "transfer_byte_mismatches": float(e["transfer_byte_mismatches"]),
+        "sim_mean_transfer_dispatches": float(
+            stats["sim"]["mean_transfer_dispatches"]),
+        "sharded_decode_wall_s": float(e["wall_s"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="print section stats as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the identity/dispatch/byte gates (CI smoke)")
+    ap.add_argument("--history", action="store_true",
+                    help="append to BENCH_sharded.json (repro.obs.history)")
+    args = ap.parse_args()
+    stats = bench()
+    if args.check:
+        check(stats)
+    if args.history:
+        from repro.obs import history
+        history.record("sharded", history_metrics(stats))
+    if args.json:
+        print(json.dumps(stats, indent=2, sort_keys=True, default=str))
+        return
+    for r in rows(stats):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

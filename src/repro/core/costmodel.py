@@ -32,6 +32,7 @@ serving simulator.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Sequence, Tuple
 
 
@@ -246,6 +247,21 @@ def estimate_overlapped_transfer_s(profile: TransportProfile, num_bytes: int,
         prev = end
     exposed, _ = layer_window_overlap(lats, ends, num_layers, prefill_s)
     return exposed
+
+
+def sharded_transfer_calls(tp_src: int, tp_dst: int) -> int:
+    """Fused dispatches a cross-degree pool transfer costs: one per
+    overlapping (src_shard, dst_shard) pair of the two contiguous
+    equal-width kv-head partitions.
+
+    Merging the two partitions' cut points gives
+    ``tp_src + tp_dst - gcd(tp_src, tp_dst)`` intervals (each interval is
+    exactly one pair); same-degree transfers collapse to ``tp`` pairwise
+    shard-local dispatches and the tp=1/tp=1 case to the classic single
+    dispatch. This is the routing-time twin of
+    ``core.transfer.TransferPlan.num_dispatches`` on a sharded plan.
+    """
+    return tp_src + tp_dst - math.gcd(tp_src, tp_dst)
 
 
 def tier_fetch_latency(route: TransportProfile, hbm_bytes: int,

@@ -15,7 +15,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.costmodel import (TransportProfile,
                                   estimate_overlapped_transfer_s,
                                   predicted_chunked_ttft_s, predicted_ttft_s,
-                                  select_route, tier_fetch_latency)
+                                  select_route, sharded_transfer_calls,
+                                  tier_fetch_latency)
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler
 from repro.core.scheduler.load_score import (Thresholds, classify_regime,
                                              cluster_scores, node_score)
@@ -43,6 +44,12 @@ class NodeHandle:
     # Set when the flip policy reassigned this node away from its original
     # role; the controller flips it back once the cluster re-balances.
     home_role: Optional[str] = None
+    # Mesh-parallel degrees: a tp>1 node runs its model sharded over
+    # tp_degree devices (its hardware profile describes ONE device, so
+    # capability/estimate terms scale by the degree); ep_degree is the
+    # expert-parallel degree (MoE configs; 1 otherwise).
+    tp_degree: int = 1
+    ep_degree: int = 1
 
 
 @dataclasses.dataclass
@@ -179,13 +186,17 @@ class GlobalController:
         alive = [n for n in self.nodes.values() if n.alive]
         if not alive:
             return {}
-        max_f = max(n.hardware.peak_flops for n in alive)
-        max_b = max(n.hardware.hbm_bandwidth for n in alive)
-        max_m = max(n.hardware.hbm_bytes for n in alive)
+        # a node's hardware profile describes ONE device; a tp>1 node
+        # aggregates tp devices' FLOPs, bandwidth and HBM, so its capability
+        # terms scale by the degree (e.g. a TP=4 prefill node absorbs 4x the
+        # backlog of a TP=1 node of the same card before saturating)
+        max_f = max(n.hardware.peak_flops * n.tp_degree for n in alive)
+        max_b = max(n.hardware.hbm_bandwidth * n.tp_degree for n in alive)
+        max_m = max(n.hardware.hbm_bytes * n.tp_degree for n in alive)
         return {
-            n.node_id: (n.hardware.peak_flops / max_f,
-                        n.hardware.hbm_bandwidth / max_b,
-                        n.hardware.hbm_bytes / max_m)
+            n.node_id: (n.hardware.peak_flops * n.tp_degree / max_f,
+                        n.hardware.hbm_bandwidth * n.tp_degree / max_b,
+                        n.hardware.hbm_bytes * n.tp_degree / max_m)
             for n in alive
         }
 
@@ -637,7 +648,8 @@ class GlobalController:
         sched = node.scheduler
         hw = node.hardware
         fpt = self.model_cost.flops_per_token
-        eff = hw.peak_flops * hw.mfu_prefill
+        # a tp>1 node prefills over tp devices' aggregate FLOPs
+        eff = hw.peak_flops * hw.mfu_prefill * node.tp_degree
         new_tokens = req.prompt_len - hit
         if getattr(sched, "chunked_prefill", False):
             chunk = sched.prefill_chunk_tokens or sched.max_batch_tokens
@@ -653,6 +665,9 @@ class GlobalController:
         """Expected KV transfer latency P->D + a decode-load tiebreak."""
         profile: TransportProfile = select_route(p.host_id == d.host_id, self.target)
         nbytes = self.model_cost.kv_bytes_per_token * (req.prompt_len + 1)
+        # cross-degree transfers pay one fused dispatch per overlapping
+        # (src_shard, dst_shard) head-range pair, bytes conserved
+        calls = sharded_transfer_calls(p.tp_degree, d.tp_degree)
         if self.layer_window > 0:
             # Layer-window streaming: only the wire time that spills past the
             # producing prefill tail is exposed. The hide window is the LAST
@@ -664,13 +679,14 @@ class GlobalController:
                 tail = min(tail, sched.prefill_chunk_tokens
                            or sched.max_batch_tokens)
             prefill_s = p.hardware.prefill_time(
-                tail * self.model_cost.flops_per_token)
+                tail * self.model_cost.flops_per_token / p.tp_degree)
             latency = estimate_overlapped_transfer_s(
                 profile, int(nbytes), self.num_layers, self.layer_window,
-                prefill_s)
+                prefill_s, calls_per_window=calls)
         else:
-            # FlowKV's segment allocator keeps requests ~1 segment => 1 call.
-            latency = profile.latency(num_calls=1, num_bytes=int(nbytes))
+            # FlowKV's segment allocator keeps requests ~1 segment => 1 call
+            # per shard pair (1 flat when both sides are unsharded).
+            latency = profile.latency(num_calls=calls, num_bytes=int(nbytes))
         load_penalty = node_score(self._scored_status(d), "decode")
         return latency * (1.0 + load_penalty)
 
@@ -691,6 +707,11 @@ class GlobalController:
         # on one scale (load_score divides pending-work terms by capability)
         caps = self._capabilities()
         statuses = {nid: (s.with_capability(*caps[nid]) if nid in caps else s)
+                    for nid, s in statuses.items()}
+        # like capability_*, the mesh degrees are constants re-stamped AFTER
+        # normalize() (which rebuilds statuses from STATUS_FIELDS only)
+        statuses = {nid: s.with_sharding(self.nodes[nid].tp_degree,
+                                         self.nodes[nid].ep_degree)
                     for nid, s in statuses.items()}
         cp, cd = cluster_scores(
             statuses,

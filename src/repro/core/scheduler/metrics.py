@@ -48,6 +48,11 @@ class NodeStatus:
     capability_compute: float = 1.0     # peak FLOPs / fleet-max FLOPs
     capability_memory: float = 1.0      # HBM bandwidth / fleet-max bandwidth
     capability_kv: float = 1.0          # HBM capacity / fleet-max capacity
+    # mesh-parallel topology (constants like capability_*, NOT load signals;
+    # stamped by the controller after smoothing/normalization — anything
+    # rebuilding a NodeStatus from STATUS_FIELDS drops them back to 1)
+    tp_degree: float = 1.0              # tensor-parallel degree of the node
+    ep_degree: float = 1.0              # expert-parallel degree (MoE; else 1)
 
     def as_dict(self) -> Dict[str, float]:
         return {f: getattr(self, f) for f in STATUS_FIELDS}
@@ -58,6 +63,11 @@ class NodeStatus:
         return dataclasses.replace(
             self, capability_compute=compute, capability_memory=memory,
             capability_kv=kv)
+
+    def with_sharding(self, tp_degree: float, ep_degree: float) -> "NodeStatus":
+        """Stamp the node's mesh-parallel degrees onto a (smoothed) sample."""
+        return dataclasses.replace(
+            self, tp_degree=tp_degree, ep_degree=ep_degree)
 
 
 class SlidingWindow:

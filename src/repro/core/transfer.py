@@ -81,6 +81,95 @@ from repro.kernels.kv_gather import kv_transfer
 Schedule = Literal["layerwise", "blockwise", "flowkv"]
 
 
+# ---------------------------------------------------------------------------
+# Shard topology: kv-head sharding of a paged pool (tensor parallelism)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How one pool's kv_heads axis is partitioned over ``tp`` shards.
+
+    Contiguous head ranges: shard ``s`` owns global kv-heads
+    ``[s*K/tp, (s+1)*K/tp)`` — the same partition ``spec_for``'s
+    ``kv_heads -> model`` rule induces on a mesh, so the transfer plane and
+    the compute plane agree on which shard holds which head by construction.
+    """
+
+    tp: int = 1
+    num_kv_heads: int = 1
+
+    def __post_init__(self):
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.num_kv_heads % self.tp != 0:
+            raise ValueError(
+                f"kv_heads={self.num_kv_heads} not divisible by tp={self.tp}")
+
+    @property
+    def heads_per_shard(self) -> int:
+        return self.num_kv_heads // self.tp
+
+    def head_range(self, shard: int) -> Tuple[int, int]:
+        """Global [lo, hi) kv-head range owned by ``shard``."""
+        lo = shard * self.heads_per_shard
+        return lo, lo + self.heads_per_shard
+
+
+def shard_pairs(src: ShardSpec, dst: ShardSpec
+                ) -> List[Tuple[int, int, int, int]]:
+    """Overlapping ``(src_shard, dst_shard, head_lo, head_hi)`` pairs.
+
+    A cross-degree transfer moves each kv-head from the source shard that
+    holds it to the destination shard that wants it; only pairs whose head
+    ranges INTERSECT exchange any bytes, and each such pair moves exactly
+    its intersection — so for divisible degrees the pair count is
+    ``max(src.tp, dst.tp)`` (``tp_src * tp_dst`` when either side is
+    unsharded), and the per-pair byte counts sum exactly to the unsharded
+    transfer's bytes.
+    """
+    if src.num_kv_heads != dst.num_kv_heads:
+        raise ValueError(
+            f"src/dst pools must cover the same kv-heads; "
+            f"got {src.num_kv_heads} vs {dst.num_kv_heads}")
+    out: List[Tuple[int, int, int, int]] = []
+    for s in range(src.tp):
+        s_lo, s_hi = src.head_range(s)
+        for d in range(dst.tp):
+            d_lo, d_hi = dst.head_range(d)
+            lo, hi = max(s_lo, d_lo), min(s_hi, d_hi)
+            if lo < hi:
+                out.append((s, d, lo, hi))
+    return out
+
+
+def shard_slice_spec(spec: L.KVCacheSpec, shard: ShardSpec) -> L.KVCacheSpec:
+    """The per-shard pool spec: same blocks/layers, only its head slice."""
+    if spec.num_kv_heads != shard.num_kv_heads:
+        raise ValueError(
+            f"spec has {spec.num_kv_heads} kv-heads, shard topology expects "
+            f"{shard.num_kv_heads}")
+    return dataclasses.replace(spec, num_kv_heads=shard.heads_per_shard)
+
+
+def fine_page_rows(coarse_pages: np.ndarray, block_size: int,
+                   local_heads: int, head_lo: int, head_hi: int) -> np.ndarray:
+    """Rows of a shard pool's fine ``(-1, head_dim)`` view covered by a
+    head-range slice of the given coarse pages.
+
+    ``coarse_pages`` are flat page ids under the shard's per-shard spec
+    (``DescriptorTable.page_ids``); each coarse page is ``block_size *
+    local_heads`` fine rows, laid out slot-major then head-minor, so the row
+    for (page p, slot t, local head h) is ``(p*block_size + t)*local_heads
+    + h``. Restricting h to ``[head_lo, head_hi)`` (LOCAL indices) selects
+    exactly one shard-pair's head intersection — the payload one fused
+    ``kv_transfer`` dispatch moves.
+    """
+    t = np.arange(block_size, dtype=np.int64)
+    h = np.arange(head_lo, head_hi, dtype=np.int64)
+    rows = (coarse_pages.astype(np.int64)[:, None, None] * block_size
+            + t[None, :, None]) * local_heads + h[None, None, :]
+    return rows.reshape(-1).astype(np.int32)
+
+
 def default_interpret() -> bool:
     """Pallas interpret mode everywhere except real TPU backends, where the
     kernel compiles to Mosaic (mirrors the donation check in _get_executor)."""
@@ -202,6 +291,12 @@ class TransferPlan:
     # nothing downstream changes unless split_layer_windows() is used.
     layer_lo: int = 0
     layer_hi: Optional[int] = None
+    # Shard topology of each side's pool (None = unsharded). When set, the
+    # plan lowers to one fused dispatch per overlapping (src, dst) shard
+    # pair; split_layer_windows carries the topology into every sub-plan
+    # via dataclasses.replace, so layer-window overlap composes unchanged.
+    src_shard: Optional[ShardSpec] = None
+    dst_shard: Optional[ShardSpec] = None
 
     @functools.cached_property
     def _descriptors(self) -> DescriptorTable:
@@ -226,9 +321,25 @@ class TransferPlan:
         return self.to_descriptors().num_calls(self.schedule)
 
     @property
+    def sharded(self) -> bool:
+        return self.src_shard is not None or self.dst_shard is not None
+
+    def shard_pair_list(self) -> List[Tuple[int, int, int, int]]:
+        """Overlapping shard pairs for this plan (one dispatch each); an
+        unsharded side defaults to ShardSpec(tp=1) over the same heads."""
+        heads = (self.src_shard or self.dst_shard).num_kv_heads
+        return shard_pairs(self.src_shard or ShardSpec(1, heads),
+                           self.dst_shard or ShardSpec(1, heads))
+
+    @property
     def num_dispatches(self) -> int:
-        """Kernel dispatches to execute this plan: 1, or 0 if empty."""
-        return 1 if len(self.to_descriptors()) else 0
+        """Kernel dispatches to execute this plan: 0 if empty; 1 unsharded;
+        one per overlapping (src_shard, dst_shard) pair when sharded."""
+        if not len(self.to_descriptors()):
+            return 0
+        if self.sharded:
+            return len(self.shard_pair_list())
+        return 1
 
     def latency(self, profile: TransportProfile) -> float:
         return profile.latency(self.num_calls, self.total_bytes)
@@ -437,6 +548,89 @@ class TransferEngine:
         return executor(src_cache, dst_cache, src_pages, dst_pages)
 
 
+class ShardedTransferEngine:
+    """Executes plans between two kv-head-sharded pools, possibly of
+    DIFFERENT tensor-parallel degrees (e.g. TP=4 prefill -> TP=2 decode).
+
+    Each side's pool is a list of per-shard arrays (shard ``s`` holds its
+    per-shard spec's FLOWKV pool — same blocks and layers, only its
+    contiguous kv-head slice). A plan lowers to exactly ONE fused
+    ``kv_transfer`` dispatch per overlapping (src_shard, dst_shard) pair:
+    the pair's coarse descriptor pages expand to fine ``(-1, head_dim)``
+    rows restricted to the pair's head intersection — the same flat-page
+    trick the cross-layout engine uses, one granularity finer. head_dim is
+    degree-invariant, so the fine payload matches on both sides for ANY
+    (tp_src, tp_dst) combination; per-pair bytes sum exactly to the
+    unsharded plan's bytes.
+    """
+
+    def __init__(self, src_spec: L.KVCacheSpec, dst_spec: L.KVCacheSpec,
+                 src_shard: ShardSpec, dst_shard: ShardSpec,
+                 *, interpret: Optional[bool] = None):
+        if src_spec.head_dim != dst_spec.head_dim:
+            raise ValueError("src/dst pools must agree on head_dim")
+        if src_spec.block_size != dst_spec.block_size:
+            raise ValueError("src/dst pools must agree on block_size")
+        if src_spec.num_layers != dst_spec.num_layers:
+            raise ValueError("src/dst pools must agree on layer count")
+        if src_spec.num_kv_heads != dst_spec.num_kv_heads:
+            raise ValueError("src/dst pools must cover the same kv-heads")
+        self.src_spec = src_spec
+        self.dst_spec = dst_spec
+        self.src_shard = src_shard
+        self.dst_shard = dst_shard
+        self.interpret = default_interpret() if interpret is None else interpret
+        self.planner = TransferPlanner(src_spec)
+        self.num_dispatches = 0
+
+    def plan(self, schedule: Schedule, src_blocks: Sequence[int],
+             dst_blocks: Sequence[int]) -> TransferPlan:
+        """A full-pool plan stamped with both sides' shard topology."""
+        plan = self.planner.plan(schedule, src_blocks, dst_blocks)
+        return dataclasses.replace(plan, src_shard=self.src_shard,
+                                   dst_shard=self.dst_shard)
+
+    def _pair_rows(self, table: DescriptorTable, pair: Tuple[int, int, int, int]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        s, d, lo, hi = pair
+        src_sspec = shard_slice_spec(self.src_spec, self.src_shard)
+        dst_sspec = shard_slice_spec(self.dst_spec, self.dst_shard)
+        src_rows = fine_page_rows(
+            table.page_ids(src_sspec, "src"), self.src_spec.block_size,
+            src_sspec.num_kv_heads, lo - self.src_shard.head_range(s)[0],
+            hi - self.src_shard.head_range(s)[0])
+        dst_rows = fine_page_rows(
+            table.page_ids(dst_sspec, "dst"), self.dst_spec.block_size,
+            dst_sspec.num_kv_heads, lo - self.dst_shard.head_range(d)[0],
+            hi - self.dst_shard.head_range(d)[0])
+        return src_rows, dst_rows
+
+    def execute(self, plan: TransferPlan, src_pools: Sequence[jax.Array],
+                dst_pools: Sequence[jax.Array]) -> List[jax.Array]:
+        """Apply a plan pairwise; returns the updated per-shard dst pools."""
+        global _TOTAL_DISPATCHES
+        table = plan.to_descriptors()
+        out = list(dst_pools)
+        if len(table) == 0:
+            return out
+        hd = self.src_spec.head_dim
+        src_sspec = shard_slice_spec(self.src_spec, self.src_shard)
+        dst_sspec = shard_slice_spec(self.dst_spec, self.dst_shard)
+        for pair in shard_pairs(self.src_shard, self.dst_shard):
+            s, d, _, _ = pair
+            src_rows, dst_rows = self._pair_rows(table, pair)
+            src_flat = src_pools[s].reshape(-1, hd)
+            dst_flat = out[d].reshape(-1, hd)
+            executor = _get_executor(src_sspec, dst_sspec,
+                                     plan.schedule, self.interpret)
+            self.num_dispatches += 1
+            _TOTAL_DISPATCHES += 1
+            moved = executor(src_flat, dst_flat,
+                             jnp.asarray(src_rows), jnp.asarray(dst_rows))
+            out[d] = moved.reshape(out[d].shape)
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Payload integrity: per-plan checksums over the pages a plan moves
 # ---------------------------------------------------------------------------
@@ -474,6 +668,93 @@ def verify_transfer(plan: TransferPlan, src_spec: L.KVCacheSpec,
     dst_digest = payload_digest(dst_pool, dst_spec,
                                 table.page_ids(dst_spec, "dst"))
     return src_digest == dst_digest
+
+
+def verify_sharded_transfer(plan: TransferPlan, src_spec: L.KVCacheSpec,
+                            src_pools: Sequence[jax.Array],
+                            dst_spec: L.KVCacheSpec,
+                            dst_pools: Sequence[jax.Array]) -> bool:
+    """Shard-aware twin of :func:`verify_transfer`.
+
+    Digests each overlapping (src_shard, dst_shard) pair's fine
+    ``(-1, head_dim)`` rows — exactly the rows the per-pair dispatch moved —
+    and compares src vs dst. The plan must carry shard topology (see
+    ``TransferPlan.src_shard`` / ``dst_shard``); pools are per-shard lists.
+    """
+    import hashlib
+    table = plan.to_descriptors()
+    if len(table) == 0:
+        return True
+    if not plan.sharded:
+        raise ValueError("plan carries no shard topology; use verify_transfer")
+    heads = (plan.src_shard or plan.dst_shard).num_kv_heads
+    src_shard = plan.src_shard or ShardSpec(1, heads)
+    dst_shard = plan.dst_shard or ShardSpec(1, heads)
+    hd = src_spec.head_dim
+
+    def digest(pool, spec, shard, shard_idx, lo, hi, side):
+        sspec = shard_slice_spec(spec, shard)
+        rows = fine_page_rows(table.page_ids(sspec, side), spec.block_size,
+                              sspec.num_kv_heads,
+                              lo - shard.head_range(shard_idx)[0],
+                              hi - shard.head_range(shard_idx)[0])
+        flat = np.asarray(pool).reshape(-1, hd)
+        return hashlib.blake2b(np.ascontiguousarray(flat[rows]).tobytes(),
+                               digest_size=16).digest()
+
+    for s, d, lo, hi in shard_pairs(src_shard, dst_shard):
+        if (digest(src_pools[s], src_spec, src_shard, s, lo, hi, "src")
+                != digest(dst_pools[d], dst_spec, dst_shard, d, lo, hi, "dst")):
+            return False
+    return True
+
+
+def _pools_of(kv) -> List[jax.Array]:
+    """Per-shard pool list of a paged cache port (tp=1 -> one-entry list)."""
+    pools = getattr(kv, "pools", None)
+    return list(pools) if pools is not None else [kv.pool]
+
+
+def pool_transfer_engine(src_kv, dst_kv, *, interpret: Optional[bool] = None):
+    """Build the transfer engine matching two pool ports' shard topology.
+
+    Both-unsharded stays on the classic :class:`TransferEngine` (whole-payload
+    flat pages, one dispatch per plan); any sharded side lowers through
+    :class:`ShardedTransferEngine` (one dispatch per overlapping shard pair).
+    Ports expose ``spec`` and, when sharded, ``tp`` / ``pools``
+    (serving/kv_cache.ShardedKVCache).
+    """
+    s_tp = getattr(src_kv, "tp", 1)
+    d_tp = getattr(dst_kv, "tp", 1)
+    if s_tp == 1 and d_tp == 1:
+        return TransferEngine(src_kv.spec, dst_kv.spec, interpret=interpret)
+    return ShardedTransferEngine(
+        src_kv.spec, dst_kv.spec,
+        ShardSpec(s_tp, src_kv.spec.num_kv_heads),
+        ShardSpec(d_tp, dst_kv.spec.num_kv_heads), interpret=interpret)
+
+
+def land_sharded_plan(engine: "ShardedTransferEngine", plan: TransferPlan,
+                      src_kv, dst_kv) -> None:
+    """Execute a sharded plan between two cache ports, either of which may
+    be unsharded (treated as a 1-shard pool holding every kv head)."""
+    src_pools = _pools_of(src_kv)
+    if hasattr(dst_kv, "shards"):
+        dst_kv.import_plan(engine, plan, src_pools)
+    else:
+        before = engine.num_dispatches
+        new_pools = engine.execute(plan, src_pools, [dst_kv.pool])
+        dst_kv.pool = new_pools[0]
+        dst_kv.num_pool_dispatches += engine.num_dispatches - before
+
+
+def verify_pool_transfer(plan: TransferPlan, src_kv, dst_kv) -> bool:
+    """Integrity check dispatching on the plan's shard topology."""
+    if plan is not None and plan.sharded:
+        return verify_sharded_transfer(plan, src_kv.spec, _pools_of(src_kv),
+                                       dst_kv.spec, _pools_of(dst_kv))
+    return verify_transfer(plan, src_kv.spec, src_kv.pool,
+                           dst_kv.spec, dst_kv.pool)
 
 
 def transfer_request(src_spec: L.KVCacheSpec, src_cache: jax.Array, src_blocks: Sequence[int],
@@ -564,14 +845,33 @@ class PagedBackend(TransferBackend):
 
     def plan(self, req, src, dst) -> TransferJob:
         spec = src.kv.spec
-        return _plan_block_job(
+        job = _plan_block_job(
             self.name, self.schedule, TransferPlanner(spec), spec, req,
             src.kv.bm, lambda r: dst.register_transfer_in(r, r.prompt_len + 1),
             dst.kv.bm)
+        s_tp = getattr(src.kv, "tp", 1)
+        d_tp = getattr(dst.kv, "tp", 1)
+        if s_tp > 1 or d_tp > 1:
+            # stamp shard topology at PLAN time so verification / windowed
+            # splits downstream see the pair structure; num_dispatches
+            # becomes the pair count (one fused dispatch per overlap)
+            job.plan = dataclasses.replace(
+                job.plan,
+                src_shard=ShardSpec(s_tp, src.kv.spec.num_kv_heads),
+                dst_shard=ShardSpec(d_tp, dst.kv.spec.num_kv_heads))
+            job.num_dispatches = job.plan.num_dispatches
+        return job
 
     def execute(self, job: TransferJob, src, dst) -> None:
-        engine = TransferEngine(src.kv.spec, dst.kv.spec)
-        dst.kv.import_plan(engine, job.plan, src.kv.pool)
+        if job.plan is not None and job.plan.sharded:
+            engine = ShardedTransferEngine(
+                src.kv.spec, dst.kv.spec,
+                job.plan.src_shard or ShardSpec(1, src.kv.spec.num_kv_heads),
+                job.plan.dst_shard or ShardSpec(1, dst.kv.spec.num_kv_heads))
+            land_sharded_plan(engine, job.plan, src.kv, dst.kv)
+        else:
+            engine = TransferEngine(src.kv.spec, dst.kv.spec)
+            dst.kv.import_plan(engine, job.plan, src.kv.pool)
         job.num_dispatches = engine.num_dispatches
 
 
@@ -611,10 +911,22 @@ class SimulatedBackend(TransferBackend):
         self.schedule: Schedule = schedule
 
     def plan(self, req, src, dst) -> TransferJob:
-        return _plan_block_job(
+        job = _plan_block_job(
             self.name, self.schedule, src.planner, src.kv_spec, req,
             src.bm, lambda r: dst.bm.register(r.request_id, r.prompt_len + 1),
             dst.bm)
+        s_tp = getattr(src, "tp", 1)
+        d_tp = getattr(dst, "tp", 1)
+        if s_tp > 1 or d_tp > 1:
+            # same plan-time stamping as PagedBackend: the priced dispatch
+            # count becomes the shard-pair count, so simulated tables match
+            # what the sharded executor would dispatch on hardware
+            job.plan = dataclasses.replace(
+                job.plan,
+                src_shard=ShardSpec(s_tp, src.kv_spec.num_kv_heads),
+                dst_shard=ShardSpec(d_tp, dst.kv_spec.num_kv_heads))
+            job.num_dispatches = job.plan.num_dispatches
+        return job
 
     def execute(self, job: TransferJob, src, dst) -> None:
         pass   # data plane is virtual in the simulator

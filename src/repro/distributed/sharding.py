@@ -36,8 +36,38 @@ DEFAULT_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
     "inner": (("model",),),     # mamba2 d_inner channels
     "lru": (("model",),),       # griffin RG-LRU width
     "kv_seq": (("model",),),    # decode-cache length dim (fallback TP target)
+    # "kv_pages" — a paged pool's block/page dim — is EXPLICITLY pinned to
+    # replication: page ids are global names shared by every shard's block
+    # manager and transfer descriptor table, so sharding the page dim would
+    # silently split the address space the descriptor plane indexes into.
+    # A paged pool shards only inside the payload (its kv-head slice; see
+    # serving/kv_cache.ShardedKVCache), never across pages. Declared as an
+    # empty candidate list (not just left out of the dict) so the intent
+    # survives anyone extending the kv_seq fallback chain.
+    "kv_pages": (),
     # replicated: embed, head_dim, seq, layers, groups, conv, state, lru_in
 }
+
+# Canonical logical axes of a FLOWKV paged pool (num_blocks, L, 2, payload).
+# The page dim must use "kv_pages" (never "kv_seq": the decode-cache length
+# fallback would shard page tables when num_blocks happens to divide the
+# model axis — see tests/test_sharding.py::test_paged_pool_never_shards_pages).
+PAGED_POOL_AXES: Tuple[Optional[str], ...] = ("kv_pages", "layers", None, None)
+
+
+class AbstractMesh:
+    """Mesh stand-in for planning shardings without physical devices.
+
+    ``spec_for`` / ``tree_specs`` only consult ``axis_names`` and
+    ``devices.shape``, so parameter-slicing decisions for a tp-degree that
+    exceeds the local device count (the single-controller TP emulation in
+    ``distributed/tp.py``, unit tests on 1-CPU hosts) can reuse the exact
+    production rule walk. Not usable with ``NamedSharding``/``jax.jit``.
+    """
+
+    def __init__(self, **sizes: int):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()), dtype=object)
 
 
 def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:

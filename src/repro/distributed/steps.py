@@ -139,36 +139,11 @@ def make_decode_step(model: Model, mesh: Mesh):
 # ---------------------------------------------------------------------------
 # FlowKV cross-pod KV transfer (the paper-representative collective program)
 # ---------------------------------------------------------------------------
-def make_kv_transfer_step(mesh: Mesh):
-    """Push a prefill pod's KV pages to the decode pod over the "pod" axis.
-
-    The cache pytree is sharded (pod, data, ...) on its batch dim; a
-    ``ppermute`` over "pod" moves pod 0's shard to pod 1 (and 1 -> 0,
-    torus-style) — on hardware this is exactly one DCN transfer per local
-    contiguous block range, which is what FlowKV's aligned segments buy.
-    """
-    if "pod" not in mesh.axis_names:
-        raise ValueError("kv_transfer_step needs the multi-pod mesh")
-    npod = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
-    perm = [(i, (i + 1) % npod) for i in range(npod)]
-
-    def transfer(cache):
-        def shift(x):
-            return jax.lax.ppermute(x, "pod", perm)
-        return jax.tree.map(shift, cache)
-
-    def kv_transfer_step(cache):
-        axis_names = tuple(a for a in mesh.axis_names)
-        fn = jax.shard_map(
-            transfer, mesh=mesh,
-            in_specs=(P("pod"),), out_specs=P("pod"),
-            check_vma=False,
-        )
-        return fn(cache)
-
-    return kv_transfer_step
-
-
+# The old make_kv_transfer_step ring-shift (ppermute over "pod") is gone: the
+# serving data plane moves KV through descriptor-table plans
+# (core/transfer.py — ShardedTransferEngine for mesh-parallel pools), which
+# subsumes the whole-pool shift with per-page addressing. Only the
+# shape/sharding specs below survive for the dry-run compile path.
 def kv_transfer_specs(cfg: ModelConfig, mesh: Mesh, seq: int, batch: int):
     """ShapeDtypeStructs for the transfer program: the paged FlowKV pool.
 

@@ -174,33 +174,59 @@ def _lower_cell(arch: str, shape_name: str, mesh_kind: str, extra_tag: str = "",
 
 
 def _transfer_cell(arch: str):
-    """Lower the FlowKV P->D transfer program on the multi-pod mesh."""
+    """Price the FlowKV P->D transfer through the descriptor-table plane.
+
+    The old ring-shift (``ppermute`` over the "pod" axis) priced a whole-pool
+    collective the executor never runs; the serving data plane moves KV via
+    descriptor-table plans (``core/transfer.py``).  This cell sizes the pool
+    from ``kv_transfer_specs`` (still the shard-layout source of truth) and
+    reports the exact plan the executor would dispatch, including the
+    per-shard-pair fused dispatch counts for mesh-parallel pools.
+    """
     import jax
-    from jax.sharding import NamedSharding
 
     from repro.configs import get_config
+    from repro.core.costmodel import sharded_transfer_calls
+    from repro.core.layout import KVCacheSpec
+    from repro.core.transfer import TransferPlanner
     from repro.distributed import steps as ST
-    from repro.launch import hlo_analysis as HA
     from repro.launch.mesh import make_production_mesh
 
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=True)
     t0 = time.time()
-    with mesh:
-        spec, pspec = ST.kv_transfer_specs(cfg, mesh, seq=32768, batch=128)
-        step = ST.make_kv_transfer_step(mesh)
-        fn = jax.jit(step, in_shardings=(NamedSharding(mesh, pspec),),
-                     out_shardings=NamedSharding(mesh, pspec))
-        lowered = fn.lower(spec)
-        compiled = lowered.compile()
-        coll = HA.collective_bytes(compiled.as_text())
-    return {
+    spec, pspec = ST.kv_transfer_specs(cfg, mesh, seq=32768, batch=128)
+    pool_bytes = int(jax.numpy.dtype(cfg.dtype).itemsize
+                     * __import__("numpy").prod(spec.shape))
+    rec = {
         "arch": arch, "shape": "kv_transfer_32k", "mesh": "multi", "status": "ok",
-        "kind": "transfer", "compile_s": round(time.time() - t0, 2),
-        "collective_bytes": coll,
-        "pool_bytes_global": int(jax.numpy.dtype(cfg.dtype).itemsize
-                                 * __import__("numpy").prod(spec.shape)),
+        "kind": "transfer", "pool_bytes_global": pool_bytes,
     }
+    n_attn = cfg.num_attention_layers()
+    if n_attn > 0:
+        kv_spec = KVCacheSpec(
+            num_layers=n_attn,
+            num_blocks=128 * -(-32768 // cfg.block_size),
+            block_size=cfg.block_size,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            dtype=cfg.dtype,
+        )
+        blocks = list(range(kv_spec.num_blocks))
+        plan = TransferPlanner(kv_spec).plan_flowkv(blocks, blocks)
+        rec["plan"] = {
+            "schedule": "flowkv",
+            "num_calls": plan.num_calls,
+            "total_bytes": plan.total_bytes,
+            "num_blocks": plan.num_blocks,
+            "shard_pair_dispatches": {
+                f"tp{s}->tp{d}": sharded_transfer_calls(s, d)
+                for s, d in ((1, 1), (2, 1), (4, 1), (4, 2))
+                if cfg.num_kv_heads % max(s, d) == 0
+            },
+        }
+    rec["compile_s"] = round(time.time() - t0, 2)
+    return rec
 
 
 def cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> pathlib.Path:

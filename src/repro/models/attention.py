@@ -110,13 +110,15 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array,
 # ---------------------------------------------------------------------------
 # Layer-level entry points
 # ---------------------------------------------------------------------------
-def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
-                   positions: jax.Array, window: int = 0) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """Training/prefill: full-sequence causal (or windowed) self-attention.
+def self_attention_heads(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                         positions: jax.Array, window: int = 0
+                         ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """:func:`self_attention` minus the output projection.
 
-    Returns (output (B,S,D), (k, v)) — k/v returned for cache capture.
-    Long sequences (or any windowed attention) route through the chunked
-    flash path so (S, T) scores never materialize.
+    Returns (heads (B,S,H,hd), (k, v)). Every step is per-kv-head
+    independent, so a tensor-parallel shard can run this on its contiguous
+    head slice of wq/wk/wv and the concatenated shard outputs equal the
+    full-width result exactly (``distributed/tp.py``).
     """
     from repro.models.flash import flash_attention  # local import: avoid cycle
 
@@ -129,6 +131,18 @@ def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     else:
         mask = causal_mask(s, s, 0, window)[None, None, None]
         out = attend(q, k, v, mask)
+    return out, (k, v)
+
+
+def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, window: int = 0) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training/prefill: full-sequence causal (or windowed) self-attention.
+
+    Returns (output (B,S,D), (k, v)) — k/v returned for cache capture.
+    Long sequences (or any windowed attention) route through the chunked
+    flash path so (S, T) scores never materialize.
+    """
+    out, (k, v) = self_attention_heads(p, x, cfg, positions, window)
     return out_project(p, out), (k, v)
 
 
@@ -149,6 +163,19 @@ def suffix_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     """
     from repro.models.flash import flash_attention  # local import: avoid cycle
 
+    out, (k, v) = suffix_attention_heads(p, x, cfg, positions, prefix_k,
+                                         prefix_v, window)
+    return out_project(p, out), (k, v)
+
+
+def suffix_attention_heads(p: Dict[str, jax.Array], x: jax.Array,
+                           cfg: ModelConfig, positions: jax.Array,
+                           prefix_k: jax.Array, prefix_v: jax.Array,
+                           window: int = 0
+                           ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """:func:`suffix_attention` minus the output projection (TP shard body)."""
+    from repro.models.flash import flash_attention  # local import: avoid cycle
+
     q, k, v = qkv_project(p, x, cfg, positions)
     k_full = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
     v_full = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
@@ -161,7 +188,7 @@ def suffix_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     else:
         mask = causal_mask(s, t, offset, window)[None, None, None]
         out = attend(q, k_full, v_full, mask)
-    return out_project(p, out), (k, v)
+    return out, (k, v)
 
 
 def decode_self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
@@ -205,6 +232,22 @@ def decode_paged_self_attention(p: Dict[str, jax.Array], x: jax.Array,
     (out (B, 1, D), (k_new (B, KV, hd), v_new (B, KV, hd))); the caller
     appends the new K/V for the whole layer stack in one fused scatter.
     """
+    out, kv = decode_paged_attention_heads(p, x, cfg, pages, block_tables,
+                                           position, interpret=interpret)
+    return out_project(p, out), kv
+
+
+def decode_paged_attention_heads(p: Dict[str, jax.Array], x: jax.Array,
+                                 cfg: ModelConfig, pages: jax.Array,
+                                 block_tables: jax.Array, position: jax.Array,
+                                 *, interpret: bool = True
+                                 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """:func:`decode_paged_self_attention` minus the output projection.
+
+    The paged read, the online-softmax merge of the in-flight token, and the
+    normalization are all per-kv-head independent, so a TP shard runs this
+    against its own head-sliced page plane (``distributed/tp.py``).
+    """
     from repro.kernels.paged_attention import paged_decode_attention
 
     pos = jnp.broadcast_to(jnp.asarray(position), (x.shape[0],))
@@ -213,10 +256,25 @@ def decode_paged_self_attention(p: Dict[str, jax.Array], x: jax.Array,
     out_old, m_old, l_old = paged_decode_attention(
         q1, pages, block_tables, pos, block_size=cfg.block_size,
         interpret=interpret, return_stats=True)
+    out = merge_inflight_token(q1, k1, v1, out_old, m_old, l_old, x.dtype)
+    return out, (k1, v1)
+
+
+def merge_inflight_token(q1: jax.Array, k1: jax.Array, v1: jax.Array,
+                         out_old: jax.Array, m_old: jax.Array,
+                         l_old: jax.Array, out_dtype) -> jax.Array:
+    """Fold the in-flight token into paged-kernel output as one extra key.
+
+    q1 (B,H,hd), k1/v1 (B,KV,hd); out_old (B,H,hd) + m_old/l_old (B,KV,G)
+    are the kernel's online-softmax state. Exact online-softmax step;
+    returns (B,1,H,hd). The TP emulation calls this ONCE on the full-width
+    concat of per-shard kernel outputs: the einsum lowerings here are not
+    bit-stable across kv-head extents, so merging at per-shard width would
+    drift from the single-device result by an ulp (distributed/tp.py).
+    """
     b, h, hd = q1.shape
     kvh = k1.shape[1]
     g = h // kvh
-    # merge the in-flight token as one extra key (exact online-softmax step)
     qg = q1.reshape(b, kvh, g, hd).astype(jnp.float32)
     s_self = jnp.einsum("bkgd,bkd->bkg", qg, k1.astype(jnp.float32))
     s_self = s_self / jnp.sqrt(jnp.asarray(hd, jnp.float32))
@@ -228,8 +286,7 @@ def decode_paged_self_attention(p: Dict[str, jax.Array], x: jax.Array,
            * (l_old * alpha)[..., None]
            + p_self[..., None] * v1.astype(jnp.float32)[:, :, None, :])
     out = acc / jnp.maximum(l_new, 1e-30)[..., None]
-    out = out.reshape(b, 1, h, hd).astype(x.dtype)
-    return out_project(p, out), (k1, v1)
+    return out.reshape(b, 1, h, hd).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,8 @@ Every gated benchmark (``--json``/``--check`` CLI contract) can also append
 its headline metrics to a schema-versioned history file at the repo root —
 ``BENCH_transfer.json``, ``BENCH_decode.json``, ``BENCH_scenarios.json``,
 ``BENCH_prefix.json``, ``BENCH_breakdown.json``, ``BENCH_chunked.json``,
-``BENCH_tiered.json``, ``BENCH_faults.json`` — via its ``--history``
+``BENCH_tiered.json``, ``BENCH_sharded.json``, ``BENCH_faults.json`` — via
+its ``--history``
 flag. The files are committed, so the repo carries its own perf trajectory:
 each PR's CI run appends one entry, and ``tools/bench_history.py --check``
 fails the build when the newest entry regresses against the committed
@@ -121,6 +122,19 @@ AREAS: Dict[str, Dict[str, MetricSpec]] = {
         "promoted_blocks": MetricSpec("info"),
         "engine_promoted_blocks": MetricSpec("exact"),
         "engine_wall_s": MetricSpec("info"),
+    },
+    "sharded": {
+        # mesh-parallel serving (benchmarks/sharded_transfer.py): shard-pair
+        # dispatch counts are structural (tp_src + tp_dst - gcd per plan),
+        # token identity vs the single-device engine and byte conservation
+        # across cross-degree transfers are exact-by-construction zeros.
+        "dispatches_tp2_to_tp1": MetricSpec("exact"),
+        "dispatches_tp1_to_tp2": MetricSpec("exact"),
+        "dispatches_tp2_to_tp2": MetricSpec("exact"),
+        "token_mismatches": MetricSpec("exact"),
+        "transfer_byte_mismatches": MetricSpec("exact"),
+        "sim_mean_transfer_dispatches": MetricSpec("exact"),
+        "sharded_decode_wall_s": MetricSpec("info"),
     },
     "faults": {
         # chaos A/B (benchmarks/fault_tolerance.py): the failure scenario

@@ -32,15 +32,17 @@ import pathlib
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
-TRACE_SCHEMA_VERSION = 4
+TRACE_SCHEMA_VERSION = 5
 
 # Schema history: v1 had the six lifecycle span kinds; v2 (chunked prefill +
 # layerwise overlap) added the fine-grained ``prefill_chunk`` and
 # ``transfer_layer_window`` kinds; v3 (fault tolerance) added the
 # ``failure`` / ``transfer_retry`` / ``recovery`` kinds; v4 (tiered KV)
-# added ``tier_demote`` / ``tier_promote``. Each bump is additive, so
+# added ``tier_demote`` / ``tier_promote``; v5 (sharded serving) added the
+# mesh-parallel transfer attrs (``src_tp`` / ``dst_tp`` / ``dispatches`` as
+# shard-pair counts) on existing span kinds. Each bump is additive, so
 # older traces still read.
-SUPPORTED_SCHEMAS = (1, 2, 3, 4)
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5)
 
 # The span taxonomy (docs/observability.md). Producers are free to add new
 # names — consumers must treat this as open — but these are the request

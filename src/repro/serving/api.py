@@ -161,6 +161,20 @@ class RequestHandle:
             "recovery_s": self._req.recovery_s,
             "recovery_wall_s": self._req.recovery_wall_s,
         })
+        # mesh-parallel topology of the nodes this request ran on: the TP/EP
+        # degrees explain the transfer dispatch count (one fused dispatch per
+        # overlapping shard pair on a cross-degree P->D hop) and the
+        # shard_dispatches the destination pool landed for this request's
+        # pages. Degrees default to 1 when a node id is unassigned/unknown.
+        engines = self._client.cluster.engines
+        for side, nid in (("prefill", self._req.prefill_node),
+                          ("decode", self._req.decode_node)):
+            eng = engines.get(nid) if nid is not None else None
+            d[f"{side}_tp_degree"] = getattr(eng, "tp_degree", 1)
+            d[f"{side}_ep_degree"] = getattr(eng, "ep_degree", 1)
+        d["shard_dispatches"] = (
+            self._req.transfer_dispatches
+            if d["prefill_tp_degree"] > 1 or d["decode_tp_degree"] > 1 else 0)
         return d
 
 

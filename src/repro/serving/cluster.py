@@ -22,8 +22,9 @@ from repro.core.scheduler.global_controller import (AdmissionDecision,
                                                     AdmissionPolicy,
                                                     GlobalController, ModelCost,
                                                     NodeHandle)
-from repro.core.transfer import (TransferEngine, backend_for_engine,
-                                 verify_transfer)
+from repro.core.transfer import (ShardedTransferEngine, TransferEngine,
+                                 backend_for_engine, land_sharded_plan,
+                                 pool_transfer_engine, verify_pool_transfer)
 from repro.faults import as_injector
 from repro.models.common import ModelConfig
 from repro.serving.engine import NodeEngine
@@ -73,8 +74,14 @@ class PDCluster:
                  faults=None,
                  heartbeat_timeout_cycles: float = 10.0,
                  transfer_max_retries: int = 3,
-                 transfer_backoff_cycles: float = 0.5):
+                 transfer_backoff_cycles: float = 0.5,
+                 tp_degrees: Optional[Dict[int, int]] = None):
         self.cfg = cfg
+        # Per-node mesh-parallel degree ({node_id: tp}, missing ids -> 1):
+        # a heterogeneous fleet runs e.g. TP=4 prefill nodes feeding TP=1
+        # decode nodes; the transfer plane lowers each cross-degree move to
+        # one fused dispatch per overlapping (src_shard, dst_shard) pair.
+        self.tp_degrees = dict(tp_degrees or {})
         self.transfer_schedule = transfer_schedule
         self.target = target
         # Fault plane: an optional repro.faults.FaultInjector (or spec list /
@@ -142,7 +149,8 @@ class PDCluster:
                                 allocator=allocator, max_batch_tokens=max_batch_tokens,
                                 paged_decode=paged_decode,
                                 chunked_prefill=chunked_prefill,
-                                prefill_chunk_tokens=prefill_chunk_tokens)
+                                prefill_chunk_tokens=prefill_chunk_tokens,
+                                tp_degree=self.tp_degrees.get(i, 1))
             engine.tracer = tracer
             self.engines[i] = engine
             host = (hosts or {}).get(i, i)
@@ -153,7 +161,8 @@ class PDCluster:
             reuse = prefix_reuse and engine.supports_prefix_reuse
             self.controller.register_node(NodeHandle(
                 node_id=i, role=role, host_id=host, hardware=hw,
-                scheduler=engine.scheduler, supports_prefix_reuse=reuse))
+                scheduler=engine.scheduler, supports_prefix_reuse=reuse,
+                tp_degree=engine.tp_degree, ep_degree=engine.ep_degree))
             # residency honesty: ANY path that physically frees blocks
             # (transfer done, decode finish, cancel, preemption, teardown)
             # drops the freed blocks' index entries on this node
@@ -162,7 +171,10 @@ class PDCluster:
                  self.controller.prefix_index.invalidate_blocks(nid, blocks))
             if reuse:
                 engine.scheduler.resolve_prefix = self._make_resolver(engine)
-            if reuse and host_tier_blocks > 0 and \
+            # host tier stays tp=1-only: demotion/promotion move whole-payload
+            # pages and would need the per-shard fine-row plumbing to span a
+            # sharded pool — not worth it for a cold-prefix cache
+            if reuse and host_tier_blocks > 0 and engine.tp_degree == 1 and \
                     getattr(engine, "kv", None) is not None:
                 self.tiers[i] = engine.tier = TierManager(
                     i, engine.scheduler.bm, self.controller.prefix_index,
@@ -285,6 +297,7 @@ class PDCluster:
                        "bytes": job.num_bytes, "est_latency_s": latency,
                        "hidden_s": hidden, "windows": windows,
                        "dst_node": dst.node_id,
+                       "src_tp": src.tp_degree, "dst_tp": dst.tp_degree,
                        "retries": req.transfer_retries - retries_before})
         # The prompt's KV now lives on the DECODE node; sending_done below
         # frees the prefill-side blocks (and invalidates their entries), so
@@ -337,8 +350,7 @@ class PDCluster:
                 execute()
                 if corrupting:
                     self._corrupt_dst(dst, plan)
-                ok = verify_transfer(plan, src.kv.spec, src.kv.pool,
-                                     dst.kv.spec, dst.kv.pool) \
+                ok = verify_pool_transfer(plan, src.kv, dst.kv) \
                     if verifiable else True
             if ok:
                 return penalty
@@ -363,11 +375,14 @@ class PDCluster:
         table = plan.to_descriptors()
         if len(table) == 0:
             return
-        spec = dst.kv.spec
+        # sharded pool: flip an element in shard 0's slice (the per-pair
+        # digest covering (src?, dst_shard=0) must catch it)
+        kv = dst.kv.shards[0] if hasattr(dst.kv, "shards") else dst.kv
+        spec = kv.spec
         pid = int(table.page_ids(spec, "dst")[0])
-        pool = dst.kv.pool
+        pool = kv.pool
         flat = pool.reshape(-1, spec.payload)
-        dst.kv.pool = flat.at[pid, 0].add(1.0).reshape(pool.shape)
+        kv.pool = flat.at[pid, 0].add(1.0).reshape(pool.shape)
 
     def _abort_transfer(self, req: Request, src: NodeEngine, dst: NodeEngine,
                         job, reason: str, retries: int) -> None:
@@ -463,7 +478,13 @@ class PDCluster:
         the cost side of overlap, priced honestly; retried dispatches
         count too)."""
         subs = job.plan.split_layer_windows(self.layer_window)
-        engine_t = TransferEngine(src.kv.spec, dst.kv.spec)
+        sharded = job.plan.sharded
+        if sharded:
+            engine_t = ShardedTransferEngine(
+                src.kv.spec, dst.kv.spec, job.plan.src_shard,
+                job.plan.dst_shard)
+        else:
+            engine_t = TransferEngine(src.kv.spec, dst.kv.spec)
         bw = self._bandwidth_factor()
         lats = []
         penalty = 0.0
@@ -476,10 +497,13 @@ class PDCluster:
                 if dst.scheduler.bm.owns(req.request_id):
                     dst.scheduler.bm.free(req.request_id)
                 return "dst_dead", 0.0, 0.0
-            p = self._attempt_unit(
-                req, src, dst,
-                lambda s=sub: dst.kv.import_plan(engine_t, s, src.kv.pool),
-                sub)
+            if sharded:
+                unit = lambda s=sub: land_sharded_plan(engine_t, s,
+                                                       src.kv, dst.kv)
+            else:
+                unit = lambda s=sub: dst.kv.import_plan(engine_t, s,
+                                                        src.kv.pool)
+            p = self._attempt_unit(req, src, dst, unit, sub)
             if p is None:
                 return "exhausted", 0.0, 0.0
             penalty += p
@@ -585,10 +609,15 @@ class PDCluster:
         if not bm.can_allocate(hit):
             return   # destination pool full — retry next cycle
         dst_blocks = bm.allocate(req.request_id, hit)
-        engine_t = TransferEngine(src.kv.spec, engine.kv.spec)
-        plan = engine_t.planner.plan(self.transfer_schedule,
-                                     req.prefix_block_ids, dst_blocks)
-        engine.kv.import_plan(engine_t, plan, src.kv.pool)
+        engine_t = pool_transfer_engine(src.kv, engine.kv)
+        if isinstance(engine_t, ShardedTransferEngine):
+            plan = engine_t.plan(self.transfer_schedule,
+                                 req.prefix_block_ids, dst_blocks)
+            land_sharded_plan(engine_t, plan, src.kv, engine.kv)
+        else:
+            plan = engine_t.planner.plan(self.transfer_schedule,
+                                         req.prefix_block_ids, dst_blocks)
+            engine.kv.import_plan(engine_t, plan, src.kv.pool)
         profile = select_route(
             self.controller.nodes[src_id].host_id ==
             self.controller.nodes[engine.node_id].host_id, self.target)
@@ -828,6 +857,16 @@ class PDCluster:
             "decode_compile_variants": len(set().union(
                 *(e._decode_cache_keys for e in self.engines.values()))),
             "events": len(self.controller.events),
+            # mesh-parallel plane: nodes running sharded (tp>1), the largest
+            # degree in the fleet, and per-shard-pair fused transfer
+            # dispatches landed in sharded pools
+            "sharded_nodes": sum(
+                1 for e in self.engines.values() if e.tp_degree > 1),
+            "max_tp_degree": max(
+                (e.tp_degree for e in self.engines.values()), default=1),
+            "shard_dispatches": sum(
+                getattr(e.kv, "shard_dispatches", 0)
+                for e in self.engines.values() if e.kv is not None),
             # fault plane: injected kills, failed transfer attempts retried,
             # transfers that gave up and recomputed, completed failovers —
             # and the leak audit (must stay 0.0, chaos or not)

@@ -39,9 +39,10 @@ import numpy as np
 
 from repro.core.block_manager import BlockManager
 from repro.core.scheduler.hybrid_scheduler import HybridScheduler, ScheduleDecision
+from repro.distributed import tp as tp_mod
 from repro.models.api import Model, get_model
 from repro.models.common import ModelConfig
-from repro.serving.kv_cache import PagedKVCache, spec_for_model
+from repro.serving.kv_cache import PagedKVCache, ShardedKVCache, spec_for_model
 from repro.serving.request import Request, RequestState
 
 PAGED_FAMILIES = ("dense", "moe", "vlm", "audio")
@@ -68,6 +69,24 @@ def _paged_step_for(model: Model, cfg: ModelConfig):
     return fn
 
 
+# Sharded twin, keyed additionally by tp degree: one jitted step covers all
+# shards (per-shard kernels + full-width merge inside a single artifact).
+_SHARDED_STEP_CACHE: Dict[Tuple[ModelConfig, int, bool], Any] = {}
+
+
+def _sharded_step_for(cfg: ModelConfig, tp_degree: int):
+    donate = jax.default_backend() in ("tpu", "gpu")
+    key = (cfg, tp_degree, donate)
+    fn = _SHARDED_STEP_CACHE.get(key)
+    if fn is None:
+        def step(shards, tok, pools, bt, lens):
+            return tp_mod.sharded_decode_step_paged(
+                shards, cfg, tok, pools, bt, lens)
+        fn = jax.jit(step, donate_argnums=(2,) if donate else ())
+        _SHARDED_STEP_CACHE[key] = fn
+    return fn
+
+
 class NodeEngine:
     """Role-flexible node: serves prefill AND decode from ONE block pool.
 
@@ -83,15 +102,35 @@ class NodeEngine:
                  num_blocks: int = 256, allocator: str = "flowkv",
                  max_batch_tokens: int = 2048, max_model_len: int = 512,
                  paged_decode: str = "auto", chunked_prefill: bool = True,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 tp_degree: int = 1):
         self.node_id = node_id
         self.cfg = cfg
         self.model: Model = get_model(cfg)
         self.params = params
         self.max_model_len = max_model_len
         self.paged = cfg.family in PAGED_FAMILIES
+        # -- mesh parallelism ---------------------------------------------------------
+        # tp_degree > 1 runs the model sharded over a model axis (TP for
+        # attention/MLP, EP for MoE experts) with the pool split into
+        # per-kv-head-slice shard pools; see distributed/tp.py for why the
+        # result is bit-identical to the tp=1 engine.
+        self.tp_degree = tp_degree
+        self.ep_degree = tp_mod.ep_degree(cfg, tp_degree)
+        self.shard_params: Optional[List[Any]] = None
+        if tp_degree > 1:
+            if not self.paged:
+                raise ValueError("tp_degree > 1 requires a paged-KV family, "
+                                 f"got {cfg.family!r}")
+            tp_mod.validate_tp(cfg, tp_degree)
+            self.shard_params = tp_mod.shard_params(params, cfg, tp_degree)
         if self.paged:
-            self.kv = PagedKVCache(spec_for_model(cfg, num_blocks), allocator)
+            if tp_degree > 1:
+                self.kv = ShardedKVCache(spec_for_model(cfg, num_blocks),
+                                         tp_degree, allocator)
+            else:
+                self.kv = PagedKVCache(spec_for_model(cfg, num_blocks),
+                                       allocator)
             bm = self.kv.bm
         else:
             # state path: block manager still gates admission (token budget),
@@ -133,7 +172,9 @@ class NodeEngine:
         self.use_paged_decode = kernel_ok and paged_decode != "dense"
         self._paged_step = None
         if self.use_paged_decode:
-            self._paged_step = _paged_step_for(self.model, cfg)
+            self._paged_step = (_sharded_step_for(cfg, tp_degree)
+                                if tp_degree > 1
+                                else _paged_step_for(self.model, cfg))
         self.decode_steps = 0          # decode cycles executed
         self.decode_dispatches = 0     # device dispatches those cycles issued
         self._decode_cache_keys: Set[Tuple[int, int]] = set()   # jit buckets seen
@@ -212,9 +253,14 @@ class NodeEngine:
                 k_pre, v_pre = self.kv.gather_prefix(req.request_id, offset)
                 tokens = jnp.asarray(
                     [req.prompt_tokens[offset:offset + chunk]], jnp.int32)
-                logits, cache = self.model.prefill_suffix(
-                    self.params, {"tokens": tokens},
-                    k_pre[:, None], v_pre[:, None])
+                if self.tp_degree > 1:
+                    logits, cache = tp_mod.sharded_prefill_suffix(
+                        self.shard_params, self.cfg, tokens,
+                        k_pre[:, None], v_pre[:, None])
+                else:
+                    logits, cache = self.model.prefill_suffix(
+                        self.params, {"tokens": tokens},
+                        k_pre[:, None], v_pre[:, None])
                 self.kv.write_prefill(req.request_id, cache["k"][:, 0],
                                       cache["v"][:, 0], chunk, start=offset)
                 if offset == cached and cached > 0:
@@ -223,7 +269,12 @@ class NodeEngine:
                     self.prefix_tokens_reused += cached
             else:
                 tokens = jnp.asarray([req.prompt_tokens[:chunk]], jnp.int32)
-                logits, cache = self.model.prefill(self.params, {"tokens": tokens})
+                if self.tp_degree > 1:
+                    logits, cache = tp_mod.sharded_prefill(
+                        self.shard_params, self.cfg, tokens)
+                else:
+                    logits, cache = self.model.prefill(self.params,
+                                                       {"tokens": tokens})
                 if self.paged:
                     self.kv.write_prefill(req.request_id, cache["k"][:, 0],
                                           cache["v"][:, 0], chunk)
@@ -333,9 +384,17 @@ class NodeEngine:
         # below is a host read, not a launch). Anyone adding a second device
         # call to this path must bump the increment or the O(1) claim that
         # benchmarks/decode_throughput.py --check enforces becomes a lie.
-        logits, self.kv.pool = self._paged_step(
-            self.params, jnp.asarray(tok_arr), self.kv.pool,
-            jnp.asarray(bt), jnp.asarray(len_arr))
+        if self.tp_degree > 1:
+            logits, new_pools = self._paged_step(
+                self.shard_params, jnp.asarray(tok_arr),
+                tuple(s.pool for s in self.kv.shards),
+                jnp.asarray(bt), jnp.asarray(len_arr))
+            for shard, pool in zip(self.kv.shards, new_pools):
+                shard.pool = pool
+        else:
+            logits, self.kv.pool = self._paged_step(
+                self.params, jnp.asarray(tok_arr), self.kv.pool,
+                jnp.asarray(bt), jnp.asarray(len_arr))
         self.kv.num_pool_dispatches += 1
         self.decode_steps += 1
         self.decode_dispatches += 1

@@ -44,12 +44,20 @@ def spec_for_model(cfg: ModelConfig, num_blocks: int,
 
 
 class PagedKVCache:
-    """One node's paged pool + block manager."""
+    """One node's paged pool + block manager.
 
-    def __init__(self, spec: KVCacheSpec, allocator: str = "flowkv"):
+    ``bm`` shares an existing BlockManager instead of owning one: the
+    sharded cache below keeps ONE control plane (global page ids) over
+    ``tp`` per-shard pools, so every shard's PagedKVCache is built around
+    the same manager.
+    """
+
+    def __init__(self, spec: KVCacheSpec, allocator: str = "flowkv",
+                 bm: Optional[BlockManager] = None):
         self.spec = spec
         self.pool = alloc_cache(spec)
-        self.bm = BlockManager(spec.num_blocks, spec.block_size, allocator)
+        self.bm = bm if bm is not None else BlockManager(
+            spec.num_blocks, spec.block_size, allocator)
         self.num_pool_dispatches = 0     # host-issued device ops on the pool
 
     # -- write path -------------------------------------------------------------
@@ -177,6 +185,125 @@ class PagedKVCache:
         """
         self.pool = engine.execute(plan, src_pool, self.pool)
         self.num_pool_dispatches += 1
+
+    # -- capacity / bookkeeping -----------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        return self.bm.utilization
+
+    def free(self, request_id: int) -> None:
+        self.bm.free(request_id)
+
+    def check_invariants(self) -> None:
+        self.bm.check_invariants()
+
+
+class ShardedKVCache:
+    """``tp`` per-shard pools over ONE block manager (mesh-parallel pool).
+
+    Shard ``s`` holds the FLOWKV pool for its contiguous kv-head slice —
+    same ``(num_blocks, L, 2, ·)`` geometry, payload ``block_size *
+    (num_kv_heads/tp) * head_dim``. Page ids are GLOBAL: one BlockManager
+    allocates for all shards (a request's block i is block i in every
+    shard's pool), which is what lets a cross-degree transfer plan address
+    both sides with one descriptor table (core/transfer.ShardedTransferEngine)
+    and keeps the leak/invariant audit a single-control-plane problem.
+
+    The dense bridge (write/gather) presents FULL-width K/V to callers and
+    slices/concats on the kv-head axis at the boundary, so the engine's
+    prefill, spill and prefix-reuse paths are shard-agnostic.
+
+    ``num_pool_dispatches`` counts host-issued device ops, matching
+    PagedKVCache semantics per ROLE not per shard (one fused decode step is
+    one dispatch from the host even though it touches ``tp`` pools — on a
+    real mesh those are the same launch). ``shard_dispatches`` counts the
+    per-(src_shard, dst_shard)-pair fused transfer dispatches landed here.
+    """
+
+    def __init__(self, spec: KVCacheSpec, tp: int, allocator: str = "flowkv"):
+        from repro.core.transfer import ShardSpec, shard_slice_spec
+
+        self.spec = spec                       # FULL-width spec
+        self.tp = tp
+        self.shard_spec = ShardSpec(tp, spec.num_kv_heads)
+        self.bm = BlockManager(spec.num_blocks, spec.block_size, allocator)
+        self.shards = [
+            PagedKVCache(shard_slice_spec(spec, self.shard_spec), allocator,
+                         bm=self.bm)
+            for _ in range(tp)]
+        self.num_pool_dispatches = 0
+        self.shard_dispatches = 0              # per-shard-pair transfer lands
+
+    @property
+    def pools(self) -> List[jax.Array]:
+        return [s.pool for s in self.shards]
+
+    def _head_slices(self, arr: jax.Array, axis: int) -> List[jax.Array]:
+        width = arr.shape[axis] // self.tp
+        return [jax.lax.slice_in_dim(arr, s * width, (s + 1) * width,
+                                     axis=axis)
+                for s in range(self.tp)]
+
+    # -- write path -------------------------------------------------------------
+    def write_prefill(self, request_id: int, k: jax.Array, v: jax.Array,
+                      length: int, start: int = 0) -> List[int]:
+        """Full-width (L, S, KV, hd) K/V: each shard writes its head slice."""
+        ks, vs = self._head_slices(k, 2), self._head_slices(v, 2)
+        blocks: List[int] = []
+        for shard, k_s, v_s in zip(self.shards, ks, vs):
+            blocks = shard.write_prefill(request_id, k_s, v_s, length,
+                                         start=start)
+        self.num_pool_dispatches += 1
+        return blocks
+
+    def append_token(self, request_id: int, k_new: jax.Array,
+                     v_new: jax.Array, position: int) -> None:
+        for shard, k_s, v_s in zip(self.shards,
+                                   self._head_slices(k_new, 1),
+                                   self._head_slices(v_new, 1)):
+            shard.append_token(request_id, k_s, v_s, position)
+        self.num_pool_dispatches += 1
+
+    def append_tokens(self, request_ids: Sequence[int], k_new: jax.Array,
+                      v_new: jax.Array, positions: Sequence[int]) -> None:
+        for shard, k_s, v_s in zip(self.shards,
+                                   self._head_slices(k_new, 2),
+                                   self._head_slices(v_new, 2)):
+            shard.append_tokens(request_ids, k_s, v_s, positions)
+        self.num_pool_dispatches += 1
+
+    # -- read path ---------------------------------------------------------------
+    def export_block_tables(self, request_ids: Sequence[int]) -> np.ndarray:
+        return self.shards[0].export_block_tables(request_ids)
+
+    def gather_prefix(self, request_id: int, length: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+        nb = self.spec.blocks_for_tokens(length)
+        return self.gather_dense(request_id, length, num_blocks=nb)
+
+    def gather_dense(self, request_id: int, max_len: int,
+                     num_blocks: Optional[int] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+        parts = [s.gather_dense(request_id, max_len, num_blocks=num_blocks)
+                 for s in self.shards]
+        self.num_pool_dispatches += 1
+        return (jnp.concatenate([k for k, _ in parts], axis=2),
+                jnp.concatenate([v for _, v in parts], axis=2))
+
+    # -- transfer path -----------------------------------------------------------
+    def import_plan(self, engine, plan, src_pools: Sequence[jax.Array]) -> None:
+        """Land a sharded transfer plan: one fused dispatch per shard pair.
+
+        ``engine`` is a :class:`~repro.core.transfer.ShardedTransferEngine`;
+        ``src_pools`` are the source node's per-shard pools (any tp degree).
+        """
+        before = engine.num_dispatches
+        new_pools = engine.execute(plan, list(src_pools), self.pools)
+        for shard, pool in zip(self.shards, new_pools):
+            shard.pool = pool
+        landed = engine.num_dispatches - before
+        self.shard_dispatches += landed
+        self.num_pool_dispatches += landed
 
     # -- capacity / bookkeeping -----------------------------------------------------
     @property

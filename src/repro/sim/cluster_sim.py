@@ -105,13 +105,21 @@ class SimNode:
     def __init__(self, node_id: int, role: str, hw: HardwareProfile,
                  spec: SystemSpec, kv_spec: KVCacheSpec, cost: ModelCost,
                  max_batch_tokens: int, chunked_prefill: Optional[bool] = None,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None, tp: int = 1):
         self.node_id = node_id
         self.role = role
         self.hw = hw
         self.spec = spec
         self.kv_spec = kv_spec
         self.cost = cost
+        # mesh-parallel degree of this node: tp chips execute the model
+        # cooperatively, so per-token FLOPs and weight/KV bytes are split
+        # tp-ways across the aggregate fleet FLOPs/bandwidth (the same
+        # aggregate the controller's capability stamping uses). The SAME
+        # attribute name the sharded transfer backend reads (duck-typed
+        # against ShardedKVCache.tp), so cross-degree P->D plans price one
+        # fused dispatch per overlapping shard pair.
+        self.tp = tp
         # chunked_prefill override (None = the system spec's baseline bit);
         # SAME HybridScheduler knobs as the real NodeEngine, so chunk-size
         # semantics cannot drift between sim and engine (parity-tested).
@@ -140,11 +148,13 @@ class SimNode:
 
     # -- cost model ----------------------------------------------------------
     def prefill_duration(self, num_tokens: int) -> float:
-        return self.hw.prefill_time(num_tokens * self.cost.flops_per_token)
+        return self.hw.prefill_time(
+            num_tokens * self.cost.flops_per_token / self.tp)
 
     def decode_duration(self, batch: List[Request]) -> float:
         kv_bytes = sum(self.cost.kv_bytes_per_token * r.total_len for r in batch)
-        return self.hw.decode_time(self.cost.weight_bytes + kv_bytes)
+        return self.hw.decode_time(
+            (self.cost.weight_bytes + kv_bytes) / self.tp)
 
 
 class ClusterSim:
@@ -154,6 +164,7 @@ class ClusterSim:
                  hw_nodes: Optional[Sequence[HardwareProfile]] = None,
                  same_host: bool = True, blocks_per_node: int = 8192,
                  max_batch_tokens: int = 8192, tp: int = 1,
+                 tp_degrees: Optional[Dict[int, int]] = None,
                  routing: Optional[str] = None,
                  role_flip: bool = False,
                  admission: Optional[AdmissionPolicy] = None,
@@ -254,15 +265,25 @@ class ClusterSim:
         # where the real cluster pays the host->HBM copy.
         self.host_tier_blocks = host_tier_blocks
         self.tiers: Dict[int, TierManager] = {}
+        # per-node mesh-parallel degrees (node_id -> tp). The legacy global
+        # ``tp`` knob keeps dividing ModelCost uniformly; ``tp_degrees``
+        # instead scales individual nodes (a TP=4 prefill node runs 4x the
+        # aggregate FLOPs of a TP=1 decode node) and stamps the degree onto
+        # the controller handle, so capability normalization, TTFT estimates
+        # and the shard-pair transfer pricing all see the topology.
+        self.tp_degrees: Dict[int, int] = dict(tp_degrees or {})
         for i, (role, hw) in enumerate(roles):
+            node_tp = self.tp_degrees.get(i, 1)
             node = SimNode(i, role, hw, self.spec, self.kv_spec, cost,
                            max_batch_tokens, chunked_prefill=chunked_prefill,
-                           prefill_chunk_tokens=prefill_chunk_tokens)
+                           prefill_chunk_tokens=prefill_chunk_tokens,
+                           tp=node_tp)
             self.nodes[i] = node
             self.controller.register_node(NodeHandle(
                 node_id=i, role=role, host_id=0 if same_host else i,
                 hardware=hw, scheduler=node.scheduler,
-                supports_prefix_reuse=prefix_reuse))
+                supports_prefix_reuse=prefix_reuse,
+                tp_degree=node_tp))
             # same residency honesty as the real cluster: physical frees
             # drop the freed blocks' index entries
             node.bm.on_free = \
@@ -270,7 +291,9 @@ class ClusterSim:
                  self.controller.prefix_index.invalidate_blocks(nid, blocks))
             if prefix_reuse:
                 node.scheduler.resolve_prefix = self._make_resolver(node)
-                if host_tier_blocks > 0:
+                # host tier mirrors the real cluster's tp==1 restriction:
+                # whole-payload page moves don't span sharded pools
+                if host_tier_blocks > 0 and node_tp == 1:
                     self.tiers[i] = TierManager(
                         i, node.bm, self.controller.prefix_index,
                         self.kv_spec, host_tier_blocks, kv=None,
@@ -842,7 +865,8 @@ class ClusterSim:
                            "dispatches": job.num_dispatches,
                            "bytes": job.num_bytes, "est_latency_s": latency,
                            "hidden_s": hidden, "windows": windows,
-                           "dst_node": dst.node_id})
+                           "dst_node": dst.node_id,
+                           "src_tp": src.tp, "dst_tp": dst.tp})
             # KV now lives on the decode node; the sending_done free below
             # invalidates the prefill-side entry (same as the real cluster)
             self._rehome_prefix(req, dst.node_id, job.dst_blocks)
@@ -917,6 +941,10 @@ class ClusterSim:
                 (sum(self.transfer_hidden) + sum(self.transfer_latencies)) > 0
                 else 0.0),
             "events": len(self.controller.events),
+            # mesh-parallel topology (same keys as PDCluster.stats)
+            "sharded_nodes": sum(1 for n in self.nodes.values() if n.tp > 1),
+            "max_tp_degree": max(
+                (n.tp for n in self.nodes.values()), default=1),
             # tier plane (same keys as PDCluster.stats)
             "tier_demoted_blocks": sum(
                 t.demoted_blocks for t in self.tiers.values()),

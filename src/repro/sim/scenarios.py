@@ -67,6 +67,10 @@ class Scenario:
     # load-bearing instead of idle (tiered KV scenario)
     blocks_per_node: int = 8192
     host_tier_blocks: int = 0
+    # mesh-parallel degrees, one per node index (empty = all TP=1). A TP=k
+    # node runs the model sharded over k chips; cross-degree P->D transfers
+    # price one fused dispatch per overlapping shard pair.
+    tp_degrees: Tuple[int, ...] = ()
 
     def requests(self):
         if self.turns > 1:
@@ -105,6 +109,8 @@ class Scenario:
             heartbeat_timeout=self.heartbeat_timeout,
             blocks_per_node=self.blocks_per_node,
             host_tier_blocks=self.host_tier_blocks,
+            tp_degrees={i: d for i, d in enumerate(self.tp_degrees)
+                        if d > 1} or None,
         )
 
     def run(self, routing: str) -> Dict[str, float]:
@@ -206,6 +212,20 @@ SCENARIOS: Dict[str, Scenario] = {
         num_prefill=2, num_decode=2, rps=1.2, ttft_slo_s=30.0,
         specs=(_HET,), num_requests=120,
         hw_nodes=(A100, L20, A100, H20),
+    ),
+    # Sharded heterogeneous fleet on a 70B-class model: a TP=4 prefill node
+    # (4 chips, 4x aggregate FLOPs) feeds TP=1 decode nodes. Cross-degree
+    # P->D transfers lower to tp_src + tp_dst - gcd = 4 fused dispatches per
+    # request instead of per-shard fan-out; capability stamping scales the
+    # prefill node's score by its degree so routing doesn't starve it.
+    "sharded_heterogeneous": Scenario(
+        name="sharded_heterogeneous",
+        description="TP=4 70B-class prefill node feeding TP=1 decode nodes "
+                    "— per-shard-pair fused transfer + degree-aware scores",
+        num_prefill=1, num_decode=2, rps=0.6, ttft_slo_s=30.0,
+        specs=(_HET,), num_requests=80,
+        model="llama31-70b",
+        tp_degrees=(4, 1, 1),
     ),
 }
 

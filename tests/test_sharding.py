@@ -50,6 +50,26 @@ def test_spec_for_fallback_kv_seq():
     assert spec2 == P(None, "data", "model")
 
 
+def test_paged_pool_never_shards_pages():
+    """A FLOWKV pool's page dim is pinned to replication: page ids are global
+    names shared by every shard's block manager and descriptor table, so the
+    kv_seq fallback must never grab the block dim — even when num_blocks
+    happens to divide the model axis."""
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    # num_blocks=4096 divides model=16: under the kv_seq fallback this dim
+    # WOULD shard — kv_pages pins it replicated
+    spec = SH.spec_for((4096, 32, 2, 16384), SH.PAGED_POOL_AXES, mesh)
+    assert spec == P()
+    # misdeclaring the page dim as kv_seq is exactly the regression guarded
+    # against: it silently splits the page address space
+    bad = SH.spec_for((4096, 32, 2, 16384),
+                      ("kv_seq", "layers", None, None), mesh)
+    assert bad == P("model")
+    # the declared "kv_pages" rule must exist and be an empty candidate list
+    # (intent recorded, not merely absent)
+    assert SH.DEFAULT_RULES["kv_pages"] == ()
+
+
 def test_spec_for_multipod_batch():
     mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
     assert SH.spec_for((256, 4096), ("batch", "seq"), mesh) == P(("pod", "data"))

@@ -147,7 +147,8 @@ def test_overload_scenario_gate_smoke():
 
 def test_scenario_registry_complete():
     assert set(SCENARIOS) == {"normal", "imbalance", "overload",
-                              "heterogeneous", "failure", "multiturn"}
+                              "heterogeneous", "failure", "multiturn",
+                              "sharded_heterogeneous"}
     for name, sc in SCENARIOS.items():
         assert sc.name == name and sc.description
     with pytest.raises(ValueError, match="unknown scenario"):
